@@ -1,0 +1,43 @@
+"""Shared benchmark utilities."""
+from __future__ import annotations
+
+import sys
+import time
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+ROOT = Path(__file__).resolve().parents[1]
+ARTIFACTS = ROOT / "artifacts"
+
+
+def timeit(fn, *args, warmup: int = 1, iters: int = 3):
+    """Median wall time of a jitted callable, in microseconds."""
+    import jax
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    ts.sort()
+    return ts[len(ts) // 2] * 1e6
+
+
+def emit(rows):
+    """Print ``name,us_per_call,derived`` CSV rows."""
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")
+
+
+def tiny_paper_model(name: str = "moe-transformerxl", num_experts: int = 8,
+                     d_model: int = 256, num_layers: int = 6):
+    """Reduced-but-structurally-faithful paper model for CPU runs."""
+    import dataclasses
+    from repro.config import reduced
+    from repro.configs import get_config
+    cfg = get_config(name, num_experts=num_experts)
+    cfg = reduced(cfg, num_layers=num_layers, d_model=d_model,
+                  max_experts=num_experts)
+    return cfg

@@ -1,0 +1,97 @@
+"""Paper Fig. 10 — sensitivity of (a) the migration candidate size q,
+(b) the attention cost model accuracy (Eq. 1, fit on REAL timed attention
+runs), and (c) the fast-similarity thresholds S1/S2 (measured fraction).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit, timeit
+
+
+def _q_sweep():
+    from repro.core import migration as mig
+    r = np.random.default_rng(0)
+    M, n_per = 8, 4
+    n_slots = M * n_per
+    counts = (r.random((n_slots, M)) ** 3)
+    counts = counts / counts.sum(1, keepdims=True) * 200
+    # bimodal lengths: the paper's padding argument — q>1 lets similar
+    # lengths co-locate, q=1 chases traffic only and mixes them
+    lens = r.choice([64, 256], n_slots, p=[0.5, 0.5])
+    rows = []
+    for q in (1, 2, 3, 4):
+        plan = mig.plan_migration_np(counts, lens, n_per, q=q,
+                                     d_model=1024, speed=1e12)
+        # attention cost with the resulting placement
+        att = 0.0
+        for dev in range(M):
+            ls = lens[np.asarray(plan.assign) == dev]
+            if len(ls):
+                att += float(mig.t_att(len(ls), ls.max(), 1024, 1e12))
+        rows.append((f"fig10a/q{q}", 0.0,
+                     f"traffic={float(plan.traffic_after):.0f} "
+                     f"t_att={att*1e3:.2f}ms"))
+    return rows
+
+
+def _cost_model_accuracy(fast: bool):
+    """Time real attention (jit, CPU) over (B, L) grid; fit P; report
+    mean relative error of Eq. 1 — the paper reports ~5%."""
+    import jax
+    import jax.numpy as jnp
+    from repro.core.migration import t_att
+    d, H = 512, 8
+    hd = d // H
+    # matmul-dominated sizes (the Eq. 1 regime; tiny cases are CPU
+    # overhead-bound and the paper's 5% error is a GPU number)
+    cases = [(1, 512), (2, 512), (4, 512), (1, 1024), (2, 1024)]
+    if not fast:
+        cases += [(4, 1024), (1, 2048), (2, 2048)]
+
+    def attn(q, k, v):
+        lg = jnp.einsum("bqhd,bkhd->bhqk", q, k) / np.sqrt(hd)
+        return jnp.einsum("bhqk,bkhd->bqhd", jax.nn.softmax(lg, -1), v)
+
+    times, preds = [], []
+    for B, L in cases:
+        r = np.random.default_rng(0)
+        q = jnp.asarray(r.standard_normal((B, L, H, hd)), jnp.float32)
+        f = jax.jit(attn)
+        us = timeit(f, q, q, q, warmup=2, iters=5)
+        times.append(us)
+        preds.append(float(t_att(B, L, d, 1.0)))   # unnormalized FLOPs
+    times = np.asarray(times)
+    preds = np.asarray(preds)
+    speed = float(np.sum(preds * times) / np.sum(times * times))  # lsq P
+    est = preds / speed
+    err = np.abs(est - times) / times
+    return [("fig10b/cost_model", float(times.mean()),
+             f"mean_rel_err={100*float(err.mean()):.1f}% "
+             f"fit_P={speed:.3g}FLOP/us")]
+
+
+def _s1s2_sweep():
+    import jax.numpy as jnp
+    from repro.core.condensation import fast_similarity
+    r = np.random.default_rng(0)
+    G, d = 128, 64
+    x = jnp.asarray(r.standard_normal((G, d)), jnp.float32)
+    e = jnp.asarray(r.integers(0, 4, G), jnp.int32)
+    s_prev = jnp.asarray(r.random((G, G)), jnp.float32)
+    rows = []
+    for s1, s2 in ((0.9, 0.1), (0.8, 0.2), (0.7, 0.3), (0.6, 0.4)):
+        _, measured = fast_similarity(x, e, s_prev, s1, s2)
+        rows.append((f"fig10c/S1{s1}_S2{s2}", 0.0,
+                     f"measured_frac={float(measured):.3f}"))
+    return rows
+
+
+def run(fast: bool = True):
+    rows = _q_sweep() + _cost_model_accuracy(fast) + _s1s2_sweep()
+    emit(rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

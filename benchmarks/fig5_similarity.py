@@ -1,0 +1,151 @@
+"""Paper Fig. 5 + Fig. 7 — token-similarity statistics measured on THIS
+system: (a) the fraction of same-expert token pairs above the similarity
+threshold per block (deeper blocks more similar); (b) similarity
+preservation through the expert FFN; (c) cross-block persistence (the
+§V-A history rule's justification).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit, tiny_paper_model
+
+
+def _probe_states(steps: int = 12):
+    """Train briefly, then capture per-block pre-MoE hidden states."""
+    import jax
+    import jax.numpy as jnp
+    from repro import optim, train_lib
+    from repro.config import LuffyConfig, OptimConfig, ShapeConfig
+    from repro.core.moe_layer import capacity_for, _rms
+    from repro.core.gating import gate_apply
+    from repro.data import SyntheticLM
+    from repro.dist import single_device
+    from repro.models import blocks as bk
+    from repro.models import transformer as tf
+    from repro.models.model import build_model
+
+    cfg = tiny_paper_model("moe-transformerxl", num_experts=4,
+                           d_model=128, num_layers=6)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    shape = ShapeConfig("b", 128, 8, "train")
+    data = SyntheticLM(cfg, shape)
+    luffy = LuffyConfig(enable_condensation=False, enable_migration=False)
+    ocfg = OptimConfig(total_steps=steps, warmup_steps=2, lr=1e-3)
+    cap = capacity_for(cfg.moe, 8 * 128, cfg.moe.num_experts)
+    dist = single_device()
+    step = jax.jit(train_lib.make_train_step(cfg, luffy, ocfg, dist, cap))
+    ost = optim.init_opt_state(params, ocfg)
+    lst = train_lib.init_luffy_state()
+    for i in range(steps):
+        b = {k: jnp.asarray(v) for k, v in data.batch(i).items()}
+        params, ost, lst, _ = step(params, ost, lst, b)
+
+    # manual layer walk capturing pre-MoE states + routing per block
+    b = {k: jnp.asarray(v) for k, v in data.batch(999).items()}
+    x = tf.embed_tokens(params, cfg, b["tokens"])
+    states, experts, params_by_layer = [], [], []
+    sb = {"labels": b["labels"], "seq_len": b["seq_len"].astype(jnp.int32)}
+    stacked = params["layers"][0]
+    n_groups = cfg.num_layers
+    for g in range(n_groups):
+        p = jax.tree.map(lambda a: a[g], stacked)
+        positions = jnp.broadcast_to(
+            jnp.arange(x.shape[1], dtype=jnp.int32)[None], x.shape[:2])
+        x, _ = tf._token_mixer_full(p, cfg, x, positions, 0, causal=True,
+                                    enc_out=None, enc_pos=None, dist=dist)
+        xf = x.reshape(-1, cfg.d_model)
+        xn = _rms(xf, p["moe"]["norm"]["scale"])
+        gate = gate_apply(p["moe"]["router"], xn, cfg.moe.top_k)
+        states.append(np.asarray(xn))
+        experts.append(np.asarray(gate.expert_idx[:, 0]))
+        params_by_layer.append(p)
+        from repro.core.moe_layer import moe_core
+        y, sb, _, _ = moe_core(p["moe"], x, dict(sb), cfg, luffy,
+                               mode="vanilla", capacity=cap,
+                               axis_name=None, threshold=jnp.float32(1.0))
+        x = y
+    return cfg, states, experts, params_by_layer
+
+
+def _pair_sims(xn, experts, n_pairs=4000, rng=None):
+    rng = rng or np.random.default_rng(0)
+    n = xn.shape[0]
+    i = rng.integers(0, n, n_pairs)
+    j = rng.integers(0, n, n_pairs)
+    same = experts[i] == experts[j]
+    i, j = i[same], j[same]
+    a = xn[i] / np.linalg.norm(xn[i], axis=1, keepdims=True)
+    b = xn[j] / np.linalg.norm(xn[j], axis=1, keepdims=True)
+    return (np.sum(a * b, axis=1) + 1) / 2, i, j
+
+
+def run(fast: bool = True):
+    import jax.numpy as jnp
+    from repro.models import blocks as bk
+    cfg, states, experts, pbl = _probe_states(steps=8 if fast else 30)
+    rows = []
+    fracs = []
+    for blk in (0, len(states) // 2, len(states) - 1):
+        sims, i, j = _pair_sims(states[blk], experts[blk])
+        frac = float(np.mean(sims > 0.75))
+        fracs.append(frac)
+        rows.append((f"fig5a/block{blk}", 0.0,
+                     f"frac_pairs_sim>0.75={frac:.2f} "
+                     f"median={np.median(sims):.2f}"))
+    rows.append(("fig5a/deeper_more_similar", 0.0,
+                 f"{fracs[-1] >= fracs[0] - 0.05}"))
+
+    # Fig 5b: similarity preservation through the expert
+    blk = len(states) - 1
+    sims, i, j = _pair_sims(states[blk], experts[blk])
+    hi = sims > 0.75
+    if hi.sum() >= 10:
+        import jax
+        p = pbl[blk]["moe"]["experts"]
+        xn = states[blk]
+        e = experts[blk]
+        from repro.kernels.ref import expert_ffn_ref
+        # push each selected token through its own expert
+        sel = np.flatnonzero(hi)[:500]
+        ii, jj = i[sel], j[sel]
+        h = jnp.asarray(np.stack([xn[ii], xn[jj]]))   # [2, n, d]
+        out = []
+        for row in range(2):
+            idx = (ii if row == 0 else jj)
+            y = np.zeros((len(idx), cfg.d_model), np.float32)
+            for ex in range(cfg.moe.num_experts):
+                m = e[idx] == ex
+                if m.any():
+                    yy = expert_ffn_ref(
+                        jnp.asarray(xn[idx][m])[None],
+                        p["w_up"][ex][None], p["w_gate"][ex][None],
+                        p["w_down"][ex][None])
+                    y[m] = np.asarray(yy[0])
+            out.append(y)
+        a = out[0] / (np.linalg.norm(out[0], axis=1, keepdims=True) + 1e-9)
+        bb = out[1] / (np.linalg.norm(out[1], axis=1, keepdims=True) + 1e-9)
+        post = (np.sum(a * bb, axis=1) + 1) / 2
+        delta = np.abs(post - sims[sel])
+        rows.append(("fig5b/preservation", 0.0,
+                     f"frac_delta<0.2={float(np.mean(delta < 0.2)):.2f}"))
+
+    # Fig 7: cross-block persistence of similar pairs
+    s0, i0, j0 = _pair_sims(states[-2], experts[-2])
+    pairs_hi = np.flatnonzero(s0 > 0.8)
+    if len(pairs_hi) >= 10:
+        xn1 = states[-1]
+        a = xn1[i0[pairs_hi]]
+        b = xn1[j0[pairs_hi]]
+        a /= np.linalg.norm(a, axis=1, keepdims=True) + 1e-9
+        b /= np.linalg.norm(b, axis=1, keepdims=True) + 1e-9
+        s1 = (np.sum(a * b, axis=1) + 1) / 2
+        rows.append(("fig7/persistence_hi", 0.0,
+                     f"frac_still>0.8={float(np.mean(s1 > 0.8)):.2f}"))
+    emit(rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

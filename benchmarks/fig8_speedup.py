@@ -1,0 +1,53 @@
+"""Paper Fig. 8 + Table III — end-to-end speedup of LUFFY/EXT/HYT over
+Vanilla for every (model × #experts), predicted by the calibrated model
+and validated against the paper's own numbers.
+
+The faithful-reproduction check: with the paper's measured condensation
+rates / locality (Fig. 5-derived), the model must land within tolerance
+of the paper's reported speedups.
+"""
+from __future__ import annotations
+
+from benchmarks.common import emit
+from repro.configs import get_config
+from repro.core import commsim
+
+
+def paper_speedup(model, E, system):
+    vc, vm = commsim.PAPER_VANILLA[model][E]
+    c, m = commsim.PAPER_TABLE3[model][system][E]
+    return (vc + vm) / (c + m)
+
+
+def run(fast: bool = True, measured_rates=None):
+    rows = []
+    errs = []
+    for model in commsim.PAPER_VANILLA:
+        rates = dict(commsim.PAPER_RATES[model])
+        if measured_rates and model in measured_rates:
+            rates = measured_rates[model]
+        for E in (2, 4, 8, 16):
+            cfg = get_config(model, num_experts=E)
+            setup = commsim.PaperSetup(cfg=cfg)
+            vc, vm = commsim.PAPER_VANILLA[model][E]
+            cal = commsim.calibrate(setup, vc, vm)
+            base = commsim.predict(setup, cal, system="vanilla")
+            base_t = base["comp_ms"] + base["comm_ms"]
+            for system in ("luffy", "ext", "hyt"):
+                p = commsim.predict(setup, cal, system=system, **rates)
+                ours = base_t / (p["comp_ms"] + p["comm_ms"])
+                paper = paper_speedup(model, E, system)
+                err = abs(ours - paper) / paper
+                errs.append(err)
+                rows.append((
+                    f"fig8/{model}/E{E}/{system}", 0.0,
+                    f"speedup_model={ours:.2f}x speedup_paper={paper:.2f}x "
+                    f"rel_err={100*err:.0f}%"))
+    mean_err = sum(errs) / len(errs)
+    rows.append(("fig8/mean_rel_err", 0.0, f"{100*mean_err:.1f}%"))
+    emit(rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,169 @@
+"""Assemble EXPERIMENTS.md from the dry-run / perf-variant artifacts.
+
+    PYTHONPATH=src python -m benchmarks.make_experiments
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from benchmarks.common import ARTIFACTS, ROOT
+from benchmarks.roofline import analyze
+
+GiB = 2**30
+MiB = 2**20
+
+
+def load(mesh):
+    recs = {}
+    for f in sorted((ARTIFACTS / "dryrun").glob(f"*__{mesh}.json")):
+        r = json.loads(f.read_text())
+        recs[(r["arch"], r["shape"])] = r
+    return recs
+
+
+def fmt_bytes(b):
+    return f"{b/GiB:.2f}"
+
+
+def dryrun_table(recs16, recs2):
+    shapes = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+    lines = [
+        "| arch | shape | 16×16: status / temp GiB / analytic static GiB "
+        "/ coll GiB | 2×16×16: status / temp GiB / coll GiB |",
+        "|---|---|---|---|",
+    ]
+    for (arch, shape), r in sorted(recs16.items(),
+                                   key=lambda kv: (kv[0][0],
+                                                   shapes.index(kv[0][1]))):
+        r2 = recs2.get((arch, shape), {})
+
+        def cell(rec, with_analytic=False):
+            if not rec:
+                return "—"
+            if rec["status"] == "skipped":
+                return "skipped (full-attn)"
+            if rec["status"] != "ok":
+                return "ERROR"
+            m = rec["memory"]
+            a = rec.get("analytic", {})
+            stat = (a.get("param_bytes_per_device", 0)
+                    + a.get("opt_moment_bytes_per_device", 0)
+                    + a.get("cache_bytes_per_device", 0))
+            coll = sum(v["wire_bytes"] for v in
+                       rec.get("corrected", {}).get("collectives",
+                                                    {}).values())
+            base = (f"ok / {m['temp_bytes']/GiB:.1f}"
+                    + (f" / {stat/GiB:.2f}" if with_analytic else "")
+                    + f" / {coll/GiB:.2f}")
+            return base
+
+        lines.append(f"| {arch} | {shape} | {cell(r, True)} | "
+                     f"{cell(r2)} |")
+    return "\n".join(lines)
+
+
+def roofline_table(recs16):
+    shapes = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+    lines = [
+        "| arch | shape | compute ms | memory ms (lo…hi) | collective ms |"
+        " dominant | MODEL/HLO | next move |",
+        "|---|---|---|---|---|---|---|---|"]
+    doms = {}
+    for (arch, shape), r in sorted(recs16.items(),
+                                   key=lambda kv: (kv[0][0],
+                                                   shapes.index(kv[0][1]))):
+        if r["status"] != "ok":
+            continue
+        a = analyze(r)
+        doms[(arch, shape)] = a
+        lines.append(
+            f"| {arch} | {shape} | {a['t_compute_s']*1e3:.1f} | "
+            f"{a['t_memory_s']*1e3:.1f}…{a['t_memory_hi_s']*1e3:.0f} | "
+            f"{a['t_collective_s']*1e3:.1f} | **{a['dominant']}** | "
+            f"{min(a['useful_ratio'],9.99):.2f} | {a['hint']} |")
+    return "\n".join(lines), doms
+
+
+def perf_records():
+    out = {}
+    pdir = ARTIFACTS / "perf"
+    if pdir.exists():
+        for f in sorted(pdir.glob("*.json")):
+            r = json.loads(f.read_text())
+            out[(r["arch"], r["shape"], r["variant"])] = r
+    return out
+
+
+def perf_metrics(r):
+    a = analyze(r)
+    coll = sum(v["wire_bytes"] for v in
+               r.get("corrected", {}).get("collectives", {}).values())
+    return {
+        "compute_ms": a["t_compute_s"] * 1e3,
+        "mem_lo_ms": a["t_memory_s"] * 1e3,
+        "mem_hi_ms": a["t_memory_hi_s"] * 1e3,
+        "coll_ms": a["t_collective_s"] * 1e3,
+        "wire_GiB": coll / GiB,
+        "flops": r["corrected"]["flops"],
+        "temp_GiB": r["memory"]["temp_bytes"] / GiB,
+        "dominant": a["dominant"],
+    }
+
+
+def main():
+    recs16 = load("16x16")
+    recs2 = load("2x16x16")
+    roof, doms = roofline_table(recs16)
+    perf = perf_records()
+
+    def pm(arch, shape, var):
+        r = perf.get((arch, shape, var))
+        return perf_metrics(r) if r and r.get("status") == "ok" else None
+
+    sections = {
+        "DRYRUN_TABLE": dryrun_table(recs16, recs2),
+        "ROOFLINE_TABLE": roof,
+        "N_OK_16": str(sum(1 for r in recs16.values()
+                           if r["status"] == "ok")),
+        "N_SKIP_16": str(sum(1 for r in recs16.values()
+                             if r["status"] == "skipped")),
+        "N_OK_2": str(sum(1 for r in recs2.values()
+                          if r["status"] == "ok")),
+    }
+    # perf variant metric blobs for the narrative
+    blob = {}
+    for key in set((a, s) for a, s, v in perf):
+        for v in ("band_off", "band_on", "decode2d_off", "decode2d_on",
+                  "noluffy", "bucket0", "bucket1", "bucket2",
+                  "unroll1", "unroll8"):
+            m = pm(key[0], key[1], v)
+            if m:
+                blob[f"{key[0]}|{key[1]}|{v}"] = m
+    (ARTIFACTS / "perf_metrics.json").write_text(
+        json.dumps(blob, indent=1, default=float))
+    tmpl_path = ROOT / "EXPERIMENTS.template.md"
+    if tmpl_path.exists():
+        text = tmpl_path.read_text()
+        for k, v in sections.items():
+            text = text.replace("{{" + k + "}}", v)
+        # inline perf metrics: {{PERF:arch|shape|variant:field}}
+        import re
+
+        def sub(m):
+            key, field = m.group(1), m.group(2)
+            rec = blob.get(key)
+            if not rec:
+                return "n/a"
+            v = rec[field]
+            return f"{v:.2f}" if isinstance(v, float) else str(v)
+
+        text = re.sub(r"\{\{PERF:([^:}]+):(\w+)\}\}", sub, text)
+        (ROOT / "EXPERIMENTS.md").write_text(text)
+        print("EXPERIMENTS.md written")
+    else:
+        print("no template; artifacts/perf_metrics.json written")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,50 @@
+"""Benchmark harness — one module per paper table/figure (+ roofline).
+Prints ``name,us_per_call,derived`` CSV. ``--slow`` runs the longer
+convergence/ablation settings.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+
+MODULES = [
+    "table1_bottleneck",    # paper Table I
+    "table2_models",        # paper Table II (model sizes)
+    "fig5_similarity",      # paper Fig. 5 + Fig. 7
+    "fig8_speedup",         # paper Fig. 8
+    "table3_breakdown",     # paper Table III
+    "fig9_ablation",        # paper Fig. 9
+    "table4_convergence",   # paper Table IV
+    "fig10_sensitivity",    # paper Fig. 10
+    "roofline",             # deliverable (g)
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--slow", action="store_true")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+    fast = not args.slow
+    failures = []
+    for mod_name in MODULES:
+        if args.only and args.only not in mod_name:
+            continue
+        print(f"# --- {mod_name} ---", flush=True)
+        try:
+            mod = __import__(f"benchmarks.{mod_name}", fromlist=["run"])
+            mod.run(fast=fast)
+        except Exception as e:  # keep the harness going
+            traceback.print_exc()
+            failures.append(mod_name)
+            print(f"{mod_name}/FAILED,0.0,{type(e).__name__}")
+    if failures:
+        print(f"# FAILURES: {failures}")
+        sys.exit(1)
+    print("# all benchmarks complete")
+
+
+if __name__ == "__main__":
+    main()

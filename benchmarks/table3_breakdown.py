@@ -1,0 +1,36 @@
+"""Paper Table III — computation/communication breakdown for all four
+systems, predicted by the calibrated model vs the paper's measurements.
+"""
+from __future__ import annotations
+
+from benchmarks.common import emit
+from repro.configs import get_config
+from repro.core import commsim
+
+
+def run(fast: bool = True):
+    rows = []
+    for model in commsim.PAPER_VANILLA:
+        rates = commsim.PAPER_RATES[model]
+        for E in (2, 4, 8, 16):
+            cfg = get_config(model, num_experts=E)
+            setup = commsim.PaperSetup(cfg=cfg)
+            vc, vm = commsim.PAPER_VANILLA[model][E]
+            cal = commsim.calibrate(setup, vc, vm)
+            for system in ("vanilla", "luffy", "ext", "hyt"):
+                p = commsim.predict(setup, cal, system=system, **(
+                    rates if system == "luffy" else {}))
+                if system == "vanilla":
+                    pc, pm = vc, vm
+                else:
+                    pc, pm = commsim.PAPER_TABLE3[model][system][E]
+                rows.append((
+                    f"table3/{model}/E{E}/{system}", 0.0,
+                    f"comp={p['comp_ms']:.0f}ms(paper {pc}) "
+                    f"comm={p['comm_ms']:.0f}ms(paper {pm})"))
+    emit(rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

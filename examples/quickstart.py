@@ -1,0 +1,44 @@
+"""Quickstart: train a tiny MoE with LUFFY (sequence migration + token
+condensation) on CPU, single device — the 60-second tour of the API.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+
+from repro import optim, train_lib
+from repro.config import LuffyConfig, OptimConfig, ShapeConfig, reduced
+from repro.configs import get_config
+from repro.core.moe_layer import capacity_for
+from repro.data import SyntheticLM
+from repro.dist import single_device
+from repro.models.model import build_model
+
+# 1. pick an architecture from the registry and shrink it for CPU
+cfg = reduced(get_config("olmoe-1b-7b"))
+model = build_model(cfg)
+params = model.init(jax.random.PRNGKey(0))
+print(f"{cfg.name}: {sum(x.size for x in jax.tree.leaves(params)):,} params")
+
+# 2. LUFFY config: the paper's two techniques + the adaptive threshold
+luffy = LuffyConfig(enable_condensation=True, enable_migration=True,
+                    condense_group=64)
+
+# 3. data + train step
+shape = ShapeConfig("quickstart", seq_len=128, global_batch=8, mode="train")
+data = SyntheticLM(cfg, shape)
+ocfg = OptimConfig(total_steps=20, warmup_steps=2, lr=1e-3)
+cap = capacity_for(cfg.moe, 8 * 128, cfg.moe.num_experts)
+step = jax.jit(train_lib.make_train_step(cfg, luffy, ocfg,
+                                         single_device(), cap))
+opt_state = optim.init_opt_state(params, ocfg)
+lstate = train_lib.init_luffy_state()
+
+for i in range(10):
+    batch = {k: jnp.asarray(v) for k, v in data.batch(i).items()}
+    params, opt_state, lstate, m = step(params, opt_state, lstate, batch)
+    print(f"step {i}: loss={float(m['loss']):.4f} "
+          f"condense_rate={float(m['condense_rate']):.2f} "
+          f"aux={float(m['aux_loss']):.3f}")
+print("done — loss should be falling and the condensation rate rising as "
+      "the adaptive threshold (Eq. 2) relaxes.")

@@ -1,0 +1,14 @@
+"""Batched serving example: prefill + greedy decode on a small model.
+
+    PYTHONPATH=src python examples/serve_batched.py
+"""
+import subprocess
+import sys
+import os
+
+env = dict(os.environ)
+env.setdefault("PYTHONPATH", "src")
+raise SystemExit(subprocess.call(
+    [sys.executable, "-m", "repro.launch.serve", "--arch", "olmoe-1b-7b",
+     "--reduced", "--batch", "4", "--prompt-len", "16", "--gen", "16"],
+    env=env))

@@ -1,0 +1,84 @@
+"""Sharded pytree checkpointing: tensors to .npz shards + a JSON spec.
+
+Writes one .npz per (up to ``shard_mb``) of leaves plus ``spec.json``
+recording tree structure, dtypes, shapes and the PartitionSpec each leaf
+had, so restore can re-place leaves on a (possibly different) mesh.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Dict, Optional
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+
+def _flatten(tree):
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    paths = [
+        "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in p)
+        for p, _ in jax.tree_util.tree_flatten_with_path(tree)[0]]
+    return leaves, paths, treedef
+
+
+def save(path: str, tree, *, pspecs=None, step: int = 0,
+         shard_mb: int = 512) -> None:
+    os.makedirs(path, exist_ok=True)
+    leaves, names, _ = _flatten(tree)
+    spec: Dict[str, Any] = {"step": step, "leaves": []}
+    shard, shard_bytes, shard_id = {}, 0, 0
+    limit = shard_mb * (1 << 20)
+    pleaves = (jax.tree_util.tree_leaves(
+        pspecs, is_leaf=lambda x: x is None or hasattr(x, "index"))
+        if pspecs is not None else [None] * len(leaves))
+
+    def flush():
+        nonlocal shard, shard_bytes, shard_id
+        if shard:
+            np.savez(os.path.join(path, f"shard_{shard_id}.npz"), **shard)
+            shard, shard_bytes, shard_id = {}, 0, shard_id + 1
+
+    for i, (leaf, name) in enumerate(zip(leaves, names)):
+        arr = np.asarray(jax.device_get(leaf))
+        key = f"t{i}"
+        spec["leaves"].append({
+            "name": name, "key": key, "shard": shard_id,
+            "dtype": str(arr.dtype), "shape": list(arr.shape),
+            "pspec": (str(pleaves[i]) if i < len(pleaves)
+                      and pleaves[i] is not None else None)})
+        shard[key] = arr
+        shard_bytes += arr.nbytes
+        if shard_bytes >= limit:
+            flush()
+    flush()
+    with open(os.path.join(path, "spec.json"), "w") as f:
+        json.dump(spec, f, indent=1)
+
+
+def restore(path: str, like, *, shardings=None):
+    """Restore into the structure of ``like`` (pytree of arrays or
+    ShapeDtypeStructs). ``shardings``: matching pytree of NamedSharding."""
+    with open(os.path.join(path, "spec.json")) as f:
+        spec = json.load(f)
+    shards: Dict[int, Any] = {}
+    leaves, names, treedef = _flatten(like)
+    sleaves = (jax.tree_util.tree_leaves(
+        shardings, is_leaf=lambda x: x is None or hasattr(x, "mesh"))
+        if shardings is not None else [None] * len(leaves))
+    by_name = {e["name"]: e for e in spec["leaves"]}
+    out = []
+    for i, (leaf, name) in enumerate(zip(leaves, names)):
+        e = by_name[name]
+        sid = e["shard"]
+        if sid not in shards:
+            shards[sid] = np.load(os.path.join(path, f"shard_{sid}.npz"))
+        arr = shards[sid][e["key"]]
+        want = jnp.dtype(leaf.dtype)
+        a = jnp.asarray(arr, want)
+        if sleaves[i] is not None:
+            a = jax.device_put(a, sleaves[i])
+        out.append(a)
+    return jax.tree_util.tree_unflatten(treedef, out), spec["step"]

@@ -1,0 +1,341 @@
+"""Configuration system for the LUFFY-JAX framework.
+
+Every architecture in ``repro.configs`` instantiates :class:`ModelConfig`;
+the launcher composes it with :class:`MeshConfig`, :class:`ShapeConfig`
+(the four assigned input shapes) and :class:`LuffyConfig` (the paper's
+technique) into a :class:`RunConfig`.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from dataclasses import dataclass, field
+from typing import Optional, Sequence, Tuple
+
+
+# ---------------------------------------------------------------------------
+# Sub-configs
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class AttnConfig:
+    num_heads: int
+    num_kv_heads: int
+    head_dim: int
+    rope_theta: float = 10_000.0
+    use_rope: bool = True
+    # Sliding-window pattern, cycled over layers. ``None`` entries mean full
+    # (global) attention for that layer; integers are window sizes.
+    # e.g. gemma3's 5:1 local:global = (w, w, w, w, w, None).
+    window_pattern: Tuple[Optional[int], ...] = (None,)
+    # llama4-style: chunked local attention (block-diagonal) instead of
+    # sliding window for the "local" layers.
+    chunked_local: bool = False
+    softmax_scale: Optional[float] = None
+    logit_cap: Optional[float] = None
+
+    @property
+    def q_dim(self) -> int:
+        return self.num_heads * self.head_dim
+
+    @property
+    def kv_dim(self) -> int:
+        return self.num_kv_heads * self.head_dim
+
+    def window_for_layer(self, layer: int) -> Optional[int]:
+        return self.window_pattern[layer % len(self.window_pattern)]
+
+    @property
+    def subquadratic(self) -> bool:
+        """True iff no layer does full quadratic attention."""
+        return all(w is not None for w in self.window_pattern)
+
+
+@dataclass(frozen=True)
+class MoEConfig:
+    num_experts: int
+    top_k: int
+    d_ff: int                      # hidden dim of EACH expert
+    capacity_factor: float = 1.25
+    num_shared_experts: int = 0    # llama4-style always-on shared expert(s)
+    router_aux_coef: float = 0.01  # load-balance loss coefficient
+    router_jitter: float = 0.0
+
+    def capacity(self, tokens_per_device: int, num_devices: int) -> int:
+        """Per-expert buffer capacity (tokens), before condensation."""
+        total = tokens_per_device * num_devices
+        cap = int(math.ceil(self.capacity_factor * total * self.top_k
+                            / self.num_experts / num_devices)) * num_devices
+        return max(cap, num_devices)
+
+
+@dataclass(frozen=True)
+class SSMConfig:
+    """Mamba-style selective SSM (hymba) or RWKV6 token-mix."""
+    kind: str = "mamba"            # "mamba" | "rwkv6"
+    state_dim: int = 16            # N (mamba) — per-channel state size
+    expand: int = 2                # d_inner = expand * d_model (mamba)
+    conv_dim: int = 4              # depthwise conv width (mamba)
+    head_dim: int = 64             # rwkv6 head size
+    dt_rank: int = 0               # 0 => ceil(d_model/16)
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    kind: str                      # "decoder" | "encdec"
+    family: str                    # "dense" | "moe" | "ssm" | "hybrid" | "audio" | "vlm"
+    num_layers: int
+    d_model: int
+    d_ff: int                      # dense-FFN hidden dim (ignored if pure-MoE layers)
+    vocab_size: int
+    attn: Optional[AttnConfig] = None
+    moe: Optional[MoEConfig] = None
+    ssm: Optional[SSMConfig] = None
+    # hybrid (hymba): run attention and SSM branches in parallel and mean-fuse.
+    parallel_ssm: bool = False
+    # layer_ffn_pattern: cycled; each entry "dense" or "moe".
+    layer_ffn_pattern: Tuple[str, ...] = ("dense",)
+    norm: str = "rms"              # "rms" | "ln"
+    act: str = "silu"              # "silu" | "gelu"
+    gated_mlp: bool = True
+    causal: bool = True            # False for encoder-style (MoE-BERT)
+    tie_embeddings: bool = False
+    # enc-dec extras
+    num_encoder_layers: int = 0
+    # modality frontend stub: number of prefix embedding slots fed by the
+    # (stubbed) vision/audio encoder, and their feature dim.
+    prefix_slots: int = 0
+    prefix_dim: int = 0
+    # numerics
+    param_dtype: str = "float32"
+    compute_dtype: str = "bfloat16"
+    remat: bool = True
+    citation: str = ""
+
+    # -- derived -----------------------------------------------------------
+    def ffn_kind(self, layer: int) -> str:
+        return self.layer_ffn_pattern[layer % len(self.layer_ffn_pattern)]
+
+    @property
+    def uses_moe(self) -> bool:
+        return self.moe is not None and "moe" in self.layer_ffn_pattern
+
+    @property
+    def uses_attention(self) -> bool:
+        return self.attn is not None
+
+    @property
+    def supports_long_decode(self) -> bool:
+        """May run long_500k: SSM/hybrid archs, or attention archs whose
+        layers are majority sliding-window/chunked (gemma3 5:1, llama4
+        3:1, starcoder2 4k-window). Pure full-attention archs skip it
+        (see DESIGN.md §Arch-applicability)."""
+        if self.kind == "encdec":
+            return False
+        if self.ssm is not None and self.attn is None:
+            return True            # pure SSM
+        if self.parallel_ssm:
+            return self.attn.subquadratic
+        wp = self.attn.window_pattern
+        windowed = sum(1 for w in wp if w is not None)
+        return windowed * 2 >= len(wp) and windowed > 0 \
+            or self.attn.subquadratic
+
+    def param_count(self) -> int:
+        """Analytic parameter count (used for roofline MODEL_FLOPS)."""
+        d = self.d_model
+        n = 0
+        n += self.vocab_size * d                      # embed
+        if not self.tie_embeddings:
+            n += self.vocab_size * d                  # unembed
+        layers = []
+        if self.kind == "encdec":
+            layers += [("enc", i) for i in range(self.num_encoder_layers)]
+            layers += [("dec", i) for i in range(self.num_layers)]
+        else:
+            layers += [("dec", i) for i in range(self.num_layers)]
+        for which, i in layers:
+            if self.attn is not None:
+                a = self.attn
+                n += d * a.q_dim + 2 * d * a.kv_dim + a.q_dim * d
+                if which == "dec" and self.kind == "encdec":
+                    n += d * a.q_dim + 2 * d * a.kv_dim + a.q_dim * d  # cross-attn
+            if self.ssm is not None and (self.parallel_ssm or self.attn is None):
+                s = self.ssm
+                if s.kind == "mamba":
+                    di = s.expand * d
+                    n += 2 * d * di + di * d + di * (2 * s.state_dim) + di
+                else:  # rwkv6
+                    n += 6 * d * d
+            kind = self.ffn_kind(i)
+            mult = 3 if self.gated_mlp else 2
+            if kind == "moe" and self.moe is not None:
+                n += self.moe.num_experts * mult * d * self.moe.d_ff
+                n += d * self.moe.num_experts          # router
+                n += self.moe.num_shared_experts * mult * d * self.moe.d_ff
+            else:
+                n += mult * d * self.d_ff
+            n += 2 * d                                  # norms
+        return n
+
+    def active_param_count(self) -> int:
+        """Params touched per token (MoE: only top_k + shared experts)."""
+        if not self.uses_moe:
+            return self.param_count()
+        m = self.moe
+        full = self.param_count()
+        mult = 3 if self.gated_mlp else 2
+        per_expert = mult * self.d_model * m.d_ff
+        n_moe_layers = sum(
+            1 for i in range(self.num_layers) if self.ffn_kind(i) == "moe")
+        inactive = n_moe_layers * (m.num_experts - m.top_k) * per_expert
+        return full - inactive
+
+
+# ---------------------------------------------------------------------------
+# Input shapes (assigned)
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    mode: str                      # "train" | "prefill" | "decode"
+
+
+SHAPES = {
+    "train_4k":    ShapeConfig("train_4k",    4_096,   256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32_768,  32,  "prefill"),
+    "decode_32k":  ShapeConfig("decode_32k",  32_768,  128, "decode"),
+    "long_500k":   ShapeConfig("long_500k",   524_288, 1,   "decode"),
+}
+
+
+# ---------------------------------------------------------------------------
+# LUFFY technique config
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class LuffyConfig:
+    """The paper's two techniques (§IV, §V)."""
+    enable_condensation: bool = True
+    enable_migration: bool = True
+    # §V-A fast similarity measurement thresholds: previous-block
+    # similarity > S1 => similar (skip calc), < S2 => dissimilar (skip).
+    s1: float = 0.8
+    s2: float = 0.2
+    # §V-B adaptive threshold; if adaptive=False use static_threshold.
+    adaptive_threshold: bool = True
+    static_threshold: float = 0.5
+    # TPU adaptation: condensation-rate buckets. The adaptive threshold
+    # picks a bucket each iteration; each bucket is a separately compiled
+    # executable with capacity C' = ceil(C * (1 - rate)).
+    rate_buckets: Tuple[float, ...] = (0.0, 0.25, 0.5)
+    # §IV-A: top-q candidate devices per sequence.
+    q: int = 3
+    # Attention cost model speed term P (FLOP/s), profiled.
+    gpu_speed: float = 1.0e13
+    # TPU adaptation knobs: condensation group size (blocked similarity
+    # tile; see DESIGN.md §3) and combine-buffer slack under migration.
+    condense_group: int = 128
+    combine_slack: float = 1.0
+    # use the Pallas kernels for similarity / expert FFN
+    use_kernels: bool = False
+
+
+# ---------------------------------------------------------------------------
+# Mesh / run configs
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class MeshConfig:
+    shape: Tuple[int, ...] = (16, 16)
+    axes: Tuple[str, ...] = ("data", "model")
+
+    @property
+    def num_devices(self) -> int:
+        out = 1
+        for s in self.shape:
+            out *= s
+        return out
+
+    @property
+    def batch_axes(self) -> Tuple[str, ...]:
+        return tuple(a for a in self.axes if a in ("pod", "data"))
+
+    @property
+    def model_axis(self) -> str:
+        return "model"
+
+
+@dataclass(frozen=True)
+class OptimConfig:
+    name: str = "adamw"
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    # ZeRO-1: shard optimizer moments over the data axis.
+    zero1: bool = True
+
+
+@dataclass(frozen=True)
+class RunConfig:
+    model: ModelConfig
+    shape: ShapeConfig
+    mesh: MeshConfig = MeshConfig()
+    luffy: LuffyConfig = LuffyConfig()
+    optim: OptimConfig = OptimConfig()
+    seed: int = 0
+
+    def replace(self, **kw) -> "RunConfig":
+        return dataclasses.replace(self, **kw)
+
+
+def reduced(model: ModelConfig, *, num_layers: int = 2, d_model: int = 256,
+            max_experts: int = 4, seq_len_hint: int = 128) -> ModelConfig:
+    """Smoke-test variant of the same family: <=2 layers, d_model<=512,
+    <=4 experts, tiny vocab. Keeps the family/layer pattern intact."""
+    d_model = min(d_model, 512)
+    attn = model.attn
+    if attn is not None:
+        heads = max(2, min(4, attn.num_heads))
+        kv = max(1, min(heads, attn.num_kv_heads))
+        head_dim = max(8, d_model // heads)
+        win = tuple((None if w is None else min(w, seq_len_hint // 2))
+                    for w in attn.window_pattern)
+        attn = dataclasses.replace(
+            attn, num_heads=heads, num_kv_heads=kv, head_dim=head_dim,
+            window_pattern=win)
+    moe = model.moe
+    if moe is not None:
+        experts = min(max_experts, moe.num_experts)
+        moe = dataclasses.replace(
+            moe, num_experts=experts, top_k=min(moe.top_k, experts),
+            d_ff=min(moe.d_ff, 2 * d_model),
+            num_shared_experts=min(moe.num_shared_experts, 1))
+    ssm = model.ssm
+    # keep at least one full pattern period (gemma3's 5:1, llama4's 3:1)
+    period = math.lcm(len(attn.window_pattern) if attn else 1,
+                      len(model.layer_ffn_pattern))
+    num_layers = max(num_layers, period)
+    return dataclasses.replace(
+        model,
+        name=model.name + "-smoke",
+        num_layers=num_layers,
+        num_encoder_layers=min(model.num_encoder_layers, num_layers)
+        if model.num_encoder_layers else 0,
+        d_model=d_model,
+        d_ff=min(model.d_ff, 2 * d_model),
+        vocab_size=min(model.vocab_size, 1024),
+        attn=attn, moe=moe, ssm=ssm,
+        prefix_slots=min(model.prefix_slots, 8),
+        prefix_dim=min(model.prefix_dim, d_model) if model.prefix_dim else 0,
+        remat=False,
+    )

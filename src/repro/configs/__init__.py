@@ -1,0 +1,54 @@
+"""Architecture registry. Each module defines ``config()`` (and possibly
+variants). Every entry cites its source in the ModelConfig.citation."""
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List
+
+from repro.config import ModelConfig
+
+ARCHS: List[str] = [
+    "hymba_1p5b",
+    "gemma3_12b",
+    "rwkv6_3b",
+    "seamless_m4t_large_v2",
+    "llama4_maverick_400b_a17b",
+    "yi_34b",
+    "stablelm_12b",
+    "starcoder2_15b",
+    "internvl2_2b",
+    "olmoe_1b_7b",
+    # the paper's own models (LUFFY evaluation, Table II)
+    "moe_transformerxl",
+    "moe_bert_large",
+    "moe_gpt2",
+]
+
+ALIASES = {
+    "hymba-1.5b": "hymba_1p5b",
+    "gemma3-12b": "gemma3_12b",
+    "rwkv6-3b": "rwkv6_3b",
+    "seamless-m4t-large-v2": "seamless_m4t_large_v2",
+    "llama4-maverick-400b-a17b": "llama4_maverick_400b_a17b",
+    "yi-34b": "yi_34b",
+    "stablelm-12b": "stablelm_12b",
+    "starcoder2-15b": "starcoder2_15b",
+    "internvl2-2b": "internvl2_2b",
+    "olmoe-1b-7b": "olmoe_1b_7b",
+    "moe-transformerxl": "moe_transformerxl",
+    "moe-bert-large": "moe_bert_large",
+    "moe-gpt2": "moe_gpt2",
+}
+
+ASSIGNED = ARCHS[:10]
+
+
+def get_config(name: str, **overrides) -> ModelConfig:
+    mod_name = ALIASES.get(name, name).replace("-", "_").replace(".", "p")
+    mod = importlib.import_module(f"repro.configs.{mod_name}")
+    cfg = mod.config(**overrides)
+    return cfg
+
+
+def all_configs() -> Dict[str, ModelConfig]:
+    return {a: get_config(a) for a in ARCHS}

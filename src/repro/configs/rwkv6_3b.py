@@ -1,0 +1,17 @@
+"""rwkv6-3b [ssm] — Finch, attention-free, data-dependent decay.
+[arXiv:2404.05892]. 32L d_model=2560 d_ff=8960 vocab=65536 (head 64)."""
+from repro.config import ModelConfig, SSMConfig
+
+
+def config(**kw) -> ModelConfig:
+    base = dict(
+        name="rwkv6-3b", kind="decoder", family="ssm",
+        num_layers=32, d_model=2560, d_ff=8960, vocab_size=65536,
+        attn=None,
+        ssm=SSMConfig(kind="rwkv6", head_dim=64),
+        layer_ffn_pattern=("dense",),
+        norm="ln", gated_mlp=False,
+        citation="arXiv:2404.05892",
+    )
+    base.update(kw)
+    return ModelConfig(**base)

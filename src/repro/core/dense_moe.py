@@ -1,0 +1,55 @@
+"""Single-device reference MoE (oracle for tests).
+
+Computes the exact mathematical semantics of the expert-parallel layer —
+``y_t = x_t + Σ_k g_k · FFN_{e_k}(norm(x_t))`` (+shared experts) — with
+no capacity limit, no dispatch buffers, no collectives. The shard_map
+implementation in ``moe_layer.py`` must match this bitwise-closely when
+capacity is ample and LUFFY is off; with condensation on, the oracle
+applies the paper's replacement semantics directly.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import LuffyConfig, ModelConfig
+from repro.core import condensation as cond
+from repro.core.gating import gate_apply
+from repro.core.moe_layer import _rms
+from repro.models import blocks as bk
+
+
+def dense_moe_reference(params, x, cfg: ModelConfig, *,
+                        rep_idx=None):
+    """x: [T, d] tokens. Returns (y [T,d], aux_loss).
+
+    If rep_idx is given (condensation), output rows are replaced by their
+    representative's output (token_to_token semantics, paper §VI)."""
+    m = cfg.moe
+    cdt = bk._dtype(cfg.compute_dtype)
+    act = bk._act(cfg.act)
+    xn = _rms(x.reshape(-1, cfg.d_model), params["norm"]["scale"]).astype(cdt)
+    gate = gate_apply(params["router"], xn, m.top_k)
+    ew = params["experts"]
+
+    def per_expert(e):
+        up = xn @ ew["w_up"][e].astype(cdt)
+        gt = xn @ ew["w_gate"][e].astype(cdt)
+        return (act(gt) * up) @ ew["w_down"][e].astype(cdt)   # [T, d]
+
+    all_out = jnp.stack([per_expert(e) for e in range(m.num_experts)])
+    picked = all_out[gate.expert_idx.T, jnp.arange(x.shape[0])[None]]  # [k,T,d]
+    delta = jnp.sum(picked * gate.gate_weights.T[..., None].astype(cdt),
+                    axis=0)
+    y = x + delta.astype(x.dtype)
+    if rep_idx is not None:
+        y = cond.uncondense(y, rep_idx)
+    if "shared" in params:
+        sh = params["shared"]
+        # each token's shared-expert path uses its OWN x (vanilla semantics
+        # in moe_core: shared output is added after un-condensation)
+        xn2 = _rms(x, params["norm"]["scale"]).astype(cdt)
+        up = xn2 @ sh["w_up"].astype(cdt)
+        gt = xn2 @ sh["w_gate"].astype(cdt)
+        y = y + ((act(gt) * up) @ sh["w_down"].astype(cdt)).astype(y.dtype)
+    return y, gate.aux_loss

@@ -1,0 +1,71 @@
+"""Top-k gating for expert-parallel MoE (GShard-style, capacity-bounded).
+
+The gate runs per device on the local token slice. Outputs feed the
+dispatch logic in :mod:`repro.core.moe_layer`; the load-balance auxiliary
+loss follows Switch/GShard.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class GateOutput(NamedTuple):
+    expert_idx: jnp.ndarray   # [T, k] int32 — chosen experts per token
+    gate_weights: jnp.ndarray  # [T, k] f32 — combine weights (softmaxed)
+    aux_loss: jnp.ndarray     # [] f32 — load-balance loss
+    router_probs: jnp.ndarray  # [T, E] f32 — full softmax (for stats)
+
+
+def gate_init(key, d_model: int, num_experts: int, dtype=jnp.float32):
+    return {"w_gate": (jax.random.normal(key, (d_model, num_experts))
+                       * (1.0 / jnp.sqrt(d_model))).astype(dtype)}
+
+
+def gate_apply(params, x, top_k: int, *, jitter: float = 0.0,
+               rng=None) -> GateOutput:
+    """x: [T, d] (normed token embeddings). Returns routing decisions."""
+    logits = x.astype(jnp.float32) @ params["w_gate"].astype(jnp.float32)
+    if jitter > 0.0 and rng is not None:
+        logits += jax.random.uniform(rng, logits.shape, minval=-jitter,
+                                     maxval=jitter)
+    probs = jax.nn.softmax(logits, axis=-1)                       # [T,E]
+    gate_vals, expert_idx = jax.lax.top_k(probs, top_k)           # [T,k]
+    # renormalize the selected gates (standard top-k MoE)
+    gate_weights = gate_vals / jnp.maximum(
+        jnp.sum(gate_vals, axis=-1, keepdims=True), 1e-9)
+    # Switch-style load balance: E * sum_e f_e * p_e
+    num_experts = probs.shape[-1]
+    top1 = expert_idx[:, 0]
+    f = jnp.mean(jax.nn.one_hot(top1, num_experts, dtype=jnp.float32), axis=0)
+    p = jnp.mean(probs, axis=0)
+    aux = num_experts * jnp.sum(f * p)
+    return GateOutput(expert_idx.astype(jnp.int32), gate_weights, aux, probs)
+
+
+def dispatch_positions(expert_idx, keep_mask, num_experts: int):
+    """Per-(token,k) position within its expert's buffer.
+
+    expert_idx: [T,k]; keep_mask: [T,k] bool (False = condensed/invalid —
+    takes no buffer slot). Returns positions [T,k] int32 (position among
+    kept rows of the same expert, in (k-major, token-minor) priority order
+    so primary copies pack first and survive capacity drops longest).
+    """
+    T, k = expert_idx.shape
+    # priority order: all k=0 rows first (they carry the residual), then k=1…
+    flat_e = expert_idx.T.reshape(-1)                 # [k*T] k-major
+    flat_keep = keep_mask.T.reshape(-1)
+    onehot = jax.nn.one_hot(flat_e, num_experts, dtype=jnp.int32)
+    onehot = onehot * flat_keep[:, None].astype(jnp.int32)
+    pos_flat = jnp.cumsum(onehot, axis=0) - onehot    # position among same-e
+    pos_flat = jnp.take_along_axis(pos_flat, flat_e[:, None], axis=1)[:, 0]
+    return pos_flat.reshape(k, T).T.astype(jnp.int32)  # [T,k]
+
+
+def expert_load(expert_idx, keep_mask, num_experts: int):
+    """Tokens per expert (kept rows only). [E] int32."""
+    onehot = jax.nn.one_hot(expert_idx, num_experts, dtype=jnp.int32)
+    onehot = onehot * keep_mask[..., None].astype(jnp.int32)
+    return jnp.sum(onehot, axis=(0, 1))

@@ -1,0 +1,174 @@
+"""Sequence migration (paper §IV): Algorithm 1 + the attention cost model.
+
+The migration plan is a **bijection on global sequence slots**: slot
+``i`` (one sequence) is re-homed to device ``assign[i]`` with a dest-local
+slot number. The plan is executed inside the MoE combine all-to-all by
+relabeling chunk destinations (see ``moe_layer.py`` and DESIGN.md §3) —
+the collective's operand size is unchanged; what changes is how much of
+it lands on the diagonal (stays off the network).
+
+Two implementations, kept in lock-step by a property test:
+  * :func:`plan_migration_np` — paper-faithful host-side Algorithm 1;
+  * :func:`plan_migration_jax` — traceable device-side version used
+    inside the compiled train step (the "controller" of §VI becomes a
+    replicated on-device computation — no host round-trip).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# Cost model (paper Eq. 1)
+# ---------------------------------------------------------------------------
+
+def t_att(B, L, d: int, speed: float):
+    """Attention cost model: (3BLd^2 + 2BL^2d) / P   [seconds]."""
+    B = jnp.asarray(B, jnp.float32) if not isinstance(B, (int, float)) else B
+    return (3.0 * B * L * d * d + 2.0 * B * L * L * d) / speed
+
+
+class MigrationPlan(NamedTuple):
+    assign: jnp.ndarray       # [n_slots] int32 — dest device per global slot
+    dest_slot: jnp.ndarray    # [n_slots] int32 — slot index on dest device
+    perm: jnp.ndarray         # [n_slots] int32 — new_global = perm[old_global]
+    traffic_before: jnp.ndarray  # [] f32 — combine rows crossing devices, no migration
+    traffic_after: jnp.ndarray   # [] f32 — with migration
+
+
+def _finalize_plan(assign, counts, n_per_dev):
+    """Common: dest-local slot numbers + traffic ledger; falls back to the
+    identity placement when the greedy plan would move MORE bytes than no
+    migration at all (possible under adversarial capacity pressure — the
+    identity is always feasible, so never do worse). numpy/jnp agnostic."""
+    xp = jnp if isinstance(assign, jnp.ndarray) else np
+    n_slots, M = counts.shape
+    home = (xp.arange(n_slots) // n_per_dev).astype(assign.dtype)
+    total = counts.sum(axis=1)
+    traffic_before = (total - counts[xp.arange(n_slots), home]).sum()
+    traffic_after = (total - counts[xp.arange(n_slots), assign]).sum()
+    if isinstance(assign, jnp.ndarray):
+        worse = traffic_after > traffic_before
+        assign = xp.where(worse, home, assign)
+        traffic_after = xp.where(worse, traffic_before, traffic_after)
+    elif float(traffic_after) > float(traffic_before):
+        assign = home
+        traffic_after = traffic_before
+    # dest-local slot = rank among slots with same dest (stable by index)
+    onehot = (assign[:, None] == xp.arange(M)[None, :]).astype(xp.int32)
+    rank = onehot.cumsum(axis=0) - onehot
+    dest_slot = rank[xp.arange(n_slots), assign]
+    perm = assign * n_per_dev + dest_slot
+    return (assign.astype(xp.int32), dest_slot.astype(xp.int32),
+            perm.astype(xp.int32),
+            traffic_before.astype(xp.float32),
+            traffic_after.astype(xp.float32))
+
+
+# ---------------------------------------------------------------------------
+# Paper-faithful numpy Algorithm 1
+# ---------------------------------------------------------------------------
+
+def plan_migration_np(counts: np.ndarray, seq_lens: np.ndarray,
+                      n_per_dev: int, *, q: int = 3, d_model: int = 1024,
+                      speed: float = 1e13) -> MigrationPlan:
+    """counts: [n_slots, M] tokens (expert copies) of slot i hosted on
+    device j; seq_lens: [n_slots] true lengths. Every device ends with
+    exactly ``n_per_dev`` slots (the SPMD capacity constraint)."""
+    counts = np.asarray(counts)
+    seq_lens = np.asarray(seq_lens)
+    n_slots, M = counts.shape
+    cap = np.full(M, n_per_dev, np.int64)
+    dev_B = np.zeros(M, np.int64)        # sequences placed per device
+    dev_L = np.zeros(M, np.int64)        # max length placed per device
+    assign = np.full(n_slots, -1, np.int64)
+    # migrate longer sequences first (they dominate T_att)
+    order = np.argsort(-seq_lens, kind="stable")
+    for i in order:
+        # step 1: traffic f_{i,j} if homed at j
+        f = counts[i].sum() - counts[i]
+        cand = [int(j) for j in np.argsort(f, kind="stable")[:q]
+                if cap[j] > 0]                        # step 2: top-q min traffic
+        if not cand:                                  # fallback: most free capacity
+            cand = [int(np.argmax(cap))]
+        # steps 3-6: min growth of the attention cost model.
+        # Beyond-paper tie-break: Eq. 1 is linear in B, so clustering
+        # same-length sequences is growth-neutral to the greedy — prefer
+        # devices whose current max length already covers this sequence
+        # (zero added padding), which actively groups similar lengths.
+        best, best_growth = cand[0], None
+        for j in cand:
+            newL = max(dev_L[j], seq_lens[i])
+            growth = (t_att(dev_B[j] + 1, newL, d_model, speed)
+                      - t_att(dev_B[j], dev_L[j], d_model, speed))
+            growth -= 1e-5 * abs(growth) * float(dev_L[j] >= seq_lens[i])
+            if best_growth is None or growth < best_growth - 1e-30:
+                best, best_growth = j, growth
+        assign[i] = best
+        cap[best] -= 1
+        dev_B[best] += 1
+        dev_L[best] = max(dev_L[best], seq_lens[i])
+    return MigrationPlan(*_finalize_plan(assign, counts, n_per_dev))
+
+
+# ---------------------------------------------------------------------------
+# Traceable device-side Algorithm 1
+# ---------------------------------------------------------------------------
+
+def plan_migration_jax(counts, seq_lens, n_per_dev: int, *, q: int = 3,
+                       d_model: int = 1024, speed: float = 1e13
+                       ) -> MigrationPlan:
+    """Same algorithm, jax-traceable (runs replicated inside the step)."""
+    counts = counts.astype(jnp.float32)
+    n_slots, M = counts.shape
+    order = jnp.argsort(-seq_lens, stable=True)
+
+    def body(state, i):
+        cap, dev_B, dev_L, assign = state
+        slot = order[i]
+        f = jnp.sum(counts[slot]) - counts[slot]       # [M]
+        # top-q by min traffic
+        _, cand = jax.lax.top_k(-f, q)                 # [q]
+        cand_ok = cap[cand] > 0
+        L_i = seq_lens[slot].astype(jnp.float32)
+        newL = jnp.maximum(dev_L[cand], L_i)
+        growth = (t_att(dev_B[cand] + 1, newL, d_model, speed)
+                  - t_att(dev_B[cand], dev_L[cand], d_model, speed))
+        # padding-free tie-break (see plan_migration_np)
+        growth = growth - 1e-5 * jnp.abs(growth) * (dev_L[cand] >= L_i)
+        growth = jnp.where(cand_ok, growth, jnp.inf)
+        pick_c = jnp.argmin(growth)
+        picked = cand[pick_c]
+        # fallback: least-loaded device with capacity (if all cands full)
+        any_ok = jnp.any(cand_ok)
+        fb = jnp.argmax(cap)                            # max remaining capacity
+        j = jnp.where(any_ok, picked, fb).astype(jnp.int32)
+        cap = cap.at[j].add(-1)
+        dev_B = dev_B.at[j].add(1.0)
+        dev_L = dev_L.at[j].max(L_i)
+        assign = assign.at[slot].set(j)
+        return (cap, dev_B, dev_L, assign), None
+
+    # zero-couple the carry init to `counts` so it picks up the same
+    # varying-manual-axes type when traced inside shard_map (scan carries
+    # must have uniform vma in/out).
+    zf = jnp.sum(counts) * 0.0
+    zi = zf.astype(jnp.int32)
+    init = (jnp.full((M,), n_per_dev, jnp.int32) + zi,
+            jnp.zeros((M,), jnp.float32) + zf,
+            jnp.zeros((M,), jnp.float32) + zf,
+            jnp.full((n_slots,), -1, jnp.int32) + zi)
+    (cap, dev_B, dev_L, assign), _ = jax.lax.scan(
+        body, init, jnp.arange(n_slots))
+    return MigrationPlan(*_finalize_plan(assign, counts, n_per_dev))
+
+
+def identity_plan(n_slots: int, n_per_dev: int) -> MigrationPlan:
+    idx = jnp.arange(n_slots, dtype=jnp.int32)
+    return MigrationPlan(idx // n_per_dev, idx % n_per_dev, idx,
+                         jnp.float32(0), jnp.float32(0))

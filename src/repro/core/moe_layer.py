@@ -1,0 +1,475 @@
+"""Expert-parallel MoE layer with LUFFY's two techniques (paper §III-§V).
+
+Runs *inside* ``jax.shard_map`` over the full mesh: batch axes shard
+sequences, the ``model`` axis shards experts. Per device this module sees
+
+    x_local      [n_seq, S, d]     — this device's sequence slots
+    experts      [E_local, ...]    — this device's expert shard
+
+and performs: gate → (condense §V) → dispatch all-to-all → expert FFN →
+(migrate §IV) combine all-to-all → un-condense.
+
+Key TPU adaptations (DESIGN.md §3):
+
+* **Condensation** shrinks the *static* expert capacity ``C`` by the rate
+  bucket; non-representative tokens take no dispatch slot, so the
+  all-to-all operand itself is smaller.
+* **Migration** is a bijection on global sequence slots, planned from the
+  router output *before* dispatch (device-side Algorithm 1, replicated
+  within each model row). The dispatch payload carries the *pre-norm*
+  residual ``x``; expert devices compute ``norm→FFN→gate·y (+ residual on
+  the primary copy)`` and address combine rows to the token's **new**
+  home. The combine collective has the same operand size as vanilla —
+  the migration win is the larger diagonal (local) fraction, which never
+  crosses ICI links. Reported via the locality ledger in ``aux``.
+* Capacity overflow drops rows exactly like GShard; primary (residual-
+  carrying) rows are packed first so they survive longest. Drop rates are
+  reported in ``aux``.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import LuffyConfig, MoEConfig, ModelConfig
+from repro.core import condensation as cond
+from repro.core import migration as mig
+from repro.core.gating import dispatch_positions, gate_apply, gate_init
+
+Array = jnp.ndarray
+
+
+# ---------------------------------------------------------------------------
+# params
+# ---------------------------------------------------------------------------
+
+def moe_init(key, cfg: ModelConfig):
+    """Global expert stack [E, ...] (sharded over 'model' outside)."""
+    from repro.models.blocks import dense_init, _dtype
+    m = cfg.moe
+    d, f, E = cfg.d_model, m.d_ff, m.num_experts
+    pdt = _dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 5)
+    scale_down = 1.0 / math.sqrt(2 * cfg.num_layers)
+    p = {
+        "router": gate_init(ks[0], d, E),
+        "experts": {
+            "w_up": (jax.random.normal(ks[1], (E, d, f)) / math.sqrt(d)).astype(pdt),
+            "w_gate": (jax.random.normal(ks[2], (E, d, f)) / math.sqrt(d)).astype(pdt),
+            "w_down": (jax.random.normal(ks[3], (E, f, d)) * scale_down
+                       / math.sqrt(f)).astype(pdt),
+        },
+        "norm": {"scale": jnp.ones((d,), pdt)},
+    }
+    if m.num_shared_experts > 0:
+        fs = f * m.num_shared_experts
+        k1, k2, k3 = jax.random.split(ks[4], 3)
+        p["shared"] = {
+            "w_up": (jax.random.normal(k1, (d, fs)) / math.sqrt(d)).astype(pdt),
+            "w_gate": (jax.random.normal(k2, (d, fs)) / math.sqrt(d)).astype(pdt),
+            "w_down": (jax.random.normal(k3, (fs, d)) * scale_down
+                       / math.sqrt(fs)).astype(pdt),
+        }
+    return p
+
+
+def _rms(x, scale, eps=1e-6):
+    xf = x.astype(jnp.float32)
+    v = jnp.mean(xf * xf, -1, keepdims=True)
+    return (xf * jax.lax.rsqrt(v + eps) * scale.astype(jnp.float32))
+
+
+def expert_ffn(ew, h, act, compute_dtype, use_kernel: bool = False):
+    """h: [E_local, R, d] normed inputs -> [E_local, R, d]."""
+    if use_kernel:
+        from repro.kernels import ops as kops
+        return kops.expert_ffn(h, ew["w_up"], ew["w_gate"], ew["w_down"], act)
+    cdt = compute_dtype
+    hc = h.astype(cdt)
+    up = jnp.einsum("erd,edf->erf", hc, ew["w_up"].astype(cdt))
+    gt = jnp.einsum("erd,edf->erf", hc, ew["w_gate"].astype(cdt))
+    hh = act(gt) * up
+    return jnp.einsum("erf,efd->erd", hh, ew["w_down"].astype(cdt))
+
+
+def capacity_for(moe: MoEConfig, tokens_local: int, num_experts: int,
+                 rate: float = 0.0, slack: float = None) -> int:
+    """Static per-(source, expert) capacity, condensation-bucket scaled."""
+    cf = slack if slack is not None else moe.capacity_factor
+    c = int(math.ceil(cf * tokens_local * moe.top_k * (1.0 - rate)
+                      / num_experts))
+    return max(8, ((c + 7) // 8) * 8)
+
+
+class MoEAux(NamedTuple):
+    aux_loss: Array
+    dispatch_drop: Array      # fraction of kept rows dropped at dispatch
+    combine_drop: Array       # fraction of rows dropped at combine regroup
+    condense_rate: Array      # fraction of tokens condensed
+    local_frac: Array         # fraction of combine rows staying on-device
+    traffic_before: Array     # plan ledger (tokens crossing devices)
+    traffic_after: Array
+
+
+def _combined_index(axes):
+    idx = 0
+    for a in (axes if isinstance(axes, (tuple, list)) else (axes,)):
+        idx = idx * jax.lax.axis_size(a) + jax.lax.axis_index(a)
+    return idx
+
+
+def expert_ffn_2d(ew_local, h, act, cdt, fsdp_axes,
+                  batch_sharded: bool = True):
+    """Megatron-style expert FFN over the FSDP axes (decode path):
+
+    weights are F-sharded (w_up/w_gate on dim 2, w_down on dim 1 — their
+    stored layout, so NO weight resharding happens); the tiny decode
+    activation rows are all-gathered, each rank computes its F-slice of
+    the hidden, and the output partial-sums reduce-scatter back to each
+    rank's own rows. Wire per layer ≈ 2×rows-size instead of the full
+    expert weights (llama4 decode: ~20 MB vs ~2 GB; EXPERIMENTS.md §Perf).
+
+    batch_sharded=False (long_500k: B=1 replicated over the fsdp axes):
+    skip the gather/scatter — every rank holds the same rows, computes
+    its F-slice partial, and a single psum yields the replicated output.
+    """
+    hc = h.astype(cdt)
+    if batch_sharded:
+        h_g = jax.lax.all_gather(hc, fsdp_axes, axis=1, tiled=True)
+    else:
+        h_g = hc
+    up = jnp.einsum("erd,edf->erf", h_g, ew_local["w_up"].astype(cdt))
+    gt = jnp.einsum("erd,edf->erf", h_g, ew_local["w_gate"].astype(cdt))
+    hh = act(gt) * up                       # [E_l, R(_all), F_local]
+    part = jnp.einsum("erf,efd->erd", hh,
+                      ew_local["w_down"].astype(cdt))
+    if batch_sharded:
+        # reduce over F shards + scatter rows back to their owners
+        return jax.lax.psum_scatter(part, fsdp_axes, scatter_dimension=1,
+                                    tiled=True)
+    return jax.lax.psum(part, fsdp_axes)
+
+
+def moe_decode_allreduce(params, x, cfg: ModelConfig, *, capacity: int,
+                         axis_name, use_kernel: bool = False,
+                         fsdp_axes=None, batch_sharded: bool = True):
+    """Decode-time expert parallelism via all-reduce (no all-to-all).
+
+    At decode there is ONE token per sequence — the dispatch operand would
+    be tiny and the token dim (S=1) cannot shard over the model axis. So
+    tokens stay replicated across the model axis; each rank runs only its
+    LOCAL experts on the tokens routed to them and the partial outputs are
+    psum'd. Collective = one [B,1,d] all-reduce per layer.
+    Returns (y, aux)."""
+    from repro.models.blocks import _act, _dtype
+    m = cfg.moe
+    cdt = _dtype(cfg.compute_dtype)
+    act = _act(cfg.act)
+    n_seq, S, d = x.shape
+    T = n_seq * S
+    E = m.num_experts
+    M = 1 if axis_name is None else jax.lax.axis_size(axis_name)
+    E_local = E // M
+    my = 0 if axis_name is None else jax.lax.axis_index(axis_name)
+    C = capacity
+
+    xf = x.reshape(T, d)
+    xn = _rms(xf, params["norm"]["scale"]).astype(cdt)
+    gate = gate_apply(params["router"], xn, m.top_k)
+    lo = my * E_local
+    local_e = gate.expert_idx - lo
+    keep = (local_e >= 0) & (local_e < E_local)
+    local_e = jnp.clip(local_e, 0, E_local - 1)
+    pos = dispatch_positions(local_e, keep, E_local)
+    valid = keep & (pos < C)
+    e_safe = jnp.where(valid, local_e, 0).reshape(-1)
+    p_safe = jnp.where(valid, pos, 0).reshape(-1)
+    v_f = valid.reshape(-1)
+    rows_in = jnp.zeros((E_local, C, d), cdt).at[e_safe, p_safe].add(
+        jnp.tile(xn[:, None], (1, m.top_k, 1)).reshape(-1, d)
+        * v_f[:, None].astype(cdt), mode="drop")
+    if fsdp_axes:
+        y_rows = expert_ffn_2d(params["experts"], rows_in, act, cdt,
+                               fsdp_axes, batch_sharded=batch_sharded)
+    else:
+        y_rows = expert_ffn(params["experts"], rows_in, act, cdt,
+                            use_kernel=use_kernel)
+    vals = y_rows[e_safe, p_safe] * v_f[:, None].astype(cdt)
+    vals = vals * gate.gate_weights.reshape(-1, 1).astype(cdt)
+    delta = jnp.sum(vals.reshape(T, m.top_k, d), axis=1)
+    if axis_name is not None:
+        delta = jax.lax.psum(delta, axis_name)
+    y = (xf + delta.astype(xf.dtype)).reshape(n_seq, S, d)
+    if "shared" in params:
+        from repro.models.blocks import ffn_apply
+        sh = ffn_apply(params["shared"], cfg,
+                       _rms(x, params["norm"]["scale"]).astype(cdt))
+        y = y + sh.astype(y.dtype)
+    kept = jnp.sum(keep.astype(jnp.float32))
+    d_drop = 1.0 - jnp.sum(valid.astype(jnp.float32)) / jnp.maximum(kept, 1.0)
+    aux = MoEAux(gate.aux_loss, d_drop, jnp.float32(0.0), jnp.float32(0.0),
+                 jnp.float32(1.0 / max(M, 1)), jnp.float32(0.0),
+                 jnp.float32(0.0))
+    return y, aux
+
+
+# ---------------------------------------------------------------------------
+# The per-device core
+# ---------------------------------------------------------------------------
+
+def moe_core(params, x, sideband: Dict[str, Array], cfg: ModelConfig,
+             luffy: LuffyConfig, *, mode: str, capacity: int,
+             axis_name: Optional[str], threshold,
+             s_prev: Optional[Array] = None,
+             group_size: int = 128, combine_slack: float = 1.0,
+             use_kernel: bool = False
+             ) -> Tuple[Array, Dict[str, Array], Optional[Array], MoEAux]:
+    """One MoE sublayer on this device's shard.
+
+    x: [n_seq, S, d] pre-norm hidden. sideband: {"labels":[n_seq,S],
+    "seq_len":[n_seq]} — travels with sequences under migration.
+    mode: "vanilla" | "migrate". Condensation is on iff s_prev is not None
+    or luffy.enable_condensation and mode != decode-style call.
+    Returns (y, new_sideband, s_next, aux). In vanilla mode
+    ``y = x + moe_delta``; in migrate mode ``y`` is the full post-block
+    hidden materialized at *new* slots.
+    """
+    from repro.models.blocks import _act, _dtype
+    m = cfg.moe
+    cdt = _dtype(cfg.compute_dtype)
+    act = _act(cfg.act)
+    n_seq, S, d = x.shape
+    T = n_seq * S
+    E = m.num_experts
+    M = 1 if axis_name is None else jax.lax.axis_size(axis_name)
+    assert E % M == 0, (E, M)
+    E_local = E // M
+    my = 0 if axis_name is None else jax.lax.axis_index(axis_name)
+    C = capacity
+
+    xf = x.reshape(T, d)
+    xn = _rms(xf, params["norm"]["scale"]).astype(cdt)
+    gate = gate_apply(params["router"], xn, m.top_k)
+    expert_idx, gate_w = gate.expert_idx, gate.gate_weights   # [T,k]
+
+    # token validity (length padding)
+    pos_in_seq = jnp.tile(jnp.arange(S, dtype=jnp.int32)[None], (n_seq, 1))
+    token_valid = (pos_in_seq < sideband["seq_len"][:, None]).reshape(T)
+    keep = jnp.tile(token_valid[:, None], (1, m.top_k))
+
+    # ---- token condensation (§V) ----------------------------------------
+    do_condense = luffy.enable_condensation and mode != "decode"
+    if do_condense:
+        co = cond.condense_tokens(
+            xn, expert_idx[:, 0], threshold, group_size=group_size,
+            s_prev=(None if s_prev is None
+                    else s_prev.reshape(-1, group_size, group_size)),
+            s1=luffy.s1, s2=luffy.s2, use_kernel=use_kernel)
+        keep = keep & co.is_rep[:, None]
+        rep_idx, s_next = co.rep_idx, co.sim
+        c_rate = co.rate
+    else:
+        rep_idx = jnp.arange(T, dtype=jnp.int32)
+        s_next, c_rate = None, jnp.float32(0.0)
+
+    # ---- dispatch positions & drops --------------------------------------
+    pos = dispatch_positions(expert_idx, keep, E)             # [T,k]
+    valid = keep & (pos < C)
+    kept = jnp.sum(keep.astype(jnp.float32))
+    d_drop = 1.0 - jnp.sum(valid.astype(jnp.float32)) / jnp.maximum(kept, 1.0)
+
+    # ---- migration plan (§IV) — BEFORE dispatch so combine can be
+    # re-addressed. Replicated within the model row. -----------------------
+    migrate = (mode == "migrate") and luffy.enable_migration and M > 1
+    if migrate:
+        dev_of_e = expert_idx // E_local                      # [T,k]
+        oh = jax.nn.one_hot(dev_of_e, M, dtype=jnp.float32) \
+            * valid[..., None].astype(jnp.float32)
+        counts_local = oh.reshape(n_seq, S, m.top_k, M).sum((1, 2))  # [n_seq,M]
+        counts_g = jax.lax.all_gather(counts_local, axis_name, axis=0,
+                                      tiled=True)             # [M*n_seq, M]
+        lens_g = jax.lax.all_gather(sideband["seq_len"], axis_name, axis=0,
+                                    tiled=True)               # [M*n_seq]
+        plan = mig.plan_migration_jax(
+            counts_g, lens_g.astype(jnp.float32), n_seq, q=luffy.q,
+            d_model=d, speed=luffy.gpu_speed)
+        my_slots = my * n_seq + jnp.arange(n_seq, dtype=jnp.int32)
+        dest_global = plan.perm[my_slots]                     # [n_seq]
+        t_before, t_after = plan.traffic_before, plan.traffic_after
+    else:
+        dest_global = my * n_seq + jnp.arange(n_seq, dtype=jnp.int32)
+        t_before = t_after = jnp.float32(0.0)
+
+    # ---- build dispatch buffers ------------------------------------------
+    # payload row: [x_raw(d), gate_w, is_primary]; meta: (dest_slot+1, pos)
+    is_primary = (jnp.arange(m.top_k) == 0)[None, :]          # [1,k]
+    tok_slot = jnp.tile((jnp.arange(T, dtype=jnp.int32) // S)[:, None],
+                        (1, m.top_k))                         # local seq slot
+    tok_pos = jnp.tile((jnp.arange(T, dtype=jnp.int32) % S)[:, None],
+                       (1, m.top_k))
+    dest_of_tok = dest_global[tok_slot]                       # [T,k]
+
+    e_f = expert_idx.reshape(-1)
+    p_f = pos.reshape(-1)
+    v_f = valid.reshape(-1)
+    payload = jnp.concatenate([
+        jnp.tile(xf.astype(cdt)[:, None], (1, m.top_k, 1)),
+        gate_w[..., None].astype(cdt),
+        jnp.broadcast_to(is_primary, (T, m.top_k))[..., None].astype(cdt),
+    ], axis=-1).reshape(-1, d + 2)                            # [T*k, d+2]
+    meta = jnp.stack([dest_of_tok + 1, tok_pos], -1).reshape(-1, 2)
+
+    buf = jnp.zeros((E, C, d + 2), cdt)
+    mbuf = jnp.zeros((E, C, 2), jnp.int32)
+    p_safe = jnp.where(v_f, p_f, 0)
+    e_safe = jnp.where(v_f, e_f, 0)
+    buf = buf.at[e_safe, p_safe].add(
+        payload * v_f[:, None].astype(cdt), mode="drop")
+    mbuf = mbuf.at[e_safe, p_safe].add(
+        meta * v_f[:, None].astype(jnp.int32), mode="drop")
+
+    # ---- dispatch all-to-all ---------------------------------------------
+    if M > 1:
+        buf = jax.lax.all_to_all(buf, axis_name, split_axis=0,
+                                 concat_axis=0, tiled=True)
+        mbuf = jax.lax.all_to_all(mbuf, axis_name, split_axis=0,
+                                  concat_axis=0, tiled=True)
+    # [M_src * E_local, C, .] -> [E_local, M_src*C, .]
+    rows = buf.reshape(M, E_local, C, d + 2).transpose(1, 0, 2, 3) \
+              .reshape(E_local, M * C, d + 2)
+    rmeta = mbuf.reshape(M, E_local, C, 2).transpose(1, 0, 2, 3) \
+                .reshape(E_local, M * C, 2)
+
+    # ---- expert computation ----------------------------------------------
+    xr = rows[..., :d]
+    gw = rows[..., d:d + 1]
+    prim = rows[..., d + 1:d + 2]
+    h = _rms(xr, params["norm"]["scale"]).astype(cdt)
+    y = expert_ffn(params["experts"], h, act, cdt, use_kernel=use_kernel)
+    out_rows = y * gw
+    if migrate:
+        out_rows = out_rows + xr * prim        # primary copy carries residual
+
+    # ---- combine ----------------------------------------------------------
+    if not migrate:
+        # vanilla: return rows to their source in dispatch layout
+        back = out_rows.reshape(E_local, M, C, d).transpose(1, 0, 2, 3) \
+                       .reshape(E, C, d)
+        if M > 1:
+            back = jax.lax.all_to_all(back, axis_name, split_axis=0,
+                                      concat_axis=0, tiled=True)
+        vals = back[e_safe, p_safe] * v_f[:, None].astype(cdt)  # [T*k, d]
+        delta = jnp.sum(vals.reshape(T, m.top_k, d), axis=1)
+        y_tok = xf + delta.astype(xf.dtype)
+        c_drop = jnp.float32(0.0)
+        local_frac = jnp.float32(1.0 / M)
+        new_sideband = dict(sideband)
+    else:
+        # regroup rows by destination device (priority: residual rows first)
+        R = E_local * M * C
+        o_f = out_rows.reshape(R, d)
+        dslot = rmeta[..., 0].reshape(R) - 1               # -1 = empty row
+        rpos = rmeta[..., 1].reshape(R)
+        rprim = prim.reshape(R) > 0.5
+        rvalid = dslot >= 0
+        ddev = jnp.where(rvalid, dslot // n_seq, M)        # M = dummy bin
+        prio = (~rvalid).astype(jnp.int32) * 2 + (~rprim).astype(jnp.int32)
+        order = jnp.argsort(prio, stable=True)
+        o_f, dslot, rpos, ddev, rvalid = (a[order] for a in
+                                          (o_f, dslot, rpos, ddev, rvalid))
+        C_comb = max(8, int(math.ceil(combine_slack * E_local * C / 8)) * 8)
+        oh = jax.nn.one_hot(ddev, M, dtype=jnp.int32)
+        rank = (jnp.cumsum(oh, axis=0) - oh)[jnp.arange(R), jnp.where(
+            rvalid, ddev, 0)]
+        keep_c = rvalid & (rank < C_comb)
+        n_rv = jnp.sum(rvalid.astype(jnp.float32))
+        c_drop = 1.0 - jnp.sum(keep_c.astype(jnp.float32)) / jnp.maximum(
+            n_rv, 1.0)
+        local_frac = jnp.sum((keep_c & (ddev == my)).astype(jnp.float32)) \
+            / jnp.maximum(n_rv, 1.0)
+        dd_s = jnp.where(keep_c, ddev, 0)
+        rk_s = jnp.where(keep_c, rank, 0)
+        cbuf = jnp.zeros((M, C_comb, d), cdt).at[dd_s, rk_s].add(
+            o_f * keep_c[:, None].astype(cdt), mode="drop")
+        cmeta = jnp.zeros((M, C_comb, 2), jnp.int32).at[dd_s, rk_s].add(
+            jnp.stack([jnp.where(keep_c, dslot % n_seq + 1, 0),
+                       jnp.where(keep_c, rpos, 0)], -1), mode="drop")
+        if M > 1:
+            cbuf = jax.lax.all_to_all(cbuf, axis_name, split_axis=0,
+                                      concat_axis=0, tiled=True)
+            cmeta = jax.lax.all_to_all(cmeta, axis_name, split_axis=0,
+                                       concat_axis=0, tiled=True)
+        rs = cbuf.reshape(M * C_comb, d)
+        rslot = cmeta[..., 0].reshape(-1) - 1
+        rp = cmeta[..., 1].reshape(-1)
+        ok = rslot >= 0
+        y_grid = jnp.zeros((n_seq, S, d), cdt).at[
+            jnp.where(ok, rslot, 0), jnp.where(ok, rp, 0)].add(
+            rs * ok[:, None].astype(cdt), mode="drop")
+        y_tok = y_grid.reshape(T, d).astype(xf.dtype)
+        # sideband travels with sequences
+        new_sideband = _exchange_sideband(
+            sideband, dest_global, n_seq, M, axis_name)
+
+    # ---- un-condense (token_to_token replacement, §VI) --------------------
+    if do_condense:
+        if not migrate:
+            y_tok = cond.uncondense(y_tok, rep_idx)
+        else:
+            # rep map migrated as sideband: [n_seq, S] local rep position
+            rep_local = (rep_idx % S).reshape(n_seq, S).astype(jnp.int32)
+            rep_sb = _exchange_sideband({"rep": rep_local}, dest_global,
+                                        n_seq, M, axis_name)["rep"]
+            yg = y_tok.reshape(n_seq, S, d)
+            y_tok = jnp.take_along_axis(yg, rep_sb[..., None], axis=1
+                                        ).reshape(T, d)
+        if s_next is not None and migrate:
+            ng = S // group_size
+            s_mig = s_next.reshape(n_seq, ng, group_size, group_size)
+            s_next = _exchange_sideband(
+                {"s": s_mig.astype(jnp.bfloat16)}, dest_global, n_seq, M,
+                axis_name)["s"].astype(jnp.float32)
+            s_next = s_next.reshape(-1, group_size, group_size)
+
+    y_out = y_tok.reshape(n_seq, S, d)
+
+    # ---- shared experts (always-on, llama4-style) -------------------------
+    if "shared" in params:
+        from repro.models.blocks import ffn_apply
+        sh = ffn_apply({"w_up": params["shared"]["w_up"],
+                        "w_gate": params["shared"]["w_gate"],
+                        "w_down": params["shared"]["w_down"]},
+                       cfg, _rms(y_out if migrate else x.reshape(n_seq, S, d),
+                                 params["norm"]["scale"]).astype(cdt))
+        y_out = y_out + sh.astype(y_out.dtype)
+
+    aux = MoEAux(gate.aux_loss, d_drop, c_drop, c_rate, local_frac,
+                 t_before, t_after)
+    return y_out, new_sideband, s_next, aux
+
+
+def _exchange_sideband(sb: Dict[str, Array], dest_global: Array,
+                       n_seq: int, M: int, axis_name) -> Dict[str, Array]:
+    """Move per-sequence side info to new homes (bijection on slots)."""
+    if M == 1 or axis_name is None:
+        # permutation within the single device
+        out = {}
+        inv = jnp.zeros((n_seq,), jnp.int32).at[dest_global % n_seq].set(
+            jnp.arange(n_seq, dtype=jnp.int32))
+        for k, v in sb.items():
+            out[k] = v[inv]
+        return out
+    out = {}
+    dd = dest_global // n_seq
+    ds = dest_global % n_seq
+    for k, v in sb.items():
+        buf = jnp.zeros((M, n_seq) + v.shape[1:], v.dtype)
+        buf = buf.at[dd, ds].add(v)
+        buf = jax.lax.all_to_all(buf, axis_name, split_axis=0,
+                                 concat_axis=0, tiled=True)
+        out[k] = jnp.sum(buf, axis=0)      # exactly-one-writer per slot
+    return out

@@ -1,0 +1,124 @@
+"""Data pipeline: deterministic synthetic token streams + a file-backed
+token dataset, with host sharding, length bucketing (the TPU analogue of
+the paper's "gather sequences of similar lengths"), and modality stubs
+for the audio/VLM architectures (precomputed frame/patch embeddings —
+the one allowed carve-out, see DESIGN.md).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterator, Optional
+
+import numpy as np
+
+from repro.config import ModelConfig, ShapeConfig
+
+
+@dataclasses.dataclass
+class DataConfig:
+    seed: int = 0
+    # synthetic stream: zipfian token distribution with markov structure,
+    # which yields the *clustered* token embeddings the paper's
+    # condensation exploits (similar contexts -> similar hidden states).
+    zipf_a: float = 1.2
+    markov_order: int = 1
+    min_len_frac: float = 0.5      # sequences have len in [frac*S, S]
+    length_buckets: int = 4
+
+
+class SyntheticLM:
+    """Deterministic synthetic language-model stream."""
+
+    def __init__(self, cfg: ModelConfig, shape: ShapeConfig,
+                 data_cfg: DataConfig = DataConfig()):
+        self.cfg, self.shape, self.dc = cfg, shape, data_cfg
+        self.rng = np.random.default_rng(data_cfg.seed)
+        V = cfg.vocab_size
+        # zipf-ish unigram + low-rank bigram mixing for structure
+        ranks = np.arange(1, V + 1, dtype=np.float64)
+        self.unigram = ranks ** (-data_cfg.zipf_a)
+        self.unigram /= self.unigram.sum()
+
+    def _sample_tokens(self, rng, n):
+        return rng.choice(self.cfg.vocab_size, size=n, p=self.unigram
+                          ).astype(np.int32)
+
+    def batch(self, step: int, *, global_batch: Optional[int] = None,
+              seq_len: Optional[int] = None) -> Dict[str, np.ndarray]:
+        B = global_batch or self.shape.global_batch
+        S = seq_len or self.shape.seq_len
+        rng = np.random.default_rng((self.dc.seed, step))
+        toks = self._sample_tokens(rng, B * (S + 1)).reshape(B, S + 1)
+        # markov smoothing: repeat previous token sometimes (structure)
+        rep = rng.random((B, S + 1)) < 0.3
+        for t in range(1, S + 1):
+            toks[:, t] = np.where(rep[:, t], toks[:, t - 1], toks[:, t])
+        lens = rng.integers(max(2, int(self.dc.min_len_frac * S)), S + 1,
+                            size=B).astype(np.int32)
+        # length bucketing: sort into buckets so co-batched sequences have
+        # similar lengths (reduces padding waste; §IV motivation)
+        order = np.argsort(lens, kind="stable")
+        toks, lens = toks[order], lens[order]
+        tokens = toks[:, :S].copy()
+        labels = toks[:, 1:S + 1].astype(np.int32).copy()
+        pos = np.arange(S)[None, :]
+        labels[pos >= lens[:, None]] = -1
+        tokens[pos >= lens[:, None]] = 0
+        batch = {"tokens": tokens, "labels": labels, "seq_len": lens}
+        if self.cfg.prefix_slots > 0 and self.cfg.kind != "encdec":
+            P = self.cfg.prefix_slots
+            batch["prefix"] = rng.standard_normal(
+                (B, P, self.cfg.prefix_dim or self.cfg.d_model)
+            ).astype(np.float32)
+            # prefix occupies the first P positions; tokens shrink
+            batch["tokens"] = tokens[:, :S - P]
+            lbl = labels.copy()
+            lbl[:, :P] = -1
+            batch["labels"] = lbl
+        if self.cfg.kind == "encdec":
+            batch["enc_input"] = rng.standard_normal(
+                (B, S, self.cfg.prefix_dim or self.cfg.d_model)
+            ).astype(np.float32)
+        return batch
+
+    def __iter__(self) -> Iterator[Dict[str, np.ndarray]]:
+        step = 0
+        while True:
+            yield self.batch(step)
+            step += 1
+
+
+class TokenFileDataset:
+    """Memory-mapped flat token file (.npy int32), chunked into sequences,
+    deterministically shuffled and sharded across hosts."""
+
+    def __init__(self, path: str, cfg: ModelConfig, shape: ShapeConfig,
+                 *, host_id: int = 0, num_hosts: int = 1, seed: int = 0):
+        self.tokens = np.load(path, mmap_mode="r")
+        self.cfg, self.shape = cfg, shape
+        self.host_id, self.num_hosts, self.seed = host_id, num_hosts, seed
+        S = shape.seq_len
+        self.n_seqs = (len(self.tokens) - 1) // S
+        rng = np.random.default_rng(seed)
+        self.order = rng.permutation(self.n_seqs)
+
+    def batch(self, step: int) -> Dict[str, np.ndarray]:
+        B, S = self.shape.global_batch, self.shape.seq_len
+        per_host = B // self.num_hosts
+        idx0 = (step * B + self.host_id * per_host) % max(
+            1, self.n_seqs - B)
+        seqs = []
+        for i in range(per_host):
+            s = self.order[(idx0 + i) % self.n_seqs] * S
+            seqs.append(np.asarray(self.tokens[s:s + S + 1], np.int32))
+        arr = np.stack(seqs)
+        return {"tokens": arr[:, :S],
+                "labels": arr[:, 1:].astype(np.int32),
+                "seq_len": np.full((per_host,), S, np.int32)}
+
+
+def make_decode_batch(cfg: ModelConfig, shape: ShapeConfig, step: int = 0):
+    rng = np.random.default_rng((17, step))
+    B = shape.global_batch
+    return {"tokens": rng.integers(0, cfg.vocab_size, (B, 1)
+                                   ).astype(np.int32)}

@@ -1,0 +1,117 @@
+"""Distribution context: how activations/params map onto the mesh.
+
+One :class:`DistContext` per (arch × shape × mesh) combination. Dense
+parts of the model are GSPMD-sharded via constraints; the MoE layer runs
+in an explicit ``jax.shard_map`` (the paper's subject — we want manual
+control of the dispatch/combine collectives).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+@dataclass(frozen=True)
+class DistContext:
+    mesh: Optional[Mesh] = None
+    # axes sharding the batch dim of activations (may include 'model'
+    # for train shapes — expert-parallel batch spreads over all axes)
+    batch_axes: Tuple[str, ...] = ()
+    # axis sharding the sequence dim (prefill / long-context), or None
+    seq_axis: Optional[str] = None
+    model_axis: str = "model"
+    # axes over which (dense-arch / attention) params are fully sharded
+    fsdp_axes: Tuple[str, ...] = ()
+
+    @property
+    def enabled(self) -> bool:
+        return self.mesh is not None
+
+    def axis_size(self, name) -> int:
+        if self.mesh is None:
+            return 1
+        if isinstance(name, (tuple, list)):
+            out = 1
+            for n in name:
+                out *= self.mesh.shape[n]
+            return out
+        return self.mesh.shape[name]
+
+    @property
+    def model_size(self) -> int:
+        return self.axis_size(self.model_axis) if self.enabled else 1
+
+    @property
+    def batch_size_divisor(self) -> int:
+        return self.axis_size(self.batch_axes) if self.enabled else 1
+
+    # -- spec helpers -------------------------------------------------------
+    def bspec(self, *rest) -> P:
+        b = self.batch_axes if self.batch_axes else None
+        return P(b, *rest)
+
+    def act_spec(self, extra_dims: int = 1) -> P:
+        """Spec for [B, S, ...] activations."""
+        b = self.batch_axes if self.batch_axes else None
+        return P(b, self.seq_axis, *([None] * extra_dims))
+
+    def constrain(self, x, spec: P):
+        if self.mesh is None:
+            return x
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, spec))
+
+    def sharding(self, spec: P) -> Optional[NamedSharding]:
+        if self.mesh is None:
+            return None
+        return NamedSharding(self.mesh, spec)
+
+
+def single_device() -> DistContext:
+    return DistContext()
+
+
+def make_dist(mesh: Mesh, shape_mode: str, global_batch: int,
+              *, moe_arch: bool) -> DistContext:
+    """Choose the sharding strategy for a given input shape (DESIGN.md §4).
+
+    * train:   batch over ALL axes when divisible (expert-parallel rows
+               live on 'model'); else batch over (pod,data) + seq on model.
+    * prefill: batch over (pod,data), sequence over 'model'.
+    * decode:  batch over (pod,data); KV sequence dim over 'model'
+               (context-parallel decode). long_500k (B=1): KV over all axes.
+    """
+    names = tuple(mesh.axis_names)
+    data_axes = tuple(a for a in names if a != "model")
+    all_axes = tuple(a for a in names)
+    n_all = 1
+    for a in all_axes:
+        n_all *= mesh.shape[a]
+    n_data = 1
+    for a in data_axes:
+        n_data *= mesh.shape[a]
+
+    if shape_mode == "train":
+        if global_batch % n_all == 0:
+            return DistContext(mesh, batch_axes=all_axes, seq_axis=None,
+                               fsdp_axes=data_axes)
+        return DistContext(mesh, batch_axes=data_axes, seq_axis="model",
+                           fsdp_axes=data_axes)
+    if shape_mode == "prefill":
+        if global_batch % n_all == 0 and not moe_arch:
+            return DistContext(mesh, batch_axes=all_axes, seq_axis=None,
+                               fsdp_axes=data_axes)
+        return DistContext(mesh, batch_axes=data_axes, seq_axis="model",
+                           fsdp_axes=data_axes)
+    # decode: batch over data axes, KV-cache sequence dim over 'model'
+    # (context-parallel decode). long_500k (B=1): KV over every axis.
+    if global_batch == 1:
+        return DistContext(mesh, batch_axes=(), seq_axis=all_axes,
+                           fsdp_axes=data_axes)
+    return DistContext(mesh, batch_axes=data_axes, seq_axis="model",
+                       fsdp_axes=data_axes)

@@ -1,0 +1,42 @@
+"""Condensation gather kernel: ``y[i] = y[rep_idx[i]]`` (token_to_token
+replacement, paper §VI). A dynamic row-gather; on TPU this is a VMEM
+gather per tile — the kernel exists so the un-condense step can fuse with
+the combine scatter instead of round-tripping HBM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+DEFAULT_BT = 256
+
+
+def _gather_kernel(idx_ref, src_ref, out_ref):
+    """idx: [bt] int32 (global row ids); src: [T, d] (full residency);
+    out: [bt, d]."""
+    idx = idx_ref[...]
+    out_ref[...] = src_ref[idx]
+
+
+@functools.partial(jax.jit, static_argnames=("bt", "interpret"))
+def gather_rows(y, rep_idx, *, bt: int = DEFAULT_BT,
+                interpret: bool = True):
+    """y: [T, d]; rep_idx: [T] int32 -> y[rep_idx]."""
+    T, d = y.shape
+    bt_ = min(bt, T)
+    assert T % bt_ == 0
+    return pl.pallas_call(
+        _gather_kernel,
+        grid=(T // bt_,),
+        in_specs=[
+            pl.BlockSpec((bt_,), lambda i: (i,)),
+            pl.BlockSpec((T, d), lambda i: (0, 0)),   # whole source table
+        ],
+        out_specs=pl.BlockSpec((bt_, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((T, d), y.dtype),
+        interpret=interpret,
+    )(rep_idx, y)

@@ -1,0 +1,73 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def masked_similarity_ref(x, mask, eps: float = 1e-8):
+    """x: [G, d]; mask: [G, G] bool (True = must measure).
+    Returns normalized cosine similarity in [0, 1], zero where masked out.
+    """
+    xf = x.astype(jnp.float32)
+    n = xf * jax.lax.rsqrt(jnp.sum(xf * xf, -1, keepdims=True) + eps)
+    c = (n @ n.T + 1.0) * 0.5
+    return jnp.where(mask, c, 0.0)
+
+
+def expert_ffn_ref(h, w_up, w_gate, w_down, act_name: str = "silu"):
+    """h: [E, R, d]; w_up/w_gate: [E, d, f]; w_down: [E, f, d]."""
+    act = {"silu": jax.nn.silu, "gelu": jax.nn.gelu}[act_name]
+    hf = h.astype(jnp.float32)
+    up = jnp.einsum("erd,edf->erf", hf, w_up.astype(jnp.float32))
+    gt = jnp.einsum("erd,edf->erf", hf, w_gate.astype(jnp.float32))
+    out = jnp.einsum("erf,efd->erd", act(gt) * up,
+                     w_down.astype(jnp.float32))
+    return out.astype(h.dtype)
+
+
+def gather_rows_ref(y, rep_idx):
+    """y: [T, d]; rep_idx: [T] int32 -> y[rep_idx] (un-condensation)."""
+    return jnp.take(y, rep_idx, axis=0)
+
+
+def flash_attention_ref(q, k, v, *, causal=True, window=None, scale=None):
+    """Oracle for the flash kernel: plain masked softmax attention.
+    q,k,v: [B,S,H,hd] (kv pre-expanded)."""
+    import math
+    hd = q.shape[-1]
+    scale = scale or 1.0 / math.sqrt(hd)
+    S = q.shape[1]
+    pos = jnp.arange(S, dtype=jnp.int32)
+    qp, kp = pos[:, None], pos[None, :]
+    mask = jnp.ones((S, S), bool)
+    if causal:
+        mask &= kp <= qp
+    if window is not None:
+        mask &= (qp - kp) < window
+    lg = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                    k.astype(jnp.float32)) * scale
+    lg = jnp.where(mask[None, None], lg, -1e30)
+    w = jax.nn.softmax(lg, axis=-1)
+    return jnp.einsum("bhqk,bkhd->bqhd", w,
+                      v.astype(jnp.float32)).astype(q.dtype)
+
+
+def mamba_scan_ref(dt, x, bmat, cmat, a):
+    """Oracle for the fused Mamba scan: naive per-step recurrence.
+    dt/x: [B,S,di]; bmat/cmat: [B,S,N]; a: [di,N]. Returns y [B,S,di]."""
+    da = jnp.exp(dt.astype(jnp.float32)[..., None] * a)        # [B,S,di,N]
+    dbx = (dt * x).astype(jnp.float32)[..., None] \
+        * bmat.astype(jnp.float32)[..., None, :]
+
+    def step(h, inp):
+        da_t, dbx_t, c_t = inp
+        h = da_t * h + dbx_t
+        return h, jnp.einsum("bdn,bn->bd", h, c_t.astype(jnp.float32))
+
+    B, S, di = dt.shape
+    h0 = jnp.zeros((B, di, a.shape[-1]), jnp.float32)
+    _, ys = jax.lax.scan(step, h0, (jnp.moveaxis(da, 1, 0),
+                                    jnp.moveaxis(dbx, 1, 0),
+                                    jnp.moveaxis(cmat, 1, 0)))
+    return jnp.moveaxis(ys, 0, 1).astype(dt.dtype)

@@ -1,0 +1,86 @@
+"""Blocked masked pairwise-similarity Pallas kernel (§V-A, TPU-adapted).
+
+Pairwise cosine similarity over one condensation group is a rank-``d``
+Gram matmul — exactly MXU work. The fast-measurement skip rules (same
+expert / historical similarity) arrive as a boolean mask; whole output
+tiles with no uncertain pair are skipped (tile-level early-out), which is
+the TPU analogue of the paper's per-edge skipping (per-element control
+flow is poison on a systolic array; tile granularity is free).
+
+Grid: (G/bg, G/bg); each program computes one [bg, bg] tile of the Gram
+matrix by streaming d in [bd]-sized VMEM slabs.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+DEFAULT_BG = 128      # output tile edge (MXU-aligned)
+DEFAULT_BD = 512      # feature-dim slab
+
+
+def _sim_kernel(mask_any_ref, x_ref, y_ref, mask_ref, out_ref, *, bd, d):
+    """One [bg,bg] output tile. x_ref/y_ref: [bg, d] row/col slabs in VMEM;
+    mask_ref: [bg,bg] bool; mask_any_ref: [1,1] tile-level early-out flag
+    (scalar prefetch)."""
+    bg = out_ref.shape[0]
+
+    @pl.when(mask_any_ref[0, 0] > 0)
+    def compute():
+        acc = jnp.zeros((bg, bg), jnp.float32)
+        xx = jnp.zeros((bg,), jnp.float32)
+        yy = jnp.zeros((bg,), jnp.float32)
+        n_slabs = d // bd
+        for s in range(n_slabs):
+            xs = x_ref[:, s * bd:(s + 1) * bd].astype(jnp.float32)
+            ys = y_ref[:, s * bd:(s + 1) * bd].astype(jnp.float32)
+            acc += jax.lax.dot_general(
+                xs, ys, (((1,), (1,)), ((), ())),
+                preferred_element_type=jnp.float32)
+            xx += jnp.sum(xs * xs, axis=1)
+            yy += jnp.sum(ys * ys, axis=1)
+        inv = jax.lax.rsqrt(xx[:, None] * yy[None, :] + 1e-8)
+        sim = (acc * inv + 1.0) * 0.5
+        out_ref[...] = jnp.where(mask_ref[...], sim, 0.0)
+
+    @pl.when(mask_any_ref[0, 0] == 0)
+    def skip():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+
+@functools.partial(jax.jit, static_argnames=("bg", "bd", "interpret"))
+def masked_similarity(x, mask, *, bg: int = DEFAULT_BG,
+                      bd: int = DEFAULT_BD, interpret: bool = True):
+    """x: [G, d]; mask: [G, G] bool. Returns [G, G] f32 similarity in
+    [0,1], zeroed where mask is False; fully-masked tiles are skipped."""
+    G, d = x.shape
+    bg = min(bg, G)
+    bd = min(bd, d)
+    assert G % bg == 0
+    if d % bd != 0:                      # pad features (zero rows are
+        pad = bd - d % bd                # harmless for dot & norms)
+        x = jnp.pad(x, ((0, 0), (0, pad)))
+        d = x.shape[1]
+    nt = G // bg
+    # tile-level early-out flags, computed on the host side of the kernel
+    mask_tiles = mask.reshape(nt, bg, nt, bg).any(axis=(1, 3))
+    mask_any = mask_tiles.astype(jnp.int32)
+
+    grid = (nt, nt)
+    return pl.pallas_call(
+        functools.partial(_sim_kernel, bd=bd, d=d),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda i, j: (i, j)),          # mask_any
+            pl.BlockSpec((bg, d), lambda i, j: (i, 0)),          # rows
+            pl.BlockSpec((bg, d), lambda i, j: (j, 0)),          # cols
+            pl.BlockSpec((bg, bg), lambda i, j: (i, j)),         # mask
+        ],
+        out_specs=pl.BlockSpec((bg, bg), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((G, G), jnp.float32),
+        interpret=interpret,
+    )(mask_any, x, x, mask)

@@ -1,0 +1,367 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture × input shape ×
+mesh) combination with ShapeDtypeStruct stand-ins (no allocation), record
+memory_analysis / cost_analysis / per-collective bytes for the roofline.
+
+Usage:
+    python -m repro.launch.dryrun --arch olmoe-1b-7b --shape train_4k
+    python -m repro.launch.dryrun --arch ... --shape ... --multi-pod
+    python -m repro.launch.dryrun --all [--jobs 6]   # orchestrate subprocesses
+"""
+
+import argparse
+import json
+import re
+import subprocess
+import sys
+import time
+from pathlib import Path
+
+ARTIFACTS = Path(__file__).resolve().parents[3] / "artifacts" / "dryrun"
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1,
+                "f8e5m2": 1, "s64": 8, "u64": 8, "s32": 4, "u32": 4,
+                "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1, "c64": 8,
+                "c128": 16}
+
+_COLLECTIVES = ("all-to-all", "all-gather", "all-reduce", "reduce-scatter",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(type_str: str) -> int:
+    """Bytes of an HLO type string like 'bf16[128,48,514]{2,1,0}' or a
+    tuple '(f32[2,3], s32[4])'."""
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_LIST_RE.search(line)
+    if m:
+        return len([x for x in m.group(1).split(",") if x.strip()])
+    return 0
+
+
+def parse_collectives(hlo_text: str):
+    """Sum result-operand bytes of every collective op in optimized HLO."""
+    out = {c: {"bytes": 0, "count": 0, "ops": []} for c in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        ls = line.strip()
+        if " = " not in ls:
+            continue
+        lhs, rhs = ls.split(" = ", 1)
+        for c in _COLLECTIVES:
+            # match the op name at the start of the rhs expression,
+            # e.g. "bf16[...] all-to-all(" — not fused-computation refs
+            m = re.match(r"^((?:\([^)]*\))|(?:[\w\[\]{},: ]+?))\s+"
+                         + re.escape(c) + r"(-start|-done)?\(", rhs)
+            if m:
+                if m.group(2) == "-done":
+                    continue       # counted at -start
+                b = _shape_bytes(m.group(1))
+                g = _group_size(ls)
+                out[c]["bytes"] += b
+                out[c]["count"] += 1
+                if len(out[c]["ops"]) < 40:
+                    out[c]["ops"].append({"bytes": b, "groups": g})
+                break
+    return out
+
+
+def run_pair(arch: str, shape_name: str, multi_pod: bool,
+             out_path: Path, *, luffy_on: bool = True,
+             bucket: int = 0, variant: str = "baseline"):
+    import jax
+    import jax.numpy as jnp
+    from repro import optim, serve_lib, train_lib
+    from repro.config import SHAPES, LuffyConfig, OptimConfig
+    from repro.configs import get_config
+    from repro.dist import make_dist
+    from repro.launch.mesh import make_production_mesh
+    from repro.models.model import build_model
+
+    t0 = time.time()
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    rec = {"arch": arch, "shape": shape_name,
+           "mesh": "2x16x16" if multi_pod else "16x16",
+           "variant": variant, "status": "unknown"}
+
+    if shape_name == "long_500k" and not cfg.supports_long_decode:
+        rec["status"] = "skipped"
+        rec["reason"] = "full-attention arch; long_500k skipped (DESIGN.md)"
+        out_path.write_text(json.dumps(rec, indent=1))
+        print(f"SKIP {arch} {shape_name}")
+        return rec
+
+    dist = make_dist(mesh, shape.mode, shape.global_batch,
+                     moe_arch=cfg.uses_moe)
+    model = build_model(cfg)
+    pstruct = model.init_struct()
+    pspecs = model.param_pspecs(dist, pstruct)
+
+    def with_sharding(struct, specs):
+        return jax.tree.map(
+            lambda s, p: jax.ShapeDtypeStruct(
+                s.shape, s.dtype, sharding=dist.sharding(p)),
+            struct, specs,
+            is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+
+    params_in = with_sharding(pstruct, pspecs)
+    luffy = LuffyConfig(
+        enable_condensation=luffy_on and cfg.uses_moe,
+        enable_migration=luffy_on and cfg.uses_moe)
+
+    if shape.mode == "train":
+        # 100B+ models: full f32 Adam moments cannot fit 16GB/chip even at
+        # maximal sharding — use Adafactor (production choice; DESIGN.md)
+        ocfg = OptimConfig(name="adafactor"
+                           if cfg.param_count() > 1e11 else "adamw")
+        rec["optimizer"] = ocfg.name
+        ostruct = jax.eval_shape(
+            lambda p: optim.init_opt_state(p, ocfg), pstruct)
+        from jax.sharding import PartitionSpec as P
+        mu_specs, nu_specs = model.opt_moment_pspecs(dist, ocfg, pstruct)
+        opt_in = optim.OptState(
+            jax.ShapeDtypeStruct((), jnp.int32,
+                                 sharding=dist.sharding(P())),
+            with_sharding(ostruct.mu, mu_specs),
+            with_sharding(ostruct.nu, nu_specs))
+        lstate_in = jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype,
+                                           sharding=dist.sharding(P())),
+            jax.eval_shape(train_lib.init_luffy_state))
+        batch_in = model.input_specs(shape, dist)
+        if cfg.uses_moe:
+            cap = train_lib.capacity_for_bucket(cfg, shape, dist, luffy,
+                                                bucket)
+        else:
+            cap = 8
+        step = train_lib.make_train_step(cfg, luffy, ocfg, dist, cap,
+                                         param_pspecs=pspecs)
+        fn = jax.jit(step, donate_argnums=(0, 1))
+        lowered = fn.lower(params_in, opt_in, lstate_in, batch_in)
+    elif shape.mode == "prefill":
+        batch_in = model.input_specs(shape, dist)
+
+        def pf(params, batch):
+            return model.prefill(
+                params, batch["tokens"], shape.seq_len, luffy=luffy,
+                dist=dist, prefix=batch.get("prefix"),
+                enc_input=batch.get("enc_input"))[0]
+
+        lowered = jax.jit(pf).lower(params_in, batch_in)
+    else:  # decode
+        cache_in, _ = model.cache_specs(shape, dist)
+        batch_in = model.input_specs(shape, dist)
+
+        def dec(params, cache, batch):
+            return model.decode_step(params, cache, batch["tokens"],
+                                     luffy=luffy, dist=dist)
+
+        lowered = jax.jit(dec, donate_argnums=(1,)).lower(
+            params_in, cache_in, batch_in)
+
+    t_lower = time.time() - t0
+    compiled = lowered.compile()
+    t_compile = time.time() - t0 - t_lower
+
+    ma = compiled.memory_analysis()
+    ca = compiled.cost_analysis() or {}
+    hlo = compiled.as_text()
+    coll = parse_collectives(hlo)
+    # loop-corrected analysis: cost_analysis counts while (scan) bodies
+    # once; our models scan over layer groups (see hlo_analysis.py)
+    from repro.launch import hlo_analysis
+    corrected = hlo_analysis.analyze(hlo)
+
+    # Analytic per-device static memory (exact, backend-independent):
+    # NOTE the CPU backend emulates bf16 dots by materializing f32 operand
+    # copies, inflating temp_bytes for bf16 archs vs real TPU (DESIGN.md).
+    def sharded_bytes(struct, specs):
+        import numpy as _np
+        from jax.sharding import PartitionSpec as _P
+        ax_size = dict(zip(mesh.axis_names, mesh.devices.shape))
+        leaves = jax.tree.leaves(struct, is_leaf=lambda x: isinstance(
+            x, jax.ShapeDtypeStruct))
+        sl = jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, _P))
+        out = 0
+        for leaf, spec in zip(leaves, sl):
+            factor = 1
+            for entry in (spec or ()):
+                if entry is None:
+                    continue
+                for ax in (entry if isinstance(entry, tuple) else (entry,)):
+                    factor *= ax_size[ax]
+            out += int(_np.prod(leaf.shape)) * leaf.dtype.itemsize // factor
+        return out
+
+    analytic = {"param_bytes_per_device": sharded_bytes(pstruct, pspecs)}
+    if shape.mode == "train":
+        analytic["opt_moment_bytes_per_device"] = (
+            sharded_bytes(ostruct.mu, mu_specs)
+            + sharded_bytes(ostruct.nu, nu_specs))
+    if shape.mode == "decode":
+        analytic["cache_bytes_per_device"] = sharded_bytes(
+            cache_in, model.cache_specs(shape, dist)[1])
+
+    rec.update({
+        "status": "ok",
+        "lower_s": round(t_lower, 1),
+        "compile_s": round(t_compile, 1),
+        "num_devices": mesh.devices.size,
+        "memory": {
+            "argument_bytes": int(ma.argument_size_in_bytes),
+            "output_bytes": int(ma.output_size_in_bytes),
+            "temp_bytes": int(ma.temp_size_in_bytes),
+            "generated_code_bytes": int(ma.generated_code_size_in_bytes),
+        },
+        "cost": {
+            "flops": float(ca.get("flops", 0.0)),
+            "bytes_accessed": float(ca.get("bytes accessed", 0.0)),
+        },
+        "collectives": {k: {"bytes": v["bytes"], "count": v["count"],
+                            "ops": v["ops"]}
+                        for k, v in coll.items()},
+        "corrected": {
+            "flops": corrected["flops"],
+            "bytes_touched": corrected["bytes_touched"],
+            "collectives": {k: {"bytes": v["bytes"], "count": v["count"],
+                                "wire_bytes": v["wire_bytes"],
+                                "wire_bytes_f32": v["wire_bytes_f32"]}
+                            for k, v in corrected["collectives"].items()},
+            "loop_multipliers": corrected["loop_multipliers"],
+        },
+        "model": {
+            "params": cfg.param_count(),
+            "active_params": cfg.active_param_count(),
+        },
+        "analytic": analytic,
+    })
+    out_path.parent.mkdir(parents=True, exist_ok=True)
+    out_path.write_text(json.dumps(rec, indent=1))
+    tot_coll = sum(v["bytes"] for v in coll.values())
+    print(f"OK {arch} {shape_name} {rec['mesh']} [{variant}] "
+          f"lower={t_lower:.0f}s compile={t_compile:.0f}s "
+          f"temp={ma.temp_size_in_bytes/2**30:.2f}GiB "
+          f"flops={ca.get('flops', 0):.3g} coll={tot_coll/2**20:.1f}MiB")
+    return rec
+
+
+def pair_list():
+    from repro.config import SHAPES
+    from repro.configs import ARCHS, get_config
+    pairs = []
+    for arch in ARCHS[:10]:                 # the 10 assigned archs
+        for shape in SHAPES:
+            pairs.append((arch, shape))
+    # the paper's own models, at their evaluation context (training)
+    for arch in ARCHS[10:]:
+        pairs.append((arch, "train_4k"))
+    return pairs
+
+
+def orchestrate(jobs: int, multi_pod_also: bool = True,
+                only_missing: bool = True):
+    ARTIFACTS.mkdir(parents=True, exist_ok=True)
+    work = []
+    for arch, shape in pair_list():
+        for mp in ([False, True] if multi_pod_also else [False]):
+            mesh_tag = "2x16x16" if mp else "16x16"
+            out = ARTIFACTS / f"{arch}__{shape}__{mesh_tag}.json"
+            if only_missing and out.exists():
+                try:
+                    if json.loads(out.read_text()).get("status") in (
+                            "ok", "skipped"):
+                        continue
+                except Exception:
+                    pass
+            work.append((arch, shape, mp, out))
+    print(f"{len(work)} dry-run jobs, {jobs} parallel")
+    procs = []
+    while work or procs:
+        while work and len(procs) < jobs:
+            arch, shape, mp, out = work.pop(0)
+            cmd = [sys.executable, "-m", "repro.launch.dryrun",
+                   "--arch", arch, "--shape", shape, "--out", str(out)]
+            if mp:
+                cmd.append("--multi-pod")
+            logf = open(str(out) + ".log", "w")
+            procs.append((subprocess.Popen(
+                cmd, stdout=logf, stderr=subprocess.STDOUT,
+                env={**os.environ, "PYTHONPATH": "src"},
+                cwd=str(ARTIFACTS.parents[1])), arch, shape, mp, out, logf,
+                time.time()))
+        still = []
+        for p, arch, shape, mp, out, logf, t0 in procs:
+            if p.poll() is None:
+                if time.time() - t0 > 3600:
+                    p.kill()
+                    print(f"TIMEOUT {arch} {shape} mp={mp}")
+                else:
+                    still.append((p, arch, shape, mp, out, logf, t0))
+            else:
+                logf.close()
+                tag = "2x16x16" if mp else "16x16"
+                ok = out.exists()
+                print(f"[{time.strftime('%H:%M:%S')}] done {arch} {shape} "
+                      f"{tag} rc={p.returncode} artifact={ok}")
+        procs = still
+        time.sleep(3)
+    print("orchestration complete")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--out")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--jobs", type=int, default=6)
+    ap.add_argument("--bucket", type=int, default=0)
+    ap.add_argument("--variant", default="baseline")
+    ap.add_argument("--no-luffy", action="store_true")
+    args = ap.parse_args()
+    if args.all:
+        orchestrate(args.jobs)
+        return
+    mesh_tag = "2x16x16" if args.multi_pod else "16x16"
+    out = Path(args.out) if args.out else \
+        ARTIFACTS / f"{args.arch}__{args.shape}__{mesh_tag}.json"
+    out.parent.mkdir(parents=True, exist_ok=True)
+    try:
+        run_pair(args.arch, args.shape, args.multi_pod, out,
+                 luffy_on=not args.no_luffy, bucket=args.bucket,
+                 variant=args.variant)
+    except Exception as e:
+        rec = {"arch": args.arch, "shape": args.shape, "mesh": mesh_tag,
+               "variant": args.variant, "status": "error",
+               "error": f"{type(e).__name__}: {e}"}
+        out.write_text(json.dumps(rec, indent=1))
+        raise
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,209 @@
+"""Loop-aware analysis of optimized HLO text.
+
+XLA's ``compiled.cost_analysis()`` (and any naive op-counting over the
+HLO) counts a ``while`` body ONCE — but our models scan over layer
+groups, so per-layer FLOPs/bytes/collectives execute ``trip_count``
+times. This module parses the optimized HLO:
+
+  * builds the computation call graph (ENTRY → while bodies → …),
+  * reads each while's trip count from its ``backend_config``
+    ``known_trip_count`` (falling back to the constant in the condition),
+  * multiplies every op's cost by the product of enclosing trip counts,
+
+returning loop-corrected totals: dot FLOPs, bytes touched (≈2×result
+size per op — a traffic proxy), and per-collective operand/on-wire bytes.
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8,
+                "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+                "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+                "f8e4m3fn": 1, "f8e5m2": 1}
+
+_COLLECTIVES = ("all-to-all", "all-gather", "all-reduce",
+                "reduce-scatter", "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COMP_HDR = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s*\(.*->.*\{\s*$")
+_OP_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.+)$")
+_TRIP_BC = re.compile(r'known_trip_count[":{]+n["\s:]+"?(\d+)')
+_TRIP_CONST = re.compile(r"s32\[\]\s+constant\((\d+)\)")
+_DOT_CONTRACT = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_GROUPS_IOTA = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST = re.compile(r"replica_groups=\{\{([^}]*)\}")
+
+
+def _shape_bytes(type_str: str) -> Tuple[int, int]:
+    """(elements, bytes) summed over every shape literal in the string."""
+    elems = total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        elems += n
+        total += n * _DTYPE_BYTES[dt]
+    return elems, total
+
+
+def parse_hlo(text: str):
+    comps: Dict[str, List[Tuple[str, str]]] = {}
+    entry = None
+    cur = None
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        if not line:
+            continue
+        if not line.startswith(" "):
+            m = _COMP_HDR.match(line)
+            if m:
+                cur = m.group(2)
+                comps[cur] = []
+                if m.group(1):
+                    entry = cur
+                continue
+        if line.strip() == "}":
+            continue
+        if cur is not None:
+            m = _OP_RE.match(line)
+            if m:
+                comps[cur].append((m.group(1), m.group(2)))
+    return comps, entry
+
+
+def computation_multipliers(comps, entry) -> Dict[str, float]:
+    mult: Dict[str, float] = {}
+
+    def visit(name: str, m: float):
+        if name not in comps or m <= 0:
+            return
+        mult[name] = max(mult.get(name, 0.0), m)
+        for _, rhs in comps[name]:
+            if re.search(r"\bwhile\(", rhs):
+                trip = 1
+                bc = _TRIP_BC.search(rhs)
+                mc = re.search(r"condition=%?([\w.\-]+)", rhs)
+                if bc:
+                    trip = int(bc.group(1))
+                elif mc and mc.group(1) in comps:
+                    consts = [int(x.group(1)) for _, r2 in comps[mc.group(1)]
+                              for x in _TRIP_CONST.finditer(r2)]
+                    trip = max(consts) if consts else 1
+                mb = re.search(r"body=%?([\w.\-]+)", rhs)
+                if mb:
+                    visit(mb.group(1), m * trip)
+                continue
+            for mm in re.finditer(r"(?:to_apply|calls)=%?([\w.\-]+)", rhs):
+                visit(mm.group(1), m)
+            mm = re.search(r"branch_computations=\{([^}]*)\}", rhs)
+            if mm:
+                for b in mm.group(1).split(","):
+                    visit(b.strip().lstrip("%"), m)
+    visit(entry, 1.0)
+    return mult
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_IOTA.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_LIST.search(line)
+    if m:
+        return len([x for x in m.group(1).split(",") if x.strip()])
+    return 2
+
+
+def _wire_bytes(kind: str, result_bytes: float, g: int) -> float:
+    g = max(g, 1)
+    if kind in ("all-gather", "all-to-all"):
+        return result_bytes * (g - 1) / g
+    if kind == "all-reduce":
+        return 2.0 * result_bytes * (g - 1) / g
+    if kind == "reduce-scatter":
+        return result_bytes * (g - 1)
+    return result_bytes  # collective-permute
+
+
+def analyze(text: str):
+    comps, entry = parse_hlo(text)
+    mult = computation_multipliers(comps, entry)
+    flops = 0.0
+    bytes_touched = 0.0
+    coll = {c: {"bytes": 0.0, "count": 0.0, "wire_bytes": 0.0,
+                "wire_bytes_f32": 0.0, "ops": []}
+            for c in _COLLECTIVES}
+    for cname, ops in comps.items():
+        m = mult.get(cname, 0.0)
+        if m <= 0:
+            continue
+        shape_of = {}
+        for lhs, rhs in ops:
+            if rhs.startswith("("):
+                # tuple result type: span to the matching close paren
+                depth, end = 0, len(rhs)
+                for i, ch in enumerate(rhs):
+                    if ch == "(":
+                        depth += 1
+                    elif ch == ")":
+                        depth -= 1
+                        if depth == 0:
+                            end = i + 1
+                            break
+                head = rhs[:end]
+            else:
+                head = rhs.split("(")[0] if "(" in rhs else rhs
+            elems, b = _shape_bytes(head)
+            shape_of[lhs] = head
+            bytes_touched += 2.0 * b * m
+            if re.search(r"\bdot\(", rhs):
+                k = 1
+                mc = _DOT_CONTRACT.search(rhs)
+                ma = re.search(r"dot\(([^)]*)\)", rhs)
+                if mc and ma:
+                    arg0 = ma.group(1).split(",")[0].strip().lstrip("%")
+                    lh = shape_of.get(arg0)
+                    if lh is None:
+                        for l2, r2 in ops:
+                            if l2 == arg0:
+                                lh = r2.split("(")[0]
+                                break
+                    if lh is not None:
+                        sm = _SHAPE_RE.search(lh)
+                        if sm:
+                            dims = [int(d) for d in sm.group(2).split(",")
+                                    if d]
+                            for c in (int(x) for x in
+                                      mc.group(1).split(",") if x):
+                                if c < len(dims):
+                                    k *= dims[c]
+                flops += 2.0 * elems * k * m
+                continue
+            for c in _COLLECTIVES:
+                if re.search(rf"\b{re.escape(c)}(-start)?\(", rhs):
+                    if f"{c}-done" in rhs:
+                        break
+                    g = _group_size(rhs)
+                    wire = _wire_bytes(c, b, g) * m
+                    coll[c]["bytes"] += b * m
+                    coll[c]["count"] += m
+                    coll[c]["wire_bytes"] += wire
+                    # f32 payloads are usually CPU bf16-dot emulation
+                    # artifacts (converts commuted before the collective);
+                    # track them so the roofline can report a TPU-native
+                    # bf16 estimate (f32 share halves).
+                    if head.lstrip("( ").startswith("f32"):
+                        coll[c]["wire_bytes_f32"] += wire
+                    if len(coll[c]["ops"]) < 24:
+                        coll[c]["ops"].append(
+                            {"bytes": b, "groups": g, "mult": m,
+                             "dtype": head.lstrip("( ").split("[")[0]})
+                    break
+    return {"flops": flops, "bytes_touched": bytes_touched,
+            "collectives": coll,
+            "loop_multipliers": {k: v for k, v in mult.items() if v > 1}}

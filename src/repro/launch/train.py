@@ -1,0 +1,137 @@
+"""End-to-end training driver.
+
+    PYTHONPATH=src python -m repro.launch.train --arch olmoe-1b-7b \
+        --steps 200 --reduced --mesh host --model-axis 4
+
+Runs the full production stack: mesh + sharded params, LUFFY (adaptive
+condensation threshold with host-side rate-bucket switching — one
+compiled executable per bucket, cached), AdamW/Adafactor, checkpointing,
+metrics logging. ``--mesh host`` builds a mesh over the visible devices
+(CPU testing); ``--mesh production`` targets the 16×16 pod (dry-run
+hardware only).
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import time
+from pathlib import Path
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="moe-gpt2")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--reduced", action="store_true",
+                    help="smoke-scale variant of the arch (CPU)")
+    ap.add_argument("--d-model", type=int, default=256)
+    ap.add_argument("--layers", type=int, default=2)
+    ap.add_argument("--experts", type=int, default=0,
+                    help="override expert count (reduced mode)")
+    ap.add_argument("--global-batch", type=int, default=0)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--mesh", choices=["host", "production", "none"],
+                    default="host")
+    ap.add_argument("--model-axis", type=int, default=4)
+    ap.add_argument("--no-condensation", action="store_true")
+    ap.add_argument("--no-migration", action="store_true")
+    ap.add_argument("--optimizer", default="adamw")
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--ckpt", default="")
+    ap.add_argument("--ckpt-every", type=int, default=0)
+    ap.add_argument("--log-file", default="")
+    args = ap.parse_args()
+
+    import jax
+    import jax.numpy as jnp
+    from repro import checkpoint, optim, train_lib
+    from repro.config import (LuffyConfig, OptimConfig, ShapeConfig,
+                              reduced)
+    from repro.configs import get_config
+    from repro.data import SyntheticLM
+    from repro.dist import DistContext, make_dist, single_device
+    from repro.launch.mesh import make_host_mesh, make_production_mesh
+    from repro.models.model import build_model
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = reduced(cfg, num_layers=args.layers, d_model=args.d_model,
+                      max_experts=args.experts or 4,
+                      seq_len_hint=args.seq_len)
+    gb = args.global_batch or (8 if args.reduced else 256)
+    shape = ShapeConfig("train", args.seq_len, gb, "train")
+
+    if args.mesh == "none" or len(jax.devices()) == 1:
+        dist = single_device()
+    else:
+        mesh = (make_production_mesh() if args.mesh == "production"
+                else make_host_mesh(model=args.model_axis))
+        dist = make_dist(mesh, "train", gb, moe_arch=cfg.uses_moe)
+
+    luffy = LuffyConfig(
+        enable_condensation=not args.no_condensation and cfg.uses_moe,
+        enable_migration=not args.no_migration and cfg.uses_moe,
+        condense_group=min(128, args.seq_len),
+        combine_slack=2.0)
+    ocfg = OptimConfig(name=args.optimizer, lr=args.lr,
+                       total_steps=args.steps,
+                       warmup_steps=max(2, args.steps // 20))
+
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    pspecs = model.param_pspecs(dist)
+    if dist.enabled:
+        params = jax.device_put(
+            params, jax.tree.map(lambda s: dist.sharding(s), pspecs))
+    opt_state = optim.init_opt_state(params, ocfg)
+    lstate = train_lib.init_luffy_state()
+    data = SyntheticLM(cfg, shape)
+
+    # one executable per condensation rate bucket, compiled on demand
+    steps_by_bucket = {}
+
+    def get_step(bucket: int):
+        if bucket not in steps_by_bucket:
+            cap = (train_lib.capacity_for_bucket(cfg, shape, dist, luffy,
+                                                 bucket)
+                   if cfg.uses_moe else 8)
+            fn = train_lib.make_train_step(cfg, luffy, ocfg, dist, cap,
+                                           param_pspecs=pspecs)
+            steps_by_bucket[bucket] = jax.jit(fn)
+        return steps_by_bucket[bucket]
+
+    bucket = 0
+    log = []
+    t_start = time.time()
+    observed_rate = 0.0
+    for i in range(args.steps):
+        batch = {k: jnp.asarray(v) for k, v in data.batch(i).items()}
+        t0 = time.time()
+        params, opt_state, lstate, m = get_step(bucket)(
+            params, opt_state, lstate, batch)
+        dt = time.time() - t0
+        m = {k: float(v) for k, v in m.items()}
+        observed_rate = 0.8 * observed_rate + 0.2 * m["condense_rate"]
+        if cfg.uses_moe and luffy.enable_condensation and i >= 3:
+            bucket = train_lib.pick_bucket_host(luffy, 0.0, observed_rate)
+        rec = {"step": i, "time_s": round(dt, 3), "bucket": bucket, **m}
+        log.append(rec)
+        if i % max(1, args.steps // 20) == 0 or i == args.steps - 1:
+            print(f"step {i:5d} loss={m['loss']:.4f} "
+                  f"cond={m['condense_rate']:.2f} bucket={bucket} "
+                  f"local={m['local_frac']:.2f} "
+                  f"drop=({m['dispatch_drop']:.3f},{m['combine_drop']:.3f}) "
+                  f"{dt:.2f}s", flush=True)
+        if args.ckpt and args.ckpt_every and (i + 1) % args.ckpt_every == 0:
+            checkpoint.save(args.ckpt, params, pspecs=pspecs, step=i + 1)
+    print(f"done: {args.steps} steps in {time.time()-t_start:.1f}s; "
+          f"final loss {log[-1]['loss']:.4f}")
+    if args.ckpt:
+        checkpoint.save(args.ckpt, params, pspecs=pspecs, step=args.steps)
+    if args.log_file:
+        Path(args.log_file).write_text(json.dumps(log, indent=1))
+
+
+if __name__ == "__main__":
+    main()

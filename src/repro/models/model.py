@@ -1,0 +1,201 @@
+"""Public model API: build_model(cfg) → Model.
+
+Bundles init / train-loss / prefill / decode with the sharding rules and
+``input_specs`` (ShapeDtypeStruct stand-ins — weak-type-correct,
+shardable, no device allocation) used by the multi-pod dry-run.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro import serve_lib
+from repro.config import LuffyConfig, ModelConfig, ShapeConfig
+from repro.dist import DistContext
+from repro.models import blocks as bk
+from repro.models import transformer as tf
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+
+    # ---- params -----------------------------------------------------------
+    def init(self, key):
+        return tf.init_params(key, self.cfg)
+
+    def init_struct(self):
+        """Parameter ShapeDtypeStructs without allocation (for dry-run)."""
+        return jax.eval_shape(lambda: tf.init_params(
+            jax.random.PRNGKey(0), self.cfg))
+
+    # ---- forward fns -------------------------------------------------------
+    def train_loss(self, params, batch, threshold, *, luffy: LuffyConfig,
+                   dist: DistContext, capacity: int):
+        return tf.forward_train(params, self.cfg, luffy, dist, batch,
+                                threshold, capacity)
+
+    def decode_step(self, params, cache, tokens, *, luffy: LuffyConfig,
+                    dist: DistContext):
+        return serve_lib.decode_step(params, self.cfg, luffy, dist, cache,
+                                     tokens)
+
+    def prefill(self, params, tokens, s_max, *, luffy: LuffyConfig,
+                dist: DistContext, prefix=None, enc_input=None):
+        return serve_lib.prefill(params, self.cfg, luffy, dist, tokens,
+                                 s_max, prefix=prefix, enc_input=enc_input)
+
+    # ---- sharding rules ----------------------------------------------------
+    def param_pspecs(self, dist: DistContext, params_struct=None):
+        cfg = self.cfg
+        if params_struct is None:
+            params_struct = self.init_struct()
+        model_ax = dist.model_axis if dist.enabled else None
+        fsdp = tuple(dist.fsdp_axes) if dist.enabled else ()
+
+        def ax_size(name):
+            return dist.axis_size(name) if dist.enabled else 1
+
+        def rule(path, leaf):
+            keys = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                            for k in path)
+            shape = leaf.shape
+            if not dist.enabled or leaf.ndim == 0:
+                return P()
+            stacked = keys.startswith("layers") or "encoder/layers" in keys
+            off = 1 if (stacked and leaf.ndim >= 2) else 0
+            dims = shape[off:]
+            spec = [None] * leaf.ndim
+
+            if "experts" in keys and len(dims) == 3:
+                # experts over model; FSDP over the F dim (w_up/w_gate
+                # [E,d,F] on dim 2, w_down [E,F,d] on dim 1) — the layout
+                # the Megatron-style decode path consumes in place.
+                spec[off] = model_ax
+                fdim = off + (1 if "w_down" in keys else 2)
+                if fsdp and shape[fdim] % ax_size(fsdp) == 0:
+                    spec[fdim] = fsdp
+                return P(*spec)
+            if "embed/table" in keys:
+                # shard the d dim only: the token gather stays fully local
+                # (vocab sharding would turn every lookup into a masked
+                # gather + batch-replicated all-reduce)
+                if shape[1] % ax_size(model_ax) == 0:
+                    spec[1] = model_ax
+                return P(*spec)
+            if "unembed" in keys:
+                # vocab dim over model: logits stay vocab-sharded through
+                # the chunked cross-entropy (logsumexp psums over model)
+                vdim = leaf.ndim - 1
+                if shape[vdim] % ax_size(model_ax) == 0:
+                    spec[vdim] = model_ax
+                if fsdp and shape[0] % ax_size(fsdp) == 0:
+                    spec[0] = fsdp
+                return P(*spec)
+            if len(dims) >= 2:
+                # generic 2-D weights: FSDP the largest dim
+                big = max(range(len(dims)), key=lambda i: dims[i])
+                if fsdp and dims[big] % ax_size(fsdp) == 0:
+                    spec[off + big] = fsdp
+                return P(*spec)
+            return P()
+
+        return jax.tree_util.tree_map_with_path(rule, params_struct)
+
+    def opt_pspecs(self, dist: DistContext, params_struct=None):
+        """Adam moments: same layout as params (already FSDP-sharded for
+        the big tensors — ZeRO-1 falls out of the FSDP rules)."""
+        return self.param_pspecs(dist, params_struct)
+
+    def opt_moment_pspecs(self, dist: DistContext, ocfg, params_struct=None):
+        """(mu_specs, nu_specs) for the given optimizer. Adafactor's
+        factored nu gets the param spec with the reduced dim dropped."""
+        from repro.optim import _factored
+        if params_struct is None:
+            params_struct = self.init_struct()
+        pspecs = self.param_pspecs(dist, params_struct)
+        if ocfg.name != "adafactor":
+            return pspecs, pspecs
+
+        def nu_spec(leaf, ps):
+            if _factored(leaf):
+                t = tuple(ps) + (None,) * (leaf.ndim - len(tuple(ps)))
+                return {"r": P(*t[:-1]), "c": P(*(t[:-2] + t[-1:]))}
+            return ps
+
+        nu = jax.tree.map(nu_spec, params_struct, pspecs,
+                          is_leaf=lambda x: isinstance(
+                              x, jax.ShapeDtypeStruct))
+        return pspecs, nu
+
+    # ---- input specs (dry-run stand-ins) -----------------------------------
+    def input_specs(self, shape: ShapeConfig, dist: DistContext
+                    ) -> Dict[str, Any]:
+        cfg = self.cfg
+        B, S = shape.global_batch, shape.seq_len
+        ba = dist.batch_axes if (dist.enabled and dist.batch_axes) else None
+        sax = dist.seq_axis if dist.enabled else None
+
+        def sds(shp, dt, spec):
+            sh = dist.sharding(spec) if dist.enabled else None
+            return jax.ShapeDtypeStruct(shp, dt, sharding=sh)
+
+        if shape.mode == "train":
+            # prefix slots displace decoder tokens only for decoder-only
+            # multimodal archs; enc-dec prefixes feed the encoder instead
+            S_tok = S - (cfg.prefix_slots if cfg.kind != "encdec" else 0)
+            out = {
+                "tokens": sds((B, S_tok), jnp.int32, P(ba, sax)),
+                "labels": sds((B, S), jnp.int32, P(ba, sax)),
+                "seq_len": sds((B,), jnp.int32, P(ba)),
+            }
+            if cfg.prefix_slots > 0 and cfg.kind != "encdec":
+                out["prefix"] = sds(
+                    (B, cfg.prefix_slots, cfg.prefix_dim or cfg.d_model),
+                    jnp.float32, P(ba, None, None))
+            if cfg.kind == "encdec":
+                out["enc_input"] = sds(
+                    (B, S, cfg.prefix_dim or cfg.d_model), jnp.float32,
+                    P(ba, sax, None))
+            return out
+        if shape.mode == "prefill":
+            S_tok = S - (cfg.prefix_slots if cfg.kind != "encdec" else 0)
+            out = {"tokens": sds((B, S_tok), jnp.int32, P(ba, sax))}
+            if cfg.prefix_slots > 0 and cfg.kind != "encdec":
+                out["prefix"] = sds(
+                    (B, cfg.prefix_slots, cfg.prefix_dim or cfg.d_model),
+                    jnp.float32, P(ba, None, None))
+            if cfg.kind == "encdec":
+                out["enc_input"] = sds(
+                    (B, S, cfg.prefix_dim or cfg.d_model), jnp.float32,
+                    P(ba, sax, None))
+            return out
+        # decode
+        return {"tokens": sds((B, 1), jnp.int32, P(ba, None))}
+
+    def cache_specs(self, shape: ShapeConfig, dist: DistContext):
+        cfg = self.cfg
+        B, S = shape.global_batch, shape.seq_len
+        enc_len = S if cfg.kind == "encdec" else 0
+        struct = serve_lib.cache_struct(cfg, B, S, enc_len=enc_len,
+                                        as_struct=True)
+        pspecs = serve_lib.cache_pspecs(cfg, dist, S)
+        if not dist.enabled:
+            return struct, pspecs
+
+        def attach(s, p):
+            return jax.ShapeDtypeStruct(s.shape, s.dtype,
+                                        sharding=dist.sharding(p))
+
+        return jax.tree.map(attach, struct, pspecs,
+                            is_leaf=lambda x: isinstance(
+                                x, jax.ShapeDtypeStruct)), pspecs
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    return Model(cfg)

@@ -1,0 +1,287 @@
+"""State-space / linear-attention token mixers.
+
+* ``mamba_*`` — selective SSM (used by hymba's parallel SSM heads)
+  [arXiv:2411.13676 uses Mamba heads with state 16].
+* ``rwkv6_*`` — RWKV-6 "Finch" time-mix with data-dependent decay
+  [arXiv:2404.05892].
+
+Both expose a full-sequence form (``lax.scan`` over time — the recurrence
+IS the paper-faithful semantics; a chunked/associative formulation is a
+perf option handled at the kernel layer) and a single-step decode form
+carrying explicit recurrent state, which is what makes these archs legal
+for the ``long_500k`` shape.
+"""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+
+
+def _scan_unroll() -> int:
+    """lax.scan unroll factor for the SSM time scans (REPRO_SSM_UNROLL).
+    Unrolling k steps keeps k states in registers/VMEM per loop iteration
+    instead of round-tripping the loop-carried state through HBM every
+    token — the chunked-scan insight of the Mamba kernel, expressible in
+    pure XLA. Default 1 (paper-faithful naive scan = the §Perf baseline).
+    """
+    return int(os.environ.get("REPRO_SSM_UNROLL", "1"))
+from repro.models.blocks import dense_init, _dtype
+
+
+# ---------------------------------------------------------------------------
+# Mamba-style selective SSM
+# ---------------------------------------------------------------------------
+
+def mamba_init(key, cfg: ModelConfig):
+    s = cfg.ssm
+    d = cfg.d_model
+    di = s.expand * d
+    dt_rank = s.dt_rank or max(1, math.ceil(d / 16))
+    pdt = _dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 6)
+    a_init = jnp.tile(jnp.arange(1, s.state_dim + 1, dtype=jnp.float32)[None],
+                      (di, 1))
+    return {
+        "in_proj": dense_init(ks[0], d, 2 * di, pdt),
+        "conv_w": (jax.random.normal(ks[1], (s.conv_dim, di)) * 0.1).astype(pdt),
+        "x_proj": dense_init(ks[2], di, dt_rank + 2 * s.state_dim, pdt),
+        "dt_proj": dense_init(ks[3], dt_rank, di, pdt),
+        "dt_bias": jnp.zeros((di,), pdt),
+        "a_log": jnp.log(a_init).astype(jnp.float32),
+        "d_skip": jnp.ones((di,), jnp.float32),
+        "out_proj": dense_init(ks[4], di, d, pdt,
+                               scale=1.0 / math.sqrt(2 * cfg.num_layers)),
+    }
+
+
+def _mamba_inner(p, cfg, x_conv, z, h0):
+    """x_conv: [B,S,di] post-conv pre-activation; returns (y [B,S,di], hT)."""
+    s = cfg.ssm
+    dt_rank = p["dt_proj"].shape[0]
+    cdt = _dtype(cfg.compute_dtype)
+    xc = jax.nn.silu(x_conv).astype(cdt)
+    proj = (xc @ p["x_proj"].astype(cdt)).astype(jnp.float32)
+    dt, bmat, cmat = jnp.split(proj, [dt_rank, dt_rank + s.state_dim], axis=-1)
+    dt = jax.nn.softplus(dt @ p["dt_proj"].astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))      # [B,S,di]
+    a = -jnp.exp(p["a_log"])                                      # [di,N]
+    da = jnp.exp(dt[..., None] * a)                               # [B,S,di,N]
+    dbx = (dt * xc.astype(jnp.float32))[..., None] * bmat[..., None, :]
+
+    S, di = xc.shape[1], dt.shape[-1]
+    use_kernel = (os.environ.get("REPRO_MAMBA_KERNEL", "0") == "1"
+                  and S % 32 == 0 and di % 32 == 0)
+    if use_kernel and S > 1:
+        # fused chunked-scan Pallas kernel (EXPERIMENTS.md §Perf H4):
+        # never materializes the [B,S,di,N] da/dbx intermediates and the
+        # state touches HBM once per chunk. NOTE: assumes zero initial
+        # state (training/prefill); decode keeps the step path below.
+        from repro.kernels import ops as kops
+        y = kops.mamba_scan(dt, xc.astype(jnp.float32),
+                            bmat, cmat, a,
+                            bd=min(256, di), bs=min(256, S))
+        hT = h0  # final state not produced by the fused path
+    else:
+        def step(h, inp):
+            da_t, dbx_t, c_t = inp
+            h = da_t * h + dbx_t                                  # [B,di,N]
+            y = jnp.einsum("bdn,bn->bd", h, c_t)
+            return h, y
+
+        da_s = jnp.moveaxis(da, 1, 0)
+        dbx_s = jnp.moveaxis(dbx, 1, 0)
+        c_s = jnp.moveaxis(cmat, 1, 0)
+        hT, ys = jax.lax.scan(step, h0, (da_s, dbx_s, c_s),
+                              unroll=_scan_unroll())
+        y = jnp.moveaxis(ys, 0, 1)                                # [B,S,di]
+    y = y + p["d_skip"] * xc.astype(jnp.float32)
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    return y.astype(cdt), hT
+
+
+def mamba_apply(p, cfg: ModelConfig, x):
+    """Full-sequence Mamba. x: [B,S,d] -> [B,S,d]."""
+    s = cfg.ssm
+    cdt = _dtype(cfg.compute_dtype)
+    di = p["dt_bias"].shape[0]
+    xz = x.astype(cdt) @ p["in_proj"].astype(cdt)
+    xin, z = jnp.split(xz, 2, axis=-1)
+    # causal depthwise conv
+    w = p["conv_w"].astype(cdt)                                   # [K,di]
+    pad = jnp.pad(xin, ((0, 0), (s.conv_dim - 1, 0), (0, 0)))
+    xconv = sum(pad[:, i:i + xin.shape[1]] * w[i] for i in range(s.conv_dim))
+    h0 = jnp.zeros((x.shape[0], di, s.state_dim), jnp.float32)
+    y, _ = _mamba_inner(p, cfg, xconv, z, h0)
+    return (y @ p["out_proj"].astype(cdt)).astype(x.dtype)
+
+
+def mamba_init_state(cfg: ModelConfig, batch: int):
+    s = cfg.ssm
+    di = s.expand * cfg.d_model
+    return {"h": jnp.zeros((batch, di, s.state_dim), jnp.float32),
+            "conv": jnp.zeros((batch, s.conv_dim - 1, di), jnp.float32)}
+
+
+def mamba_step(p, cfg: ModelConfig, x, state):
+    """Single-token decode. x: [B,1,d]; state carries h and conv tail."""
+    s = cfg.ssm
+    cdt = _dtype(cfg.compute_dtype)
+    xz = x.astype(cdt) @ p["in_proj"].astype(cdt)
+    xin, z = jnp.split(xz, 2, axis=-1)                            # [B,1,di]
+    hist = jnp.concatenate([state["conv"].astype(cdt), xin], axis=1)  # [B,K,di]
+    w = p["conv_w"].astype(cdt)
+    xconv = jnp.einsum("bkd,kd->bd", hist, w)[:, None]
+    y, hT = _mamba_inner(p, cfg, xconv, z, state["h"])
+    new_state = {"h": hT, "conv": hist[:, 1:].astype(jnp.float32)}
+    return (y @ p["out_proj"].astype(cdt)).astype(x.dtype), new_state
+
+
+# ---------------------------------------------------------------------------
+# RWKV-6 (Finch) time-mix with data-dependent decay
+# ---------------------------------------------------------------------------
+
+def rwkv6_init(key, cfg: ModelConfig):
+    d = cfg.d_model
+    hd = cfg.ssm.head_dim
+    n_heads = d // hd
+    pdt = _dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 8)
+    lora = max(32, d // 32)
+    return {
+        "mix_r": jnp.full((d,), 0.5, pdt),
+        "mix_k": jnp.full((d,), 0.5, pdt),
+        "mix_v": jnp.full((d,), 0.5, pdt),
+        "mix_w": jnp.full((d,), 0.5, pdt),
+        "wr": dense_init(ks[0], d, d, pdt),
+        "wk": dense_init(ks[1], d, d, pdt),
+        "wv": dense_init(ks[2], d, d, pdt),
+        "wg": dense_init(ks[3], d, d, pdt),
+        "wo": dense_init(ks[4], d, d, pdt,
+                         scale=1.0 / math.sqrt(2 * cfg.num_layers)),
+        # data-dependent decay LoRA (the Finch contribution)
+        "w_lora_a": dense_init(ks[5], d, lora, pdt),
+        "w_lora_b": dense_init(ks[6], lora, d, pdt, scale=0.1),
+        "w_bias": jnp.full((d,), -6.0, jnp.float32),
+        "u_bonus": (jax.random.normal(ks[7], (n_heads, hd)) * 0.1).astype(jnp.float32),
+        "ln_scale": jnp.ones((d,), pdt),
+    }
+
+
+def _rwkv6_core(p, cfg, r, k, v, w, state):
+    """Recurrent WKV6. r,k,v: [B,S,H,hd]; w decay in (0,1): [B,S,H,hd].
+
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T
+    y_t = r_t^T (S_{t-1} + diag(u) k_t v_t^T)
+    """
+    u = p["u_bonus"]                                              # [H,hd]
+
+    def step(S, inp):
+        r_t, k_t, v_t, w_t = inp                                  # [B,H,hd]
+        kv = k_t[..., :, None] * v_t[..., None, :]                # [B,H,hd,hd]
+        y = jnp.einsum("bhk,bhkv->bhv", r_t, S + u[..., None] * kv)
+        S = w_t[..., None] * S + kv
+        return S, y
+
+    rs, ks_, vs, ws = (jnp.moveaxis(t, 1, 0) for t in (r, k, v, w))
+    ST, ys = jax.lax.scan(step, state, (rs, ks_, vs, ws),
+                          unroll=_scan_unroll())
+    return jnp.moveaxis(ys, 0, 1), ST                             # [B,S,H,hd]
+
+
+def _rwkv6_project(p, cfg, x, x_prev):
+    """Token-shift mixes + projections. x,x_prev: [B,S,d] (x_prev = shifted)."""
+    cdt = _dtype(cfg.compute_dtype)
+    hd = cfg.ssm.head_dim
+    d = x.shape[-1]
+    n_heads = d // hd
+    xc, xp = x.astype(cdt), x_prev.astype(cdt)
+
+    def mix(m):
+        mm = p[m].astype(cdt)
+        return xc * mm + xp * (1 - mm)
+
+    B, S = x.shape[0], x.shape[1]
+    r = (mix("mix_r") @ p["wr"].astype(cdt)).reshape(B, S, n_heads, hd)
+    k = (mix("mix_k") @ p["wk"].astype(cdt)).reshape(B, S, n_heads, hd)
+    v = (mix("mix_v") @ p["wv"].astype(cdt)).reshape(B, S, n_heads, hd)
+    g = jax.nn.silu(xc @ p["wg"].astype(cdt))
+    ww = mix("mix_w").astype(jnp.float32)
+    ww = (ww @ p["w_lora_a"].astype(jnp.float32)) @ p["w_lora_b"].astype(jnp.float32)
+    w = jnp.exp(-jnp.exp(ww + p["w_bias"]))                       # (0,1)
+    w = w.reshape(B, S, n_heads, hd)
+    return (r.astype(jnp.float32), k.astype(jnp.float32),
+            v.astype(jnp.float32), w, g)
+
+
+def _rwkv6_out(p, cfg, y, g, out_dtype):
+    cdt = _dtype(cfg.compute_dtype)
+    B, S = y.shape[0], y.shape[1]
+    d = p["wo"].shape[0]
+    yf = y.reshape(B, S, d)
+    # per-head group norm approximation: RMS over head dim
+    yf = yf * jax.lax.rsqrt(jnp.mean(yf * yf, -1, keepdims=True) + 1e-6)
+    yf = yf * p["ln_scale"].astype(jnp.float32)
+    out = (yf.astype(cdt) * g) @ p["wo"].astype(cdt)
+    return out.astype(out_dtype)
+
+
+def rwkv6_apply(p, cfg: ModelConfig, x):
+    """Full-sequence RWKV6 time-mix. x: [B,S,d]."""
+    hd = cfg.ssm.head_dim
+    n_heads = x.shape[-1] // hd
+    x_prev = jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    r, k, v, w, g = _rwkv6_project(p, cfg, x, x_prev)
+    S0 = jnp.zeros((x.shape[0], n_heads, hd, hd), jnp.float32)
+    y, _ = _rwkv6_core(p, cfg, r, k, v, w, S0)
+    return _rwkv6_out(p, cfg, y, g, x.dtype)
+
+
+def rwkv6_init_state(cfg: ModelConfig, batch: int):
+    hd = cfg.ssm.head_dim
+    n_heads = cfg.d_model // hd
+    return {"S": jnp.zeros((batch, n_heads, hd, hd), jnp.float32),
+            "x_prev": jnp.zeros((batch, 1, cfg.d_model), jnp.float32)}
+
+
+def rwkv6_step(p, cfg: ModelConfig, x, state):
+    """Single-token decode. x: [B,1,d]."""
+    r, k, v, w, g = _rwkv6_project(p, cfg, x, state["x_prev"].astype(x.dtype))
+    y, ST = _rwkv6_core(p, cfg, r, k, v, w, state["S"])
+    new_state = {"S": ST, "x_prev": x.astype(jnp.float32)}
+    return _rwkv6_out(p, cfg, y, g, x.dtype), new_state
+
+
+# ---------------------------------------------------------------------------
+# RWKV channel-mix (the FFN of rwkv archs)
+# ---------------------------------------------------------------------------
+
+def rwkv_cmix_init(key, cfg: ModelConfig):
+    d, dff = cfg.d_model, cfg.d_ff
+    pdt = _dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 3)
+    return {"mix_k": jnp.full((d,), 0.5, pdt),
+            "wk": dense_init(ks[0], d, dff, pdt),
+            "wv": dense_init(ks[1], dff, d, pdt,
+                             scale=1.0 / math.sqrt(2 * cfg.num_layers)),
+            "wr": dense_init(ks[2], d, d, pdt)}
+
+
+def rwkv_cmix_apply(p, cfg: ModelConfig, x, x_prev=None):
+    cdt = _dtype(cfg.compute_dtype)
+    xc = x.astype(cdt)
+    if x_prev is None:
+        xp = jnp.pad(xc, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    else:
+        xp = x_prev.astype(cdt)
+    m = p["mix_k"].astype(cdt)
+    xk = xc * m + xp * (1 - m)
+    k = jnp.square(jax.nn.relu(xk @ p["wk"].astype(cdt)))
+    r = jax.nn.sigmoid(xc @ p["wr"].astype(cdt))
+    return (r * (k @ p["wv"].astype(cdt))).astype(x.dtype)

@@ -1,0 +1,108 @@
+"""Unit + property tests for token condensation (paper §V)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import condensation as cond
+
+
+def test_adaptive_threshold_monotone():
+    """Eq. 2: threshold starts ~0.5 at zero loss decrease and FALLS as the
+    loss drops (condense more later in training)."""
+    l_ini = 10.0
+    prev = np.linspace(10.0, 1.0, 20)
+    th = [float(cond.adaptive_threshold(l_ini, p)) for p in prev]
+    assert abs(th[0] - 0.5) < 1e-6
+    assert all(a >= b for a, b in zip(th, th[1:]))
+    assert th[-1] < 0.3
+
+
+def test_pairwise_cosine_range(rng):
+    x = jnp.asarray(rng.standard_normal((64, 32)), jnp.float32)
+    c = cond.pairwise_cosine(x)
+    assert float(jnp.min(c)) >= -1e-6 and float(jnp.max(c)) <= 1 + 1e-6
+    np.testing.assert_allclose(np.diag(np.asarray(c)), 1.0, atol=1e-5)
+
+
+def test_fast_similarity_skip_rules(rng):
+    """§V-A: cross-expert pairs are 0; s_prev>s1 pairs forced to 1;
+    s_prev<s2 pairs 0; only the uncertain remainder measured."""
+    G, d = 32, 16
+    x = jnp.asarray(rng.standard_normal((G, d)), jnp.float32)
+    e = jnp.asarray(rng.integers(0, 2, G))
+    s_prev = jnp.asarray(rng.random((G, G)), jnp.float32)
+    sim, measured = cond.fast_similarity(x, e, s_prev, 0.8, 0.2)
+    same = np.asarray(e)[:, None] == np.asarray(e)[None, :]
+    sp = np.asarray(s_prev)
+    s = np.asarray(sim)
+    assert (s[~same] == 0).all()
+    assert (s[same & (sp > 0.8)] == 1.0).all()
+    assert (s[same & (sp < 0.2)] == 0.0).all()
+    assert float(measured) < 1.0
+
+
+def test_condense_identical_tokens():
+    """Identical tokens routed to the same expert collapse to one rep."""
+    G = 16
+    x = jnp.ones((G, 8), jnp.float32)
+    e = jnp.zeros((G,), jnp.int32)
+    out = cond.condense_tokens(x, e, 0.9, group_size=G)
+    assert int(out.is_rep.sum()) == 1
+    assert float(out.rate) == 1.0 - 1.0 / G
+    # all tokens point at the same representative
+    assert len(np.unique(np.asarray(out.rep_idx))) == 1
+
+
+def test_condense_distinct_tokens(rng):
+    """Orthogonal tokens condense nothing at a high threshold."""
+    G = 8
+    x = jnp.eye(G, 32, dtype=jnp.float32)
+    e = jnp.zeros((G,), jnp.int32)
+    out = cond.condense_tokens(x, e, 0.95, group_size=G)
+    assert bool(jnp.all(out.is_rep))
+    assert float(out.rate) == 0.0
+    np.testing.assert_array_equal(np.asarray(out.rep_idx), np.arange(G))
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.sampled_from([8, 16, 32]),
+       st.integers(1, 4), st.floats(0.3, 0.95))
+def test_condense_properties(seed, G, n_experts, threshold):
+    """Properties: rep_idx is a valid projection (rep of a rep is itself),
+    reps never point across expert boundaries or groups, rate matches."""
+    r = np.random.default_rng(seed)
+    T = 2 * G
+    x = jnp.asarray(r.standard_normal((T, 12)), jnp.float32)
+    e = jnp.asarray(r.integers(0, n_experts, T), jnp.int32)
+    out = cond.condense_tokens(x, e, threshold, group_size=G)
+    rep = np.asarray(out.rep_idx)
+    # projection: rep[rep[i]] == rep[i]
+    np.testing.assert_array_equal(rep[rep], rep)
+    # same expert + same group
+    ee = np.asarray(e)
+    assert (ee[rep] == ee).all()
+    assert (rep // G == np.arange(T) // G).all()
+    # rate consistency
+    np.testing.assert_allclose(
+        float(out.rate), 1.0 - np.mean(rep == np.arange(T)), atol=1e-6)
+
+
+def test_uncondense_semantics(rng):
+    y = jnp.asarray(rng.standard_normal((8, 4)), jnp.float32)
+    rep = jnp.asarray([0, 0, 2, 2, 4, 4, 6, 6], jnp.int32)
+    out = np.asarray(cond.uncondense(y, rep))
+    np.testing.assert_array_equal(out[1], np.asarray(y)[0])
+    np.testing.assert_array_equal(out[3], np.asarray(y)[2])
+
+
+def test_kernel_path_matches_jnp(rng):
+    """condense_tokens(use_kernel=True) == use_kernel=False."""
+    G, d = 128, 64
+    x = jnp.asarray(rng.standard_normal((G, d)), jnp.float32)
+    e = jnp.asarray(rng.integers(0, 4, G), jnp.int32)
+    a = cond.condense_tokens(x, e, 0.7, group_size=G, use_kernel=False)
+    b = cond.condense_tokens(x, e, 0.7, group_size=G, use_kernel=True)
+    np.testing.assert_array_equal(np.asarray(a.rep_idx),
+                                  np.asarray(b.rep_idx))

@@ -1,0 +1,72 @@
+"""Property tests on the gating/dispatch substrate (hypothesis)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import assume, given, settings, strategies as st
+
+from repro.core.gating import (dispatch_positions, expert_load, gate_apply,
+                               gate_init)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.sampled_from([2, 4, 8]),
+       st.sampled_from([1, 2, 4]))
+def test_gate_invariants(seed, E, k):
+    assume(k <= E)
+    r = np.random.default_rng(seed)
+    x = jnp.asarray(r.standard_normal((32, 16)), jnp.float32)
+    p = gate_init(jax.random.PRNGKey(seed % 7), 16, E)
+    out = gate_apply(p, x, k)
+    idx = np.asarray(out.expert_idx)
+    w = np.asarray(out.gate_weights)
+    # choices are valid expert ids and distinct per token
+    assert idx.min() >= 0 and idx.max() < E
+    for row in idx:
+        assert len(set(row.tolist())) == k
+    # combine weights are a distribution over the k choices
+    np.testing.assert_allclose(w.sum(1), 1.0, atol=1e-5)
+    assert (w >= 0).all()
+    # aux loss ~ E * sum f_e p_e: >= ~1 up to finite-sample f vs p skew
+    assert float(out.aux_loss) >= 0.9
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.sampled_from([2, 4]),
+       st.sampled_from([1, 2]))
+def test_dispatch_positions_are_unique_slots(seed, E, k):
+    assume(k <= E)
+    """(expert, position) pairs must be unique among kept rows, positions
+    dense from 0, and primary (k=0) copies occupy the earliest slots."""
+    r = np.random.default_rng(seed)
+    T = 24
+    idx = jnp.asarray(r.integers(0, E, (T, k)), jnp.int32)
+    keep = jnp.asarray(r.random((T, k)) < 0.8)
+    pos = np.asarray(dispatch_positions(idx, keep, E))
+    e = np.asarray(idx)
+    kp = np.asarray(keep)
+    seen = set()
+    per_expert_counts = np.zeros(E, int)
+    for t in range(T):
+        for j in range(k):
+            if kp[t, j]:
+                key = (e[t, j], pos[t, j])
+                assert key not in seen, key
+                seen.add(key)
+                per_expert_counts[e[t, j]] += 1
+    # positions are dense 0..count-1 per expert
+    for ex in range(E):
+        ps = sorted(pos[(e == ex) & kp])
+        assert ps == list(range(per_expert_counts[ex]))
+    # priority: every kept primary row has a position smaller than any
+    # kept secondary row of the same expert
+    if k > 1:
+        for ex in range(E):
+            m_p = (e[:, 0] == ex) & kp[:, 0]
+            m_s = (e[:, 1:] == ex) & kp[:, 1:]
+            prim = pos[:, 0][m_p]
+            sec = pos[:, 1:][m_s]
+            if len(prim) and len(sec):
+                assert prim.max() < sec.min()
+    # load accounting matches
+    load = np.asarray(expert_load(idx, keep, E))
+    np.testing.assert_array_equal(load, per_expert_counts)

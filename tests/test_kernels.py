@@ -1,0 +1,111 @@
+"""Per-kernel allclose vs the pure-jnp oracles, swept over shapes/dtypes
+(interpret=True executes the Pallas kernel bodies on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+
+@pytest.mark.parametrize("G,d", [(128, 256), (256, 768), (128, 640)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_masked_similarity(rng, G, d, dtype):
+    x = jnp.asarray(rng.standard_normal((G, d)), dtype)
+    e = jnp.asarray(rng.integers(0, 4, G))
+    mask = e[:, None] == e[None, :]
+    got = ops.masked_similarity(x, mask, interpret=True)
+    want = ref.masked_similarity_ref(x, mask)
+    tol = 1e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=tol, rtol=tol)
+
+
+def test_similarity_tile_earlyout(rng):
+    """Fully-masked tiles must be exactly zero (skipped)."""
+    G, d = 256, 128
+    x = jnp.asarray(rng.standard_normal((G, d)), jnp.float32)
+    mask = jnp.zeros((G, G), bool).at[:128, :128].set(True)
+    got = ops.masked_similarity(x, mask, bg=128, interpret=True)
+    assert float(jnp.max(jnp.abs(got[128:, :]))) == 0.0
+    assert float(jnp.max(jnp.abs(got[:, 128:]))) == 0.0
+    want = ref.masked_similarity_ref(x, mask)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5)
+
+
+@pytest.mark.parametrize("E,R,d,F", [(2, 128, 128, 256), (4, 256, 256, 512),
+                                     (1, 128, 512, 1024)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("act", ["silu", "gelu"])
+def test_expert_ffn(rng, E, R, d, F, dtype, act):
+    h = jnp.asarray(rng.standard_normal((E, R, d)), dtype)
+    wu = jnp.asarray(rng.standard_normal((E, d, F)) * 0.05, dtype)
+    wg = jnp.asarray(rng.standard_normal((E, d, F)) * 0.05, dtype)
+    wd = jnp.asarray(rng.standard_normal((E, F, d)) * 0.05, dtype)
+    got = ops.expert_ffn(h, wu, wg, wd, act, interpret=True)
+    want = ref.expert_ffn_ref(h, wu, wg, wd, act)
+    tol = 1e-4 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               atol=tol, rtol=tol)
+
+
+@pytest.mark.parametrize("T,d", [(256, 64), (512, 128), (1024, 32)])
+def test_gather_rows(rng, T, d):
+    y = jnp.asarray(rng.standard_normal((T, d)), jnp.float32)
+    idx = jnp.asarray(rng.integers(0, T, T), jnp.int32)
+    got = ops.gather_rows(y, idx, interpret=True)
+    want = ref.gather_rows_ref(y, idx)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("S,hd", [(128, 32), (256, 64)])
+@pytest.mark.parametrize("causal,window", [(True, None), (True, 32),
+                                           (False, None)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention(rng, S, hd, causal, window, dtype):
+    B, H = 2, 2
+    q = jnp.asarray(rng.standard_normal((B, S, H, hd)), dtype)
+    k = jnp.asarray(rng.standard_normal((B, S, H, hd)), dtype)
+    v = jnp.asarray(rng.standard_normal((B, S, H, hd)), dtype)
+    got = ops.flash_attention(q, k, v, causal=causal, window=window,
+                              bq=64, bk=64, interpret=True)
+    want = ref.flash_attention_ref(q, k, v, causal=causal, window=window)
+    tol = 2e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               atol=tol, rtol=tol)
+
+
+@pytest.mark.parametrize("B,S,di,N", [(1, 32, 32, 8), (2, 64, 64, 16),
+                                      (2, 128, 32, 16)])
+def test_mamba_scan(rng, B, S, di, N):
+    dt = jnp.asarray(np.abs(rng.standard_normal((B, S, di))) * 0.1,
+                     jnp.float32)
+    x = jnp.asarray(rng.standard_normal((B, S, di)), jnp.float32)
+    bm = jnp.asarray(rng.standard_normal((B, S, N)), jnp.float32)
+    cm = jnp.asarray(rng.standard_normal((B, S, N)), jnp.float32)
+    a = -jnp.exp(jnp.asarray(rng.standard_normal((di, N)), jnp.float32))
+    got = ops.mamba_scan(dt, x, bm, cm, a, bd=32, bs=32, interpret=True)
+    want = ref.mamba_scan_ref(dt, x, bm, cm, a)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_mamba_kernel_path_in_model(rng, monkeypatch):
+    """hymba forward with REPRO_MAMBA_KERNEL=1 == the lax.scan path."""
+    import os
+    from repro.config import reduced
+    from repro.configs import get_config
+    from repro.models import ssm as ssm_mod
+    cfg = reduced(get_config("hymba-1.5b"))
+    import dataclasses
+    cfg = dataclasses.replace(cfg, compute_dtype="float32")
+    p = ssm_mod.mamba_init(jax.random.PRNGKey(0), cfg)
+    x = jnp.asarray(rng.standard_normal((2, 64, cfg.d_model)), jnp.float32)
+    monkeypatch.setenv("REPRO_MAMBA_KERNEL", "0")
+    y0 = ssm_mod.mamba_apply(p, cfg, x)
+    monkeypatch.setenv("REPRO_MAMBA_KERNEL", "1")
+    y1 = ssm_mod.mamba_apply(p, cfg, x)
+    np.testing.assert_allclose(np.asarray(y0), np.asarray(y1),
+                               atol=2e-4, rtol=2e-4)

@@ -1,0 +1,86 @@
+"""Sequence migration (paper §IV): Algorithm 1 numpy reference vs the
+traceable device version, plan validity, traffic/cost behaviour."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import migration as mig
+
+
+def _random_instance(r, n_slots, M, bias=3.0):
+    counts = r.random((n_slots, M)) ** bias
+    counts = (counts / counts.sum(1, keepdims=True) * 100).astype(np.int64)
+    lens = r.integers(10, 100, n_slots)
+    return counts.astype(np.float64), lens.astype(np.int64)
+
+
+def test_t_att_cost_model():
+    """Eq. 1: (3BLd^2 + 2BL^2d)/P."""
+    got = float(mig.t_att(2, 128, 64, 1e9))
+    want = (3 * 2 * 128 * 64**2 + 2 * 2 * 128**2 * 64) / 1e9
+    assert abs(got - want) < 1e-9
+
+
+def test_identity_plan():
+    p = mig.identity_plan(8, 2)
+    np.testing.assert_array_equal(np.asarray(p.perm), np.arange(8))
+    np.testing.assert_array_equal(np.asarray(p.assign),
+                                  np.arange(8) // 2)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.sampled_from([2, 4, 8]),
+       st.sampled_from([1, 2, 4]))
+def test_plan_np_properties(seed, M, n_per_dev):
+    """The plan is a bijection respecting per-device capacity, and never
+    increases combine traffic vs no migration."""
+    r = np.random.default_rng(seed)
+    n_slots = M * n_per_dev
+    counts, lens = _random_instance(r, n_slots, M)
+    plan = mig.plan_migration_np(counts, lens, n_per_dev, q=2)
+    perm = np.asarray(plan.perm)
+    assert sorted(perm.tolist()) == list(range(n_slots))       # bijection
+    assign = np.asarray(plan.assign)
+    assert (np.bincount(assign, minlength=M) == n_per_dev).all()
+    assert float(plan.traffic_after) <= float(plan.traffic_before) + 1e-6
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.sampled_from([2, 4]),
+       st.sampled_from([1, 2]))
+def test_plan_jax_matches_np(seed, M, n_per_dev):
+    """Device-side Algorithm 1 == host-side Algorithm 1 (same greedy)."""
+    r = np.random.default_rng(seed)
+    n_slots = M * n_per_dev
+    counts, lens = _random_instance(r, n_slots, M)
+    # perturb to avoid ties (tie-breaking order may differ)
+    counts = counts + r.random(counts.shape) * 1e-3
+    lens = lens + np.arange(n_slots) * 0  # keep ints distinct enough
+    p_np = mig.plan_migration_np(counts, lens, n_per_dev, q=2)
+    p_jx = mig.plan_migration_jax(jnp.asarray(counts),
+                                  jnp.asarray(lens, jnp.float32),
+                                  n_per_dev, q=2)
+    np.testing.assert_array_equal(np.asarray(p_jx.assign),
+                                  np.asarray(p_np.assign))
+    np.testing.assert_array_equal(np.asarray(p_jx.perm),
+                                  np.asarray(p_np.perm))
+    # traffic values are token counts; near-zero instances differ only by
+    # f32-vs-f64 rounding — atol covers them
+    np.testing.assert_allclose(float(p_jx.traffic_after),
+                               float(p_np.traffic_after), rtol=1e-4,
+                               atol=1e-2)
+
+
+def test_migration_prefers_majority_device():
+    """A sequence with 90% of its tokens on device 2 should be homed
+    there (q covers it, capacity allows)."""
+    M, n_per = 4, 1
+    counts = np.full((4, 4), 5.0)
+    counts[0] = [1, 1, 1, 90]
+    counts[3] = [90, 1, 1, 1]
+    lens = np.array([50, 10, 10, 50])
+    plan = mig.plan_migration_np(counts, lens, n_per, q=2)
+    assign = np.asarray(plan.assign)
+    assert assign[0] == 3
+    assert assign[3] == 0

@@ -1,0 +1,139 @@
+"""Multi-device correctness, run in subprocesses with 8 host devices
+(XLA_FLAGS must be set before jax initializes, hence not in-process —
+and conftest deliberately leaves the main process at 1 device).
+
+Covers: sharded-vanilla == single-device, migration loss-invariance +
+traffic ledger, condensation+migration training convergence, decode
+all-reduce MoE == oracle.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+
+
+def _run(body: str) -> str:
+    script = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import jax, jax.numpy as jnp
+        import dataclasses
+        import numpy as np
+        from repro.configs import get_config
+        from repro.config import reduced, LuffyConfig, ShapeConfig, OptimConfig
+        from repro.models.model import build_model
+        from repro.dist import DistContext, single_device
+        from repro.data import SyntheticLM
+        from repro.core.moe_layer import capacity_for
+
+        cfg = reduced(get_config("moe-gpt2"), num_layers=2)
+        cfg = dataclasses.replace(cfg, compute_dtype="float32")
+        model = build_model(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        shape = ShapeConfig("t", 128, 8, "train")
+        data = SyntheticLM(cfg, shape)
+        b = {k: jnp.asarray(v) for k, v in data.batch(0).items()}
+        mesh = jax.make_mesh((2, 4), ("data", "model"),
+                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        dist = DistContext(mesh, batch_axes=("data", "model"),
+                           seq_axis=None, fsdp_axes=("data",))
+    """) + textwrap.dedent(body)
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    out = subprocess.run([sys.executable, "-c", script], cwd=ROOT,
+                         capture_output=True, text=True, env=env,
+                         timeout=1200)
+    assert out.returncode == 0, out.stderr[-3000:]
+    return out.stdout
+
+
+def test_sharded_vanilla_matches_single_device():
+    out = _run("""
+        off = LuffyConfig(enable_condensation=False, enable_migration=False)
+        cap1 = capacity_for(cfg.moe, 8*128, cfg.moe.num_experts, slack=8.0)
+        cap8 = capacity_for(cfg.moe, 128, cfg.moe.num_experts, slack=8.0)
+        l1, m1 = model.train_loss(params, b, jnp.float32(1.0), luffy=off,
+                                  dist=single_device(), capacity=cap1)
+        l2, m2 = jax.jit(lambda p, bb: model.train_loss(
+            p, bb, jnp.float32(1.0), luffy=off, dist=dist,
+            capacity=cap8))(params, b)
+        assert abs(float(l1) - float(l2)) < 5e-3, (float(l1), float(l2))
+        assert float(m2["dispatch_drop"]) == 0.0
+        print("OK", float(l1), float(l2))
+    """)
+    assert "OK" in out
+
+
+def test_migration_is_loss_invariant_and_reduces_traffic():
+    out = _run("""
+        off = LuffyConfig(enable_condensation=False, enable_migration=False)
+        mig = LuffyConfig(enable_condensation=False, enable_migration=True,
+                          combine_slack=4.0)
+        cap8 = capacity_for(cfg.moe, 128, cfg.moe.num_experts, slack=8.0)
+        l0, m0 = jax.jit(lambda p, bb: model.train_loss(
+            p, bb, jnp.float32(1.0), luffy=off, dist=dist,
+            capacity=cap8))(params, b)
+        l1, m1 = jax.jit(lambda p, bb: model.train_loss(
+            p, bb, jnp.float32(1.0), luffy=mig, dist=dist,
+            capacity=cap8))(params, b)
+        assert abs(float(l0) - float(l1)) < 5e-3, (float(l0), float(l1))
+        assert float(m1["combine_drop"]) == 0.0
+        assert float(m1["traffic_after"]) <= float(m1["traffic_before"])
+        assert float(m1["local_frac"]) >= 1.0 / 4 - 1e-6
+        print("OK", float(m1["traffic_before"]), float(m1["traffic_after"]),
+              float(m1["local_frac"]))
+    """)
+    assert "OK" in out
+
+
+def test_full_luffy_training_converges_sharded():
+    out = _run("""
+        from repro import optim, train_lib
+        luffy = LuffyConfig(condense_group=64, combine_slack=2.0)
+        cap8 = capacity_for(cfg.moe, 128, cfg.moe.num_experts)
+        ocfg = OptimConfig(total_steps=20, warmup_steps=2)
+        pspecs = model.param_pspecs(dist)
+        step = jax.jit(train_lib.make_train_step(
+            cfg, luffy, ocfg, dist, cap8, param_pspecs=pspecs))
+        p = jax.device_put(params, jax.tree.map(
+            lambda s: dist.sharding(s), pspecs))
+        ost = optim.init_opt_state(p, ocfg)
+        lst = train_lib.init_luffy_state()
+        losses = []
+        for i in range(12):
+            bb = {k: jnp.asarray(v) for k, v in data.batch(i).items()}
+            p, ost, lst, m = step(p, ost, lst, bb)
+            losses.append(float(m["loss"]))
+        assert all(np.isfinite(losses))
+        assert losses[-1] < losses[0] - 0.2, losses
+        assert float(m["condense_rate"]) > 0.0
+        print("OK", losses[0], losses[-1])
+    """)
+    assert "OK" in out
+
+
+def test_decode_moe_allreduce_matches_dense_path():
+    out = _run("""
+        from repro import serve_lib
+        from repro.data import make_decode_batch
+        luffy = LuffyConfig()
+        B = 8
+        cache1 = serve_lib.cache_struct(cfg, B, 64, as_struct=False)
+        cache2 = serve_lib.cache_struct(cfg, B, 64, as_struct=False)
+        tok = jnp.asarray(np.random.default_rng(0).integers(
+            1, cfg.vocab_size, (B, 1)), jnp.int32)
+        lg1, _ = serve_lib.decode_step(params, cfg, luffy, single_device(),
+                                       cache1, tok)
+        ddist = DistContext(mesh, batch_axes=("data",), seq_axis="model",
+                            fsdp_axes=("data",))
+        lg2, _ = jax.jit(lambda p, c, t: serve_lib.decode_step(
+            p, cfg, luffy, ddist, c, t))(params, cache2, tok)
+        d = float(jnp.max(jnp.abs(lg1 - lg2)))
+        assert d < 1e-3, d
+        print("OK", d)
+    """)
+    assert "OK" in out

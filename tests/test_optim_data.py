@@ -1,0 +1,96 @@
+"""Optimizer + blocks unit tests and hypothesis properties."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro import optim
+from repro.config import OptimConfig
+from repro.models import blocks as bk
+
+
+def _quad_problem(name):
+    target = jnp.asarray(np.random.default_rng(0).standard_normal((8, 8)),
+                         jnp.float32)
+    params = {"w": jnp.zeros((8, 8), jnp.float32)}
+    ocfg = OptimConfig(name=name, lr=0.1, warmup_steps=1, total_steps=200,
+                       weight_decay=0.0)
+    state = optim.init_opt_state(params, ocfg)
+
+    def loss(p):
+        return jnp.mean((p["w"] - target) ** 2)
+
+    for _ in range(60):
+        g = jax.grad(loss)(params)
+        params, state, m = optim.update(params, g, state, ocfg)
+    return float(loss(params))
+
+
+@pytest.mark.parametrize("name", ["adamw", "adafactor", "sgd"])
+def test_optimizers_minimize_quadratic(name):
+    assert _quad_problem(name) < 0.05
+
+
+def test_adafactor_state_is_factored():
+    params = {"big": jnp.zeros((256, 512)), "small": jnp.zeros((16,))}
+    st_ = optim.init_opt_state(params, OptimConfig(name="adafactor"))
+    assert isinstance(st_.nu["big"], dict)
+    assert st_.nu["big"]["r"].shape == (256,)
+    assert st_.nu["big"]["c"].shape == (512,)
+    assert st_.mu["big"].dtype == jnp.bfloat16
+    assert st_.nu["small"].shape == (16,)
+
+
+def test_grad_clip():
+    g = {"a": jnp.full((10,), 10.0)}
+    clipped, norm = optim.clip_by_global_norm(g, 1.0)
+    assert abs(float(norm) - 10.0 * np.sqrt(10)) < 1e-3
+    total = float(jnp.sqrt(jnp.sum(clipped["a"] ** 2)))
+    assert abs(total - 1.0) < 1e-5
+
+
+def test_lr_schedule_shape():
+    cfg = OptimConfig(lr=1.0, warmup_steps=10, total_steps=100)
+    lrs = [float(optim.lr_schedule(cfg, jnp.int32(s))) for s in range(100)]
+    assert lrs[0] < lrs[9] <= 1.0 + 1e-6
+    assert lrs[99] < lrs[50] < lrs[12]
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.sampled_from([64, 128]),
+       st.sampled_from([None, 16, 32]), st.booleans())
+def test_chunked_attention_property(seed, S, window, causal):
+    """attend_chunked == attend for arbitrary shapes/windows/causality."""
+    r = np.random.default_rng(seed)
+    B, H, KV, hd = 2, 2, 1, 16
+    q = jnp.asarray(r.standard_normal((B, S, H, hd)), jnp.float32)
+    k = jnp.asarray(r.standard_normal((B, S, KV, hd)), jnp.float32)
+    v = jnp.asarray(r.standard_normal((B, S, KV, hd)), jnp.float32)
+    pos = jnp.arange(S, dtype=jnp.int32)
+    posb = jnp.broadcast_to(pos[None], (B, S))
+    mask = bk.make_attn_mask(posb, posb, causal=causal, window=window)
+    o1 = bk.attend(q, k, v, mask, 0.25)
+    o2 = bk.attend_chunked(q, k, v, pos, pos, 0.25, causal=causal,
+                           window=window, chunked_window=False,
+                           chunk_q=32, chunk_k=32)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), atol=1e-5)
+
+
+def test_rope_rotation_invariant():
+    """RoPE preserves norms and relative-position inner products."""
+    r = np.random.default_rng(0)
+    x = jnp.asarray(r.standard_normal((1, 8, 2, 32)), jnp.float32)
+    pos = jnp.arange(8, dtype=jnp.int32)[None]
+    y = bk.apply_rope(x, pos, 10_000.0)
+    np.testing.assert_allclose(np.linalg.norm(np.asarray(x), axis=-1),
+                               np.linalg.norm(np.asarray(y), axis=-1),
+                               rtol=1e-5)
+    # relative property: <R(p)q, R(p+k)v> independent of p
+    q = x[:, 0:1]
+    dots = []
+    for p in [0, 3]:
+        qq = bk.apply_rope(q, jnp.asarray([[p]]), 10_000.0)
+        vv = bk.apply_rope(q, jnp.asarray([[p + 2]]), 10_000.0)
+        dots.append(float(jnp.sum(qq * vv)))
+    assert abs(dots[0] - dots[1]) < 1e-3

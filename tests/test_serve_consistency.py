@@ -1,0 +1,93 @@
+"""Decode-path consistency: token-by-token decode must reproduce the
+full-sequence forward — validates SSM state threading (mamba, rwkv6),
+the KV ring buffer for windowed layers, and chunked-local attention."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import serve_lib
+from repro.config import AttnConfig, LuffyConfig, reduced
+from repro.configs import get_config
+from repro.dist import single_device
+from repro.models import ssm as ssm_mod
+from repro.models.model import build_model
+
+DIST = single_device()
+LUFFY = LuffyConfig(enable_condensation=False, enable_migration=False)
+
+
+def _decode_logits_chain(cfg, params, toks, s_max):
+    cache = serve_lib.cache_struct(cfg, toks.shape[0], s_max,
+                                   as_struct=False)
+    lg = None
+    for t in range(toks.shape[1]):
+        lg, cache = serve_lib.decode_step(params, cfg, LUFFY, DIST, cache,
+                                          toks[:, t:t + 1])
+    return lg
+
+
+@pytest.mark.parametrize("arch", ["rwkv6-3b", "hymba-1.5b"])
+def test_ssm_decode_matches_prefill(arch):
+    cfg = dataclasses.replace(reduced(get_config(arch)),
+                              compute_dtype="float32")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    B, S = 2, 12
+    r = np.random.default_rng(0)
+    toks = jnp.asarray(r.integers(1, cfg.vocab_size, (B, S)), jnp.int32)
+    lg_full, _ = serve_lib.prefill(params, cfg, LUFFY, DIST, toks, S)
+    lg_chain = _decode_logits_chain(cfg, params, toks, S + 2)
+    np.testing.assert_allclose(np.asarray(lg_chain), np.asarray(lg_full),
+                               atol=5e-3, rtol=5e-3)
+
+
+def test_window_ring_buffer_matches_full_cache():
+    """A windowed layer with ring cache (W < S) must equal the same
+    model decoded with an oversized (full) cache."""
+    cfg = reduced(get_config("starcoder2-15b"))
+    cfg = dataclasses.replace(cfg, compute_dtype="float32")
+    # shrink the window below the sequence length so the ring wraps
+    cfg = dataclasses.replace(
+        cfg, attn=dataclasses.replace(cfg.attn, window_pattern=(8,)))
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(1))
+    B, S = 2, 20
+    r = np.random.default_rng(1)
+    toks = jnp.asarray(r.integers(1, cfg.vocab_size, (B, S)), jnp.int32)
+    # ring cache: W = 8 (wraps twice)
+    lg_ring = _decode_logits_chain(cfg, params, toks, 8)
+    # full-cache reference: window pattern widened so W == s_max but the
+    # ATTENTION mask still limits to 8 — emulate by keeping window=8 and
+    # a cache of size >= S (no wrap; mask does the limiting)
+    cache = serve_lib.cache_struct(cfg, B, 32, as_struct=False)
+    lg_full = None
+    for t in range(S):
+        lg_full, cache = serve_lib.decode_step(params, cfg, LUFFY, DIST,
+                                               cache, toks[:, t:t + 1])
+    np.testing.assert_allclose(np.asarray(lg_ring), np.asarray(lg_full),
+                               atol=2e-3, rtol=2e-3)
+
+
+def test_chunked_local_decode_matches_prefill():
+    """llama4-style chunked-local attention: decode over chunk
+    boundaries must match the full forward."""
+    cfg = reduced(get_config("llama4-maverick-400b-a17b"))
+    cfg = dataclasses.replace(cfg, compute_dtype="float32")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(2))
+    B, S = 2, 16   # window (reduced) = 64 -> single chunk; shrink it
+    cfg2 = dataclasses.replace(
+        cfg, attn=dataclasses.replace(
+            cfg.attn, window_pattern=(6, 6, 6, None)))
+    # random tokens: degenerate identical tokens all route to one expert
+    # and the PREFILL hits capacity drops that single-token decode never
+    # sees — a real (documented) capacity semantics difference, not a bug
+    r2 = np.random.default_rng(7)
+    toks = jnp.asarray(r2.integers(1, cfg.vocab_size, (B, S)), jnp.int32)
+    lg_full, _ = serve_lib.prefill(params, cfg2, LUFFY, DIST, toks, S)
+    lg_chain = _decode_logits_chain(cfg2, params, toks, S + 2)
+    np.testing.assert_allclose(np.asarray(lg_chain), np.asarray(lg_full),
+                               atol=5e-3, rtol=5e-3)

@@ -1,0 +1,63 @@
+"""Per-architecture smoke tests (deliverable f): a REDUCED variant of
+each assigned family (<=2-ish layers, d_model<=512, <=4 experts) runs one
+forward/train step and one decode step on CPU; output shapes + no NaNs.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import optim, serve_lib, train_lib
+from repro.config import LuffyConfig, OptimConfig, ShapeConfig, reduced
+from repro.configs import ARCHS, get_config
+from repro.core.moe_layer import capacity_for
+from repro.data import SyntheticLM, make_decode_batch
+from repro.dist import single_device
+from repro.models.model import build_model
+
+SHAPE = ShapeConfig("smoke", 128, 4, "train")
+LUFFY = LuffyConfig(condense_group=64)
+DIST = single_device()
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_arch_train_step(arch):
+    cfg = reduced(get_config(arch))
+    assert cfg.d_model <= 512 and cfg.num_layers <= 6
+    if cfg.moe:
+        assert cfg.moe.num_experts <= 4
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    data = SyntheticLM(cfg, SHAPE)
+    b = {k: jnp.asarray(v) for k, v in data.batch(0).items()}
+    cap = (capacity_for(cfg.moe, 4 * 128, cfg.moe.num_experts)
+           if cfg.moe else 8)
+    ocfg = OptimConfig(total_steps=10, warmup_steps=2)
+    step = train_lib.make_train_step(cfg, LUFFY, ocfg, DIST, cap)
+    ost = optim.init_opt_state(params, ocfg)
+    lst = train_lib.init_luffy_state()
+    p2, _, _, m = step(params, ost, lst, b)
+    assert np.isfinite(float(m["loss"]))
+    for leaf in jax.tree.leaves(p2):
+        if jnp.issubdtype(leaf.dtype, jnp.floating):
+            assert not bool(jnp.any(jnp.isnan(leaf))), arch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_arch_decode_step(arch):
+    cfg = reduced(get_config(arch))
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    B, S_max = 4, 128
+    enc_len = 32 if cfg.kind == "encdec" else 0
+    cache = serve_lib.cache_struct(cfg, B, S_max, enc_len=enc_len,
+                                   as_struct=False)
+    tok = jnp.asarray(
+        make_decode_batch(cfg, ShapeConfig("d", 128, B, "decode"))["tokens"])
+    logits, cache2 = serve_lib.decode_step(params, cfg, LUFFY, DIST, cache,
+                                           tok)
+    assert logits.shape == (B, cfg.vocab_size)
+    assert not bool(jnp.any(jnp.isnan(logits))), arch
+    assert int(cache2["pos"]) == 1
