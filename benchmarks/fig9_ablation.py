@@ -35,8 +35,8 @@ model = build_model(cfg)
 params = model.init(jax.random.PRNGKey(0))
 shape = ShapeConfig("b", 256, 8, "train")
 data = SyntheticLM(cfg, shape)
-mesh = jax.make_mesh((1, 8), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+from repro.comm import make_mesh
+mesh = make_mesh((1, 8), ("data", "model"))
 dist = DistContext(mesh, batch_axes=("data", "model"), seq_axis=None,
                    fsdp_axes=("data",))
 luffy = LuffyConfig(condense_group=64, combine_slack=2.0)

@@ -1,0 +1,88 @@
+"""Hierarchy sensitivity (beyond-paper deliverable, DESIGN.md §5):
+predicted AND simulated speedup of hierarchical two-phase dispatch over
+flat all-to-all as the intra/inter bandwidth ratio sweeps 1×–16×.
+
+Two independent estimates per ratio:
+
+* ``pred`` — the calibrated analytic model (``commsim.predict`` with the
+  ``vanilla-hier``/``luffy-hier`` systems): closed-form dedup factor,
+  uniform routing;
+* ``sim`` — a monte-carlo routing simulation
+  (``repro.comm.simulate_dispatch_rows``): sampled top-k expert draws,
+  exact per-node dedup counting, timed on the same topology.
+
+Their agreement is the cross-check that the closed form used by the
+migration planner and the dry-run ledger is trustworthy.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit
+
+RATIOS = (1.0, 2.0, 4.0, 8.0, 16.0)
+
+
+def _sim_speedup(topo, tokens: int, top_k: int,
+                 d_model: int, r_cond: float, seed: int = 0) -> float:
+    """Simulated flat/hier dispatch time ratio for one source device."""
+    from repro.comm import a2a_time_s, simulate_dispatch_rows
+    rng = np.random.default_rng(seed)
+    flat_rows, dedup_rows, intra_rows = simulate_dispatch_rows(
+        rng, tokens, top_k, topo, r_cond=r_cond)
+    row = d_model * 4
+    # flat path: every remote copy crosses whatever link reaches it
+    t_flat = a2a_time_s(intra_rows * row, flat_rows * row, topo)
+    # hier path: copies move once on the cheap axis, deduped across nodes
+    kept = tokens * (1.0 - r_cond) * top_k
+    t_hier = a2a_time_s(kept * row * (1.0 - 1.0 / topo.num_devices),
+                        dedup_rows * row, topo)
+    return t_flat / t_hier
+
+
+def run(fast: bool = True) -> None:
+    from repro.comm import Topology
+    from repro.configs import get_config
+    from repro.core import commsim
+
+    cfg = get_config("moe-gpt2", num_experts=8)
+    setup = commsim.PaperSetup(cfg=cfg)
+    comp_ms, comm_ms = commsim.PAPER_VANILLA["moe-gpt2"][8]
+    cal = commsim.calibrate(setup, comp_ms, comm_ms)
+    rates = commsim.PAPER_RATES["moe-gpt2"]
+    tokens = 2048 if fast else 16384
+
+    rows = []
+    for ratio in RATIOS:
+        topo = Topology(num_nodes=2, devices_per_node=4,
+                        intra_bw=ratio, inter_bw=1.0)
+        # predicted: flat vs two-phase dispatch on the SAME fabric
+        # (closed-form dedup factor; link_bw cancels in the ratio)
+        from repro.comm import a2a_time_s, dispatch_bytes
+        fi, fe = dispatch_bytes(setup.tokens, setup.top_k, cfg.d_model,
+                                topo=topo)
+        hi, he = dispatch_bytes(setup.tokens, setup.top_k, cfg.d_model,
+                                topo=topo, dedup=True)
+        pred_v = a2a_time_s(fi, fe, topo) / a2a_time_s(hi, he, topo)
+        sim_v = _sim_speedup(topo, tokens, setup.top_k,
+                             cfg.d_model, 0.0)
+        sim_l = _sim_speedup(topo, tokens, setup.top_k,
+                             cfg.d_model, rates["r_cond"])
+        # end-to-end calibrated model: luffy on this fabric
+        lh = commsim.predict(
+            setup, cal, system="luffy-hier",
+            topo=commsim.default_topology(8, nodes=2, bw_ratio=ratio),
+            r_cond=rates["r_cond"], locality=rates["locality"])
+        rows.append((f"hier_sens/ratio{ratio:g}/pred_vanilla", 0.0,
+                     f"{pred_v:.3f}"))
+        rows.append((f"hier_sens/ratio{ratio:g}/sim_vanilla", 0.0,
+                     f"{sim_v:.3f}"))
+        rows.append((f"hier_sens/ratio{ratio:g}/sim_luffy", 0.0,
+                     f"{sim_l:.3f}"))
+        rows.append((f"hier_sens/ratio{ratio:g}/pred_luffy_comm_ms", 0.0,
+                     f"{lh['comm_ms']:.1f}"))
+    emit(rows)
+
+
+if __name__ == "__main__":
+    run()

@@ -18,6 +18,7 @@ MODULES = [
     "fig9_ablation",        # paper Fig. 9
     "table4_convergence",   # paper Table IV
     "fig10_sensitivity",    # paper Fig. 10
+    "fig_hier_sensitivity",  # beyond-paper: bandwidth-hierarchy sweep
     "roofline",             # deliverable (g)
 ]
 

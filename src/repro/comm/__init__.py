@@ -1,0 +1,30 @@
+"""Topology-aware communication subsystem (DESIGN.md §5).
+
+Single source of truth for *where bytes go and what they cost*:
+
+* :mod:`repro.comm.topology` — the :class:`Topology` descriptor (nodes ×
+  devices-per-node, per-link bandwidth/latency) every other layer prices
+  links against;
+* :mod:`repro.comm.hierarchical` — two-phase ``hier_all_to_all`` /
+  ``hier_combine`` collectives and the :class:`CommContext` the MoE
+  layer runs its dispatch/combine through;
+* :mod:`repro.comm.ledger` — traced + analytic traffic accounting
+  (flat vs per-node-deduplicated inter-node bytes);
+* :mod:`repro.comm.compat` — jax version shims (shard_map / make_mesh /
+  axis arithmetic) so the rest of the codebase never version-checks.
+"""
+from repro.comm.compat import (axis_index, axis_size, make_mesh, pmean_all,
+                               shard_map)
+from repro.comm.hierarchical import (CommContext, hier_all_to_all,
+                                     hier_combine)
+from repro.comm.ledger import (a2a_time_s, dispatch_bytes,
+                               dispatch_node_ledger, expected_dedup_factor,
+                               simulate_dispatch_rows)
+from repro.comm.topology import Topology, model_axes_of
+
+__all__ = [
+    "CommContext", "Topology", "a2a_time_s", "axis_index", "axis_size",
+    "dispatch_bytes", "dispatch_node_ledger", "expected_dedup_factor",
+    "hier_all_to_all", "hier_combine", "make_mesh", "model_axes_of",
+    "pmean_all", "shard_map", "simulate_dispatch_rows",
+]

@@ -1,0 +1,148 @@
+"""Traffic ledger: who pays for which byte (DESIGN.md §5).
+
+Two halves:
+
+* a **traced** ledger (:func:`dispatch_node_ledger`) the MoE layer runs
+  on the actual routing decisions of every step — it reports, per
+  device, the inter-node dispatch bytes a flat all-to-all would move vs.
+  the per-node-deduplicated bytes the hierarchical path models (a token
+  whose top-k experts land on the same remote node crosses the expensive
+  link once, not top-k times; condensed tokens cross zero times);
+
+* an **analytic** half (:func:`expected_dedup_factor`,
+  :func:`dispatch_bytes`, :func:`simulate_dispatch_rows`) used by
+  ``core/commsim.py``, the dry-run ledger and the hierarchy-sensitivity
+  benchmark, where no router exists — uniform routing is assumed.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.comm.topology import Topology
+
+
+# ---------------------------------------------------------------------------
+# traced (in-step) ledger
+# ---------------------------------------------------------------------------
+
+def dispatch_node_ledger(expert_idx, valid, my_device, *, e_local: int,
+                         topo: Topology, row_bytes: float):
+    """Per-device inter-node dispatch bytes, flat vs node-deduplicated.
+
+    expert_idx: [T, k] global expert ids; valid: [T, k] rows that take a
+    dispatch slot (condensed/dropped rows already excluded); my_device:
+    scalar combined device index (node-major); e_local: experts per
+    device; row_bytes: payload bytes per dispatched row.
+
+    Returns (inter_bytes_flat, inter_bytes_dedup) f32 scalars.
+    flat counts every valid row whose expert lives on another node;
+    dedup counts distinct (token, remote node) pairs — the payload a
+    node-deduplicating wire format ships across the expensive axis.
+    NOTE this is a *model* of the executed step's routing: the current
+    hier collectives are bit-identical relabelings that still move the
+    dense buffers (see hierarchical.py); the dedup number is the target
+    the planned compressed wire format is sized against.
+    """
+    L = topo.devices_per_node
+    N = topo.num_nodes
+    dev_of = expert_idx // e_local                       # [T, k]
+    node_of = dev_of // L
+    my_node = my_device // L
+    vf = valid.astype(jnp.float32)
+    remote = (node_of != my_node) & valid
+    flat_rows = jnp.sum(remote.astype(jnp.float32))
+    # distinct remote nodes touched per token
+    oh = jax.nn.one_hot(node_of, N, dtype=jnp.float32) * vf[..., None]
+    present = jnp.sum(oh, axis=1) > 0                    # [T, N]
+    not_mine = jnp.arange(N) != my_node                  # [N]
+    dedup_rows = jnp.sum((present & not_mine[None, :]).astype(jnp.float32))
+    return flat_rows * row_bytes, dedup_rows * row_bytes
+
+
+# ---------------------------------------------------------------------------
+# analytic model (uniform routing)
+# ---------------------------------------------------------------------------
+
+def expected_dedup_factor(top_k: int, topo: Topology) -> float:
+    """E[deduped inter-node payloads] / E[flat inter-node payloads] per
+    token under uniform routing of ``top_k`` independent expert draws
+    (only the node count matters — experts are uniform over nodes).
+
+    Flat: each of the k copies crossing to a remote node pays; expected
+    remote copies = k * (N - 1) / N. Dedup: a remote node pays once if
+    *any* copy lands there; expected distinct remote nodes =
+    (N-1) * (1 - (1 - 1/N)^k). Equal at k=1; <1 for k>1; 1.0 for flat
+    topologies (no hierarchy to exploit).
+    """
+    N = topo.num_nodes
+    if N <= 1 or top_k <= 1:
+        return 1.0
+    flat = top_k * (N - 1) / N
+    dedup = (N - 1) * (1.0 - (1.0 - 1.0 / N) ** top_k)
+    return dedup / flat
+
+
+def dispatch_bytes(tokens: int, top_k: int, d_model: int, *,
+                   topo: Topology, r_cond: float = 0.0,
+                   bytes_per_el: int = 4, num_layers: int = 1,
+                   dedup: bool = False) -> Tuple[float, float]:
+    """(intra_bytes, inter_bytes) of one dispatch pass, all devices.
+
+    Uniform routing over ``topo.num_devices`` expert shards; condensation
+    removes ``r_cond`` of the tokens before dispatch. With ``dedup`` the
+    inter-node component is scaled by :func:`expected_dedup_factor`
+    (payloads deduped per node); intra traffic is the two-phase cost —
+    every dispatched copy moves at most once on the cheap axis.
+    """
+    M = topo.num_devices
+    N, L = topo.num_nodes, topo.devices_per_node
+    payload = tokens * (1.0 - r_cond) * top_k * d_model * bytes_per_el \
+        * num_layers
+    # fraction of copies staying on-device / in-node / crossing nodes
+    intra = payload * (L - 1) / M
+    inter = payload * (M - L) / M
+    if dedup:
+        inter *= expected_dedup_factor(top_k, topo)
+        # the deduped payload still fans out to its target devices on the
+        # destination node's cheap links (phase-2 redistribution)
+        intra = payload * (1.0 - 1.0 / M)
+    return intra, inter
+
+
+def a2a_time_s(intra_bytes: float, inter_bytes: float,
+               topo: Topology, *, messages_intra: int = 0,
+               messages_inter: int = 0) -> float:
+    """Bandwidth-latency time for one collective phase pair."""
+    return (intra_bytes / topo.intra_bw + inter_bytes / topo.inter_bw
+            + messages_intra * topo.intra_lat
+            + messages_inter * topo.inter_lat)
+
+
+def simulate_dispatch_rows(rng: np.random.Generator, tokens: int,
+                           top_k: int, topo: Topology, *,
+                           r_cond: float = 0.0):
+    """Monte-carlo dispatch from one source device under uniform routing.
+
+    Returns (flat_inter_rows, dedup_inter_rows, intra_rows) — row counts
+    (multiply by the payload row size for bytes). Used by the
+    hierarchy-sensitivity benchmark to cross-check the closed form.
+    """
+    M = topo.num_devices
+    L = topo.devices_per_node
+    kept = int(round(tokens * (1.0 - r_cond)))
+    experts = rng.integers(0, M, size=(kept, top_k))
+    # distinct experts per token (top-k samples without replacement)
+    for t in range(kept):
+        while len(set(experts[t])) < min(top_k, M):
+            experts[t] = rng.integers(0, M, size=top_k)
+    my_node = 0                                # wlog: source device 0
+    nodes = experts // L
+    remote = nodes != my_node
+    flat_inter = int(remote.sum())
+    dedup_inter = sum(len(set(nodes[t][remote[t]])) for t in range(kept))
+    intra = int(((experts % L != 0) & ~remote).sum())   # in-node, off-device
+    return flat_inter, dedup_inter, intra

@@ -1,0 +1,116 @@
+"""Physical network topology descriptor (DESIGN.md §5).
+
+A :class:`Topology` is the single source of truth for link costs: the
+migration planner weights its traffic objective by it, the analytic
+model (``core/commsim.py``) prices hierarchical collectives with it, the
+dry-run traffic ledger splits collective bytes into intra/inter-node
+components with it, and the MoE layer's hierarchical dispatch/combine
+path derives its (node, local) axis split from it.
+
+Device order convention is **node-major**: global device
+``d = node * devices_per_node + local`` — the same order a mesh with
+axes ``("node", "local")`` enumerates, so combined-axis collectives and
+topology arithmetic agree by construction.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import numpy as np
+
+# Default link bandwidths (bytes/s per link), TPU v5e-class: ~50 GB/s
+# ICI within a node, ~12 GB/s DCN across nodes. Single source of truth —
+# launch/mesh.py re-exports these for the roofline.
+DEFAULT_INTRA_BW = 4.9e10
+DEFAULT_INTER_BW = 1.225e10
+
+
+@dataclasses.dataclass(frozen=True)
+class Topology:
+    """nodes × devices-per-node with a two-level bandwidth hierarchy.
+
+    Bandwidths are bytes/s per link. ``intra`` is the cheap in-node
+    interconnect (NVLink / ICI), ``inter`` the expensive cross-node one
+    (IB / DCN). Latencies (seconds per message) feed the analytic model's
+    message-count term; they default to 0 (bandwidth-dominated regime).
+    """
+    num_nodes: int
+    devices_per_node: int
+    intra_bw: float = DEFAULT_INTRA_BW
+    inter_bw: float = DEFAULT_INTER_BW
+    intra_lat: float = 0.0
+    inter_lat: float = 0.0
+
+    def __post_init__(self):
+        assert self.num_nodes >= 1 and self.devices_per_node >= 1
+        assert self.intra_bw > 0 and self.inter_bw > 0
+
+    # -- derived ------------------------------------------------------------
+    @property
+    def num_devices(self) -> int:
+        return self.num_nodes * self.devices_per_node
+
+    @property
+    def bw_ratio(self) -> float:
+        """Cost of an inter-node byte relative to an intra-node byte."""
+        return self.intra_bw / self.inter_bw
+
+    @property
+    def hierarchical(self) -> bool:
+        return self.num_nodes > 1 and self.devices_per_node > 1
+
+    def node_of(self, device):
+        """Node index of a (scalar or array) global device index."""
+        return device // self.devices_per_node
+
+    # -- link cost ----------------------------------------------------------
+    def link_cost(self) -> np.ndarray:
+        """[M, M] relative per-byte cost between devices.
+
+        0 on the diagonal (no wire), 1 within a node, ``bw_ratio``
+        across nodes. A uniform (single-node or single-device-per-node)
+        topology degenerates to ``1 - I`` — exactly the implicit cost
+        matrix of the flat path, so planners fed this matrix reproduce
+        their historical behavior bit-for-bit.
+        """
+        M = self.num_devices
+        dev = np.arange(M)
+        same_node = self.node_of(dev)[:, None] == self.node_of(dev)[None, :]
+        cost = np.where(same_node, 1.0, float(self.bw_ratio))
+        np.fill_diagonal(cost, 0.0)
+        return cost.astype(np.float64)
+
+    # -- constructors -------------------------------------------------------
+    @classmethod
+    def flat(cls, num_devices: int, bw: float = DEFAULT_INTRA_BW) -> "Topology":
+        """Uniform single-node topology (every link the same cost)."""
+        return cls(num_nodes=1, devices_per_node=num_devices,
+                   intra_bw=bw, inter_bw=bw)
+
+    @classmethod
+    def from_mesh(cls, mesh, *, intra_bw: float = DEFAULT_INTRA_BW,
+                  inter_bw: float = DEFAULT_INTER_BW) -> "Topology":
+        """Derive the topology from mesh axis names.
+
+        A mesh carrying ``("node", "local")`` axes maps onto a two-level
+        hierarchy; any other mesh is flat over its ``model`` axis (or
+        over all devices when no model axis exists).
+        """
+        names = tuple(mesh.axis_names)
+        sizes = dict(zip(names, mesh.devices.shape))
+        if "node" in names and "local" in names:
+            return cls(num_nodes=sizes["node"],
+                       devices_per_node=sizes["local"],
+                       intra_bw=intra_bw, inter_bw=inter_bw)
+        return cls.flat(sizes.get("model", mesh.devices.size), bw=intra_bw)
+
+
+def model_axes_of(mesh_axis_names: Tuple[str, ...]):
+    """The expert-parallel axis spelling for a mesh: ``"model"`` on flat
+    meshes, ``("node", "local")`` on hierarchical ones, None if neither."""
+    if "node" in mesh_axis_names and "local" in mesh_axis_names:
+        return ("node", "local")
+    if "model" in mesh_axis_names:
+        return "model"
+    return None

@@ -243,6 +243,12 @@ class LuffyConfig:
     combine_slack: float = 1.0
     # use the Pallas kernels for similarity / expert FFN
     use_kernels: bool = False
+    # Expert-parallel collective strategy (DESIGN.md §5): "flat" = one
+    # all-to-all over the whole model axis; "hier" = two-phase
+    # intra-node/inter-node exchange over a ("node", "local") mesh pair,
+    # bit-compatible with "flat" but with node-aggregated inter-node
+    # messages and the per-node dedup ledger active.
+    comm_mode: str = "flat"
 
 
 # ---------------------------------------------------------------------------

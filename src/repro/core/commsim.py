@@ -25,8 +25,9 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Dict
+from typing import Dict, Optional
 
+from repro.comm import Topology, dispatch_bytes
 from repro.config import ModelConfig
 
 BYTES = 4        # fp32 activations on V100 (paper's setting)
@@ -91,13 +92,65 @@ def calibrate(setup: PaperSetup, vanilla_comp_ms: float,
                        speed=flops / (vanilla_comp_ms / 1e3))
 
 
+def default_topology(num_experts: int, nodes: int = 2,
+                     bw_ratio: float = 4.0) -> Topology:
+    """A (nodes × E/nodes) split of the expert devices with the given
+    inter/intra bandwidth ratio, link_bw-normalized (inter = 1)."""
+    if nodes <= 1 or num_experts % nodes != 0 or num_experts // nodes < 1:
+        return Topology.flat(num_experts, bw=1.0)
+    return Topology(num_nodes=nodes, devices_per_node=num_experts // nodes,
+                    intra_bw=bw_ratio, inter_bw=1.0)
+
+
+def _hier_comm_ms(setup: PaperSetup, cal: Calibration, topo: Topology,
+                  *, r_cond: float, locality: float) -> float:
+    """Two-phase dispatch+combine time on a hierarchical fabric.
+
+    The same calibrated ``cal.link_bw`` constant prices the expensive
+    (inter-node) axis — it was fit on the flat fabric's bottleneck —
+    and the cheap axis runs ``topo.bw_ratio`` times faster. Dispatch
+    payloads dedupe per node (condensation representatives cross once
+    per node); combine rows pre-aggregate within the node before
+    crossing back, and the migration locality gain additionally keeps
+    ``locality`` of them off the network entirely.
+    """
+    tokens = setup.tokens
+    d = setup.cfg.d_model
+    intra_d, inter_d = dispatch_bytes(
+        tokens, setup.top_k, d, topo=topo, r_cond=r_cond,
+        bytes_per_el=BYTES, num_layers=setup.cfg.num_layers, dedup=True)
+    intra_c = intra_d * (1.0 - locality)
+    inter_c = inter_d * (1.0 - locality)
+    inter_bw = cal.link_bw
+    intra_bw = cal.link_bw * topo.bw_ratio
+    return ((intra_d + intra_c) / intra_bw
+            + (inter_d + inter_c) / inter_bw) * 1e3
+
+
 def predict(setup: PaperSetup, cal: Calibration, *,
             system: str, r_cond: float = 0.5, locality: float = 0.35,
             contention_slope: float = 0.44,
-            popular_frac: float = 0.5) -> Dict[str, float]:
-    """Return {'comp_ms', 'comm_ms'} for one system."""
+            popular_frac: float = 0.5,
+            topo: Optional[Topology] = None) -> Dict[str, float]:
+    """Return {'comp_ms', 'comm_ms'} for one system.
+
+    ``vanilla-hier`` / ``luffy-hier`` price the two-phase hierarchical
+    collectives on a (nodes × devices/node) fabric described by ``topo``
+    (default: 2-node split of the expert devices, bw_ratio 4)."""
     E = setup.cfg.moe.num_experts
     attn = _attn_flops(setup)
+    if system in ("vanilla-hier", "luffy-hier"):
+        topo = topo if topo is not None else default_topology(E)
+        is_luffy = system == "luffy-hier"
+        comm_ms = _hier_comm_ms(
+            setup, cal, topo,
+            r_cond=r_cond if is_luffy else 0.0,
+            locality=locality if is_luffy else 0.0)
+        if is_luffy:
+            comp = attn * 0.92 + _expert_flops(setup, 1.0 - r_cond)
+        else:
+            comp = attn + _expert_flops(setup)
+        return {"comp_ms": comp / cal.speed * 1e3, "comm_ms": comm_ms}
     if system == "vanilla":
         comm = 2 * _a2a_bytes(setup)
         comp = attn + _expert_flops(setup)

@@ -7,6 +7,13 @@ relabeling chunk destinations (see ``moe_layer.py`` and DESIGN.md §3) —
 the collective's operand size is unchanged; what changes is how much of
 it lands on the diagonal (stays off the network).
 
+Topology awareness (DESIGN.md §5): both planners take an optional
+``link_cost`` matrix (``repro.comm.Topology.link_cost()``) and minimize
+*link-cost-weighted* traffic — a byte crossing nodes costs ``bw_ratio×``
+a byte crossing NVLink/ICI, so the greedy prefers intra-node re-homes.
+With no matrix (or a uniform one) both planners reproduce their
+historical behavior exactly.
+
 Two implementations, kept in lock-step by a property test:
   * :func:`plan_migration_np` — paper-faithful host-side Algorithm 1;
   * :func:`plan_migration_jax` — traceable device-side version used
@@ -15,7 +22,7 @@ Two implementations, kept in lock-step by a property test:
 """
 from __future__ import annotations
 
-from typing import NamedTuple, Tuple
+from typing import NamedTuple, Optional, Tuple
 
 import numpy as np
 
@@ -28,8 +35,15 @@ import jax.numpy as jnp
 # ---------------------------------------------------------------------------
 
 def t_att(B, L, d: int, speed: float):
-    """Attention cost model: (3BLd^2 + 2BL^2d) / P   [seconds]."""
-    B = jnp.asarray(B, jnp.float32) if not isinstance(B, (int, float)) else B
+    """Attention cost model: (3BLd^2 + 2BL^2d) / P   [seconds].
+
+    Pure arithmetic on purpose: the host planner calls it with python /
+    numpy scalars, the traced planner with jax arrays, and both must see
+    the same float32-exact values — so no framework coercion here, just
+    a float promotion that keeps int inputs from overflowing.
+    """
+    B = B * 1.0
+    L = L * 1.0
     return (3.0 * B * L * d * d + 2.0 * B * L * L * d) / speed
 
 
@@ -37,21 +51,33 @@ class MigrationPlan(NamedTuple):
     assign: jnp.ndarray       # [n_slots] int32 — dest device per global slot
     dest_slot: jnp.ndarray    # [n_slots] int32 — slot index on dest device
     perm: jnp.ndarray         # [n_slots] int32 — new_global = perm[old_global]
-    traffic_before: jnp.ndarray  # [] f32 — combine rows crossing devices, no migration
-    traffic_after: jnp.ndarray   # [] f32 — with migration
+    traffic_before: jnp.ndarray  # [] f32 — link-cost-weighted combine rows
+    traffic_after: jnp.ndarray   # crossing devices without / with migration
 
 
-def _finalize_plan(assign, counts, n_per_dev):
+def _uniform_cost(M: int, xp):
+    return xp.ones((M, M), xp.float32 if xp is jnp else np.float64) \
+        - xp.eye(M, dtype=xp.float32 if xp is jnp else np.float64)
+
+
+def _weighted_traffic(counts, dest, cost, xp):
+    """sum_i sum_m counts[i, m] * cost[m, dest[i]] (numpy/jnp agnostic)."""
+    per_dev_cost = xp.take(cost, dest, axis=1).T          # [n_slots, M]
+    return (counts * per_dev_cost).sum()
+
+
+def _finalize_plan(assign, counts, n_per_dev, link_cost=None):
     """Common: dest-local slot numbers + traffic ledger; falls back to the
-    identity placement when the greedy plan would move MORE bytes than no
-    migration at all (possible under adversarial capacity pressure — the
-    identity is always feasible, so never do worse). numpy/jnp agnostic."""
+    identity placement when the greedy plan would move MORE (weighted)
+    bytes than no migration at all (possible under adversarial capacity
+    pressure — the identity is always feasible, so never do worse).
+    numpy/jnp agnostic."""
     xp = jnp if isinstance(assign, jnp.ndarray) else np
     n_slots, M = counts.shape
+    cost = _uniform_cost(M, xp) if link_cost is None else link_cost
     home = (xp.arange(n_slots) // n_per_dev).astype(assign.dtype)
-    total = counts.sum(axis=1)
-    traffic_before = (total - counts[xp.arange(n_slots), home]).sum()
-    traffic_after = (total - counts[xp.arange(n_slots), assign]).sum()
+    traffic_before = _weighted_traffic(counts, home, cost, xp)
+    traffic_after = _weighted_traffic(counts, assign, cost, xp)
     if isinstance(assign, jnp.ndarray):
         worse = traffic_after > traffic_before
         assign = xp.where(worse, home, assign)
@@ -76,13 +102,18 @@ def _finalize_plan(assign, counts, n_per_dev):
 
 def plan_migration_np(counts: np.ndarray, seq_lens: np.ndarray,
                       n_per_dev: int, *, q: int = 3, d_model: int = 1024,
-                      speed: float = 1e13) -> MigrationPlan:
+                      speed: float = 1e13,
+                      link_cost: Optional[np.ndarray] = None
+                      ) -> MigrationPlan:
     """counts: [n_slots, M] tokens (expert copies) of slot i hosted on
     device j; seq_lens: [n_slots] true lengths. Every device ends with
-    exactly ``n_per_dev`` slots (the SPMD capacity constraint)."""
+    exactly ``n_per_dev`` slots (the SPMD capacity constraint).
+    link_cost: optional [M, M] per-byte cost (Topology.link_cost())."""
     counts = np.asarray(counts)
     seq_lens = np.asarray(seq_lens)
     n_slots, M = counts.shape
+    cost = _uniform_cost(M, np) if link_cost is None \
+        else np.asarray(link_cost, np.float64)
     cap = np.full(M, n_per_dev, np.int64)
     dev_B = np.zeros(M, np.int64)        # sequences placed per device
     dev_L = np.zeros(M, np.int64)        # max length placed per device
@@ -90,8 +121,8 @@ def plan_migration_np(counts: np.ndarray, seq_lens: np.ndarray,
     # migrate longer sequences first (they dominate T_att)
     order = np.argsort(-seq_lens, kind="stable")
     for i in order:
-        # step 1: traffic f_{i,j} if homed at j
-        f = counts[i].sum() - counts[i]
+        # step 1: link-cost-weighted traffic f_{i,j} if homed at j
+        f = counts[i] @ cost
         cand = [int(j) for j in np.argsort(f, kind="stable")[:q]
                 if cap[j] > 0]                        # step 2: top-q min traffic
         if not cand:                                  # fallback: most free capacity
@@ -113,7 +144,9 @@ def plan_migration_np(counts: np.ndarray, seq_lens: np.ndarray,
         cap[best] -= 1
         dev_B[best] += 1
         dev_L[best] = max(dev_L[best], seq_lens[i])
-    return MigrationPlan(*_finalize_plan(assign, counts, n_per_dev))
+    return MigrationPlan(*_finalize_plan(assign, counts, n_per_dev,
+                                         link_cost=None if link_cost is None
+                                         else cost))
 
 
 # ---------------------------------------------------------------------------
@@ -121,17 +154,20 @@ def plan_migration_np(counts: np.ndarray, seq_lens: np.ndarray,
 # ---------------------------------------------------------------------------
 
 def plan_migration_jax(counts, seq_lens, n_per_dev: int, *, q: int = 3,
-                       d_model: int = 1024, speed: float = 1e13
-                       ) -> MigrationPlan:
+                       d_model: int = 1024, speed: float = 1e13,
+                       link_cost=None) -> MigrationPlan:
     """Same algorithm, jax-traceable (runs replicated inside the step)."""
-    counts = counts.astype(jnp.float32)
+    counts = jnp.asarray(counts, jnp.float32)
+    seq_lens = jnp.asarray(seq_lens, jnp.float32)
     n_slots, M = counts.shape
+    cost = _uniform_cost(M, jnp) if link_cost is None \
+        else jnp.asarray(link_cost, jnp.float32)
     order = jnp.argsort(-seq_lens, stable=True)
 
     def body(state, i):
         cap, dev_B, dev_L, assign = state
         slot = order[i]
-        f = jnp.sum(counts[slot]) - counts[slot]       # [M]
+        f = counts[slot] @ cost                        # [M] weighted traffic
         # top-q by min traffic
         _, cand = jax.lax.top_k(-f, q)                 # [q]
         cand_ok = cap[cand] > 0
@@ -165,7 +201,9 @@ def plan_migration_jax(counts, seq_lens, n_per_dev: int, *, q: int = 3,
             jnp.full((n_slots,), -1, jnp.int32) + zi)
     (cap, dev_B, dev_L, assign), _ = jax.lax.scan(
         body, init, jnp.arange(n_slots))
-    return MigrationPlan(*_finalize_plan(assign, counts, n_per_dev))
+    return MigrationPlan(*_finalize_plan(assign, counts, n_per_dev,
+                                         link_cost=None if link_cost is None
+                                         else cost))
 
 
 def identity_plan(n_slots: int, n_per_dev: int) -> MigrationPlan:

@@ -35,6 +35,8 @@ from typing import Any, Dict, NamedTuple, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.comm import CommContext, compat
+from repro.comm import ledger as comm_ledger
 from repro.config import LuffyConfig, MoEConfig, ModelConfig
 from repro.core import condensation as cond
 from repro.core import migration as mig
@@ -111,15 +113,13 @@ class MoEAux(NamedTuple):
     combine_drop: Array       # fraction of rows dropped at combine regroup
     condense_rate: Array      # fraction of tokens condensed
     local_frac: Array         # fraction of combine rows staying on-device
-    traffic_before: Array     # plan ledger (tokens crossing devices)
-    traffic_after: Array
+    traffic_before: Array     # plan ledger (link-cost-weighted tokens
+    traffic_after: Array      # crossing devices, without/with migration)
+    inter_bytes_flat: Array   # dispatch bytes a flat a2a ships across nodes
+    inter_bytes_dedup: Array  # modeled bytes after per-node dedup (hier
+                              # mode; the executed wire is still dense)
 
-
-def _combined_index(axes):
-    idx = 0
-    for a in (axes if isinstance(axes, (tuple, list)) else (axes,)):
-        idx = idx * jax.lax.axis_size(a) + jax.lax.axis_index(a)
-    return idx
+N_AUX = len(MoEAux._fields)
 
 
 def expert_ffn_2d(ew_local, h, act, cdt, fsdp_axes,
@@ -172,9 +172,9 @@ def moe_decode_allreduce(params, x, cfg: ModelConfig, *, capacity: int,
     n_seq, S, d = x.shape
     T = n_seq * S
     E = m.num_experts
-    M = 1 if axis_name is None else jax.lax.axis_size(axis_name)
+    M = 1 if axis_name is None else compat.axis_size(axis_name)
     E_local = E // M
-    my = 0 if axis_name is None else jax.lax.axis_index(axis_name)
+    my = 0 if axis_name is None else compat.axis_index(axis_name)
     C = capacity
 
     xf = x.reshape(T, d)
@@ -213,7 +213,7 @@ def moe_decode_allreduce(params, x, cfg: ModelConfig, *, capacity: int,
     d_drop = 1.0 - jnp.sum(valid.astype(jnp.float32)) / jnp.maximum(kept, 1.0)
     aux = MoEAux(gate.aux_loss, d_drop, jnp.float32(0.0), jnp.float32(0.0),
                  jnp.float32(1.0 / max(M, 1)), jnp.float32(0.0),
-                 jnp.float32(0.0))
+                 jnp.float32(0.0), jnp.float32(0.0), jnp.float32(0.0))
     return y, aux
 
 
@@ -223,10 +223,11 @@ def moe_decode_allreduce(params, x, cfg: ModelConfig, *, capacity: int,
 
 def moe_core(params, x, sideband: Dict[str, Array], cfg: ModelConfig,
              luffy: LuffyConfig, *, mode: str, capacity: int,
-             axis_name: Optional[str], threshold,
+             axis_name=None, threshold=None,
              s_prev: Optional[Array] = None,
              group_size: int = 128, combine_slack: float = 1.0,
-             use_kernel: bool = False
+             use_kernel: bool = False,
+             comm: Optional[CommContext] = None
              ) -> Tuple[Array, Dict[str, Array], Optional[Array], MoEAux]:
     """One MoE sublayer on this device's shard.
 
@@ -234,6 +235,8 @@ def moe_core(params, x, sideband: Dict[str, Array], cfg: ModelConfig,
     "seq_len":[n_seq]} — travels with sequences under migration.
     mode: "vanilla" | "migrate". Condensation is on iff s_prev is not None
     or luffy.enable_condensation and mode != decode-style call.
+    comm: collective strategy + topology (repro.comm); when None a flat
+    context over ``axis_name`` is assumed (historical behavior).
     Returns (y, new_sideband, s_next, aux). In vanilla mode
     ``y = x + moe_delta``; in migrate mode ``y`` is the full post-block
     hidden materialized at *new* slots.
@@ -245,10 +248,12 @@ def moe_core(params, x, sideband: Dict[str, Array], cfg: ModelConfig,
     n_seq, S, d = x.shape
     T = n_seq * S
     E = m.num_experts
-    M = 1 if axis_name is None else jax.lax.axis_size(axis_name)
+    if comm is None and axis_name is not None:
+        comm = CommContext.build("flat", axis_name)
+    M = 1 if comm is None else comm.size()
     assert E % M == 0, (E, M)
     E_local = E // M
-    my = 0 if axis_name is None else jax.lax.axis_index(axis_name)
+    my = 0 if comm is None else comm.index()
     C = capacity
 
     xf = x.reshape(T, d)
@@ -282,6 +287,18 @@ def moe_core(params, x, sideband: Dict[str, Array], cfg: ModelConfig,
     kept = jnp.sum(keep.astype(jnp.float32))
     d_drop = 1.0 - jnp.sum(valid.astype(jnp.float32)) / jnp.maximum(kept, 1.0)
 
+    # ---- inter-node traffic ledger (DESIGN.md §5) ------------------------
+    topo = None if comm is None else comm.topology
+    if topo is not None and topo.hierarchical and M > 1:
+        row_bytes = float((d + 2) * jnp.dtype(cdt).itemsize)
+        ib_flat, ib_dedup = comm_ledger.dispatch_node_ledger(
+            expert_idx, valid, my, e_local=E_local, topo=topo,
+            row_bytes=row_bytes)
+        if comm.mode != "hier":
+            ib_dedup = ib_flat      # the flat path ships every copy
+    else:
+        ib_flat = ib_dedup = jnp.float32(0.0)
+
     # ---- migration plan (§IV) — BEFORE dispatch so combine can be
     # re-addressed. Replicated within the model row. -----------------------
     migrate = (mode == "migrate") and luffy.enable_migration and M > 1
@@ -290,13 +307,14 @@ def moe_core(params, x, sideband: Dict[str, Array], cfg: ModelConfig,
         oh = jax.nn.one_hot(dev_of_e, M, dtype=jnp.float32) \
             * valid[..., None].astype(jnp.float32)
         counts_local = oh.reshape(n_seq, S, m.top_k, M).sum((1, 2))  # [n_seq,M]
-        counts_g = jax.lax.all_gather(counts_local, axis_name, axis=0,
+        counts_g = jax.lax.all_gather(counts_local, comm.axis_name, axis=0,
                                       tiled=True)             # [M*n_seq, M]
-        lens_g = jax.lax.all_gather(sideband["seq_len"], axis_name, axis=0,
-                                    tiled=True)               # [M*n_seq]
+        lens_g = jax.lax.all_gather(sideband["seq_len"], comm.axis_name,
+                                    axis=0, tiled=True)       # [M*n_seq]
         plan = mig.plan_migration_jax(
             counts_g, lens_g.astype(jnp.float32), n_seq, q=luffy.q,
-            d_model=d, speed=luffy.gpu_speed)
+            d_model=d, speed=luffy.gpu_speed,
+            link_cost=comm.link_cost())
         my_slots = my * n_seq + jnp.arange(n_seq, dtype=jnp.int32)
         dest_global = plan.perm[my_slots]                     # [n_seq]
         t_before, t_after = plan.traffic_before, plan.traffic_after
@@ -332,12 +350,10 @@ def moe_core(params, x, sideband: Dict[str, Array], cfg: ModelConfig,
     mbuf = mbuf.at[e_safe, p_safe].add(
         meta * v_f[:, None].astype(jnp.int32), mode="drop")
 
-    # ---- dispatch all-to-all ---------------------------------------------
+    # ---- dispatch all-to-all (flat or hierarchical two-phase) -------------
     if M > 1:
-        buf = jax.lax.all_to_all(buf, axis_name, split_axis=0,
-                                 concat_axis=0, tiled=True)
-        mbuf = jax.lax.all_to_all(mbuf, axis_name, split_axis=0,
-                                  concat_axis=0, tiled=True)
+        buf = comm.all_to_all(buf)
+        mbuf = comm.all_to_all(mbuf)
     # [M_src * E_local, C, .] -> [E_local, M_src*C, .]
     rows = buf.reshape(M, E_local, C, d + 2).transpose(1, 0, 2, 3) \
               .reshape(E_local, M * C, d + 2)
@@ -360,8 +376,7 @@ def moe_core(params, x, sideband: Dict[str, Array], cfg: ModelConfig,
         back = out_rows.reshape(E_local, M, C, d).transpose(1, 0, 2, 3) \
                        .reshape(E, C, d)
         if M > 1:
-            back = jax.lax.all_to_all(back, axis_name, split_axis=0,
-                                      concat_axis=0, tiled=True)
+            back = comm.combine(back)
         vals = back[e_safe, p_safe] * v_f[:, None].astype(cdt)  # [T*k, d]
         delta = jnp.sum(vals.reshape(T, m.top_k, d), axis=1)
         y_tok = xf + delta.astype(xf.dtype)
@@ -399,10 +414,8 @@ def moe_core(params, x, sideband: Dict[str, Array], cfg: ModelConfig,
             jnp.stack([jnp.where(keep_c, dslot % n_seq + 1, 0),
                        jnp.where(keep_c, rpos, 0)], -1), mode="drop")
         if M > 1:
-            cbuf = jax.lax.all_to_all(cbuf, axis_name, split_axis=0,
-                                      concat_axis=0, tiled=True)
-            cmeta = jax.lax.all_to_all(cmeta, axis_name, split_axis=0,
-                                       concat_axis=0, tiled=True)
+            cbuf = comm.combine(cbuf)
+            cmeta = comm.combine(cmeta)
         rs = cbuf.reshape(M * C_comb, d)
         rslot = cmeta[..., 0].reshape(-1) - 1
         rp = cmeta[..., 1].reshape(-1)
@@ -413,7 +426,7 @@ def moe_core(params, x, sideband: Dict[str, Array], cfg: ModelConfig,
         y_tok = y_grid.reshape(T, d).astype(xf.dtype)
         # sideband travels with sequences
         new_sideband = _exchange_sideband(
-            sideband, dest_global, n_seq, M, axis_name)
+            sideband, dest_global, n_seq, M, comm)
 
     # ---- un-condense (token_to_token replacement, §VI) --------------------
     if do_condense:
@@ -423,7 +436,7 @@ def moe_core(params, x, sideband: Dict[str, Array], cfg: ModelConfig,
             # rep map migrated as sideband: [n_seq, S] local rep position
             rep_local = (rep_idx % S).reshape(n_seq, S).astype(jnp.int32)
             rep_sb = _exchange_sideband({"rep": rep_local}, dest_global,
-                                        n_seq, M, axis_name)["rep"]
+                                        n_seq, M, comm)["rep"]
             yg = y_tok.reshape(n_seq, S, d)
             y_tok = jnp.take_along_axis(yg, rep_sb[..., None], axis=1
                                         ).reshape(T, d)
@@ -432,7 +445,7 @@ def moe_core(params, x, sideband: Dict[str, Array], cfg: ModelConfig,
             s_mig = s_next.reshape(n_seq, ng, group_size, group_size)
             s_next = _exchange_sideband(
                 {"s": s_mig.astype(jnp.bfloat16)}, dest_global, n_seq, M,
-                axis_name)["s"].astype(jnp.float32)
+                comm)["s"].astype(jnp.float32)
             s_next = s_next.reshape(-1, group_size, group_size)
 
     y_out = y_tok.reshape(n_seq, S, d)
@@ -448,14 +461,15 @@ def moe_core(params, x, sideband: Dict[str, Array], cfg: ModelConfig,
         y_out = y_out + sh.astype(y_out.dtype)
 
     aux = MoEAux(gate.aux_loss, d_drop, c_drop, c_rate, local_frac,
-                 t_before, t_after)
+                 t_before, t_after, ib_flat, ib_dedup)
     return y_out, new_sideband, s_next, aux
 
 
 def _exchange_sideband(sb: Dict[str, Array], dest_global: Array,
-                       n_seq: int, M: int, axis_name) -> Dict[str, Array]:
+                       n_seq: int, M: int,
+                       comm: Optional[CommContext]) -> Dict[str, Array]:
     """Move per-sequence side info to new homes (bijection on slots)."""
-    if M == 1 or axis_name is None:
+    if M == 1 or comm is None:
         # permutation within the single device
         out = {}
         inv = jnp.zeros((n_seq,), jnp.int32).at[dest_global % n_seq].set(
@@ -469,7 +483,6 @@ def _exchange_sideband(sb: Dict[str, Array], dest_global: Array,
     for k, v in sb.items():
         buf = jnp.zeros((M, n_seq) + v.shape[1:], v.dtype)
         buf = buf.at[dd, ds].add(v)
-        buf = jax.lax.all_to_all(buf, axis_name, split_axis=0,
-                                 concat_axis=0, tiled=True)
+        buf = comm.combine(buf)
         out[k] = jnp.sum(buf, axis=0)      # exactly-one-writer per slot
     return out

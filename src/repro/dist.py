@@ -9,24 +9,30 @@ from __future__ import annotations
 
 from dataclasses import dataclass, field
 from functools import partial
-from typing import Optional, Tuple
+from typing import Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.comm import Topology, model_axes_of
+
 
 @dataclass(frozen=True)
 class DistContext:
     mesh: Optional[Mesh] = None
-    # axes sharding the batch dim of activations (may include 'model'
-    # for train shapes — expert-parallel batch spreads over all axes)
+    # axes sharding the batch dim of activations (may include the model
+    # axes for train shapes — expert-parallel batch spreads over all axes)
     batch_axes: Tuple[str, ...] = ()
-    # axis sharding the sequence dim (prefill / long-context), or None
-    seq_axis: Optional[str] = None
-    model_axis: str = "model"
+    # axis (or axis tuple) sharding the sequence dim, or None
+    seq_axis: Optional[Union[str, Tuple[str, ...]]] = None
+    # expert-parallel axis: "model" on flat meshes, ("node", "local") on
+    # hierarchical ones (DESIGN.md §5)
+    model_axis: Union[str, Tuple[str, ...]] = "model"
     # axes over which (dense-arch / attention) params are fully sharded
     fsdp_axes: Tuple[str, ...] = ()
+    # physical link hierarchy backing the mesh (None = uniform/unknown)
+    topology: Optional[Topology] = None
 
     @property
     def enabled(self) -> bool:
@@ -45,6 +51,11 @@ class DistContext:
     @property
     def model_size(self) -> int:
         return self.axis_size(self.model_axis) if self.enabled else 1
+
+    @property
+    def model_axes_tuple(self) -> Tuple[str, ...]:
+        ma = self.model_axis
+        return (ma,) if isinstance(ma, str) else tuple(ma)
 
     @property
     def batch_size_divisor(self) -> int:
@@ -77,18 +88,28 @@ def single_device() -> DistContext:
 
 
 def make_dist(mesh: Mesh, shape_mode: str, global_batch: int,
-              *, moe_arch: bool) -> DistContext:
+              *, moe_arch: bool,
+              topology: Optional[Topology] = None) -> DistContext:
     """Choose the sharding strategy for a given input shape (DESIGN.md §4).
 
     * train:   batch over ALL axes when divisible (expert-parallel rows
-               live on 'model'); else batch over (pod,data) + seq on model.
-    * prefill: batch over (pod,data), sequence over 'model'.
-    * decode:  batch over (pod,data); KV sequence dim over 'model'
+               live on the model axes); else batch over (pod,data) + seq
+               over the model axes.
+    * prefill: batch over (pod,data), sequence over the model axes.
+    * decode:  batch over (pod,data); KV sequence dim over the model axes
                (context-parallel decode). long_500k (B=1): KV over all axes.
+
+    The expert-parallel ("model") dimension is the ``model`` axis on flat
+    meshes or the ``("node", "local")`` pair on hierarchical meshes
+    (DESIGN.md §5); ``topology`` defaults to ``Topology.from_mesh``.
     """
     names = tuple(mesh.axis_names)
-    data_axes = tuple(a for a in names if a != "model")
+    model_ax = model_axes_of(names) or "model"
+    m_axes = (model_ax,) if isinstance(model_ax, str) else model_ax
+    data_axes = tuple(a for a in names if a not in m_axes)
     all_axes = tuple(a for a in names)
+    if topology is None:
+        topology = Topology.from_mesh(mesh)
     n_all = 1
     for a in all_axes:
         n_all *= mesh.shape[a]
@@ -96,22 +117,23 @@ def make_dist(mesh: Mesh, shape_mode: str, global_batch: int,
     for a in data_axes:
         n_data *= mesh.shape[a]
 
+    common = dict(model_axis=model_ax, topology=topology)
     if shape_mode == "train":
         if global_batch % n_all == 0:
             return DistContext(mesh, batch_axes=all_axes, seq_axis=None,
-                               fsdp_axes=data_axes)
-        return DistContext(mesh, batch_axes=data_axes, seq_axis="model",
-                           fsdp_axes=data_axes)
+                               fsdp_axes=data_axes, **common)
+        return DistContext(mesh, batch_axes=data_axes, seq_axis=model_ax,
+                           fsdp_axes=data_axes, **common)
     if shape_mode == "prefill":
         if global_batch % n_all == 0 and not moe_arch:
             return DistContext(mesh, batch_axes=all_axes, seq_axis=None,
-                               fsdp_axes=data_axes)
-        return DistContext(mesh, batch_axes=data_axes, seq_axis="model",
-                           fsdp_axes=data_axes)
-    # decode: batch over data axes, KV-cache sequence dim over 'model'
-    # (context-parallel decode). long_500k (B=1): KV over every axis.
+                               fsdp_axes=data_axes, **common)
+        return DistContext(mesh, batch_axes=data_axes, seq_axis=model_ax,
+                           fsdp_axes=data_axes, **common)
+    # decode: batch over data axes, KV-cache sequence dim over the model
+    # axes (context-parallel decode). long_500k (B=1): KV over every axis.
     if global_batch == 1:
         return DistContext(mesh, batch_axes=(), seq_axis=all_axes,
-                           fsdp_axes=data_axes)
-    return DistContext(mesh, batch_axes=data_axes, seq_axis="model",
-                       fsdp_axes=data_axes)
+                           fsdp_axes=data_axes, **common)
+    return DistContext(mesh, batch_axes=data_axes, seq_axis=model_ax,
+                       fsdp_axes=data_axes, **common)

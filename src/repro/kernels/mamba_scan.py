@@ -30,28 +30,36 @@ DEFAULT_BS = 256     # sequence chunk
 
 def _mamba_kernel(dt_ref, x_ref, b_ref, c_ref, a_ref, y_ref, h_ref, *,
                   bs, bd, n):
+    # NOTE: refs are only ever indexed with slices ([...] / pl.dslice) —
+    # integer ref indices break the state-discharge rules of older
+    # pallas releases the compat story covers (DESIGN.md §5).
     s_idx = pl.program_id(2)
 
     @pl.when(s_idx == 0)
     def init():
-        h_ref[0] = jnp.zeros((bd, n), jnp.float32)
+        h_ref[...] = jnp.zeros((1, bd, n), jnp.float32)
 
     a = a_ref[...].astype(jnp.float32)                 # [bd, N]
+    dt = dt_ref[...].astype(jnp.float32)               # [1, bs, bd] (VMEM)
+    x = x_ref[...].astype(jnp.float32)
+    bm = b_ref[...].astype(jnp.float32)                # [1, bs, N]
+    cm = c_ref[...].astype(jnp.float32)
 
     def step(i, h):
-        dt_i = dt_ref[0, i].astype(jnp.float32)        # [bd]
-        x_i = x_ref[0, i].astype(jnp.float32)          # [bd]
-        b_i = b_ref[0, i].astype(jnp.float32)          # [N]
-        c_i = c_ref[0, i].astype(jnp.float32)          # [N]
+        dt_i = dt[0, i]                                # [bd]
+        x_i = x[0, i]                                  # [bd]
+        b_i = bm[0, i]                                 # [N]
+        c_i = cm[0, i]                                 # [N]
         da = jnp.exp(dt_i[:, None] * a)                # [bd, N]
         dbx = (dt_i * x_i)[:, None] * b_i[None, :]
         h = da * h + dbx
         y_i = jnp.sum(h * c_i[None, :], axis=1)        # [bd]
-        pl.store(y_ref, (0, pl.dslice(i, 1), slice(None)),
-                 y_i[None].astype(y_ref.dtype))
+        pl.store(y_ref, (pl.dslice(0, 1), pl.dslice(i, 1), slice(None)),
+                 y_i[None, None].astype(y_ref.dtype))
         return h
 
-    h_ref[0] = jax.lax.fori_loop(0, bs, step, h_ref[0])
+    h_out = jax.lax.fori_loop(0, bs, step, h_ref[...][0])
+    h_ref[...] = h_out[None]
 
 
 @functools.partial(jax.jit, static_argnames=("bd", "bs", "interpret"))

@@ -88,9 +88,54 @@ def parse_collectives(hlo_text: str):
     return out
 
 
+def comm_traffic_ledger(cfg, shape, mesh, *, nodes: int = 0):
+    """Analytic per-step dispatch traffic split by link tier (DESIGN.md §5).
+
+    For each condensation rate bucket: bytes a flat all-to-all ships
+    across nodes vs. the hierarchical path after per-node dedup. On a
+    flat mesh the ledger prices a hypothetical ``nodes``-way split of
+    the model axis (default 4) — the planning number for moving to a
+    hierarchical deployment."""
+    from repro import comm as rcomm
+    from repro.launch.mesh import DCN_BW, ICI_BW, topology_for_mesh
+    names = tuple(mesh.axis_names)
+    if "node" in names:
+        topo = topology_for_mesh(mesh)
+    else:
+        M = dict(zip(names, mesh.devices.shape)).get("model", 1)
+        nodes = nodes or min(4, M)
+        if M % nodes or M // nodes < 1:
+            return None
+        topo = rcomm.Topology(nodes, M // nodes,
+                              intra_bw=ICI_BW, inter_bw=DCN_BW)
+    if not topo.hierarchical or not cfg.uses_moe:
+        return None
+    tokens = shape.global_batch * shape.seq_len
+    k = cfg.moe.top_k
+    out = {"topology": {"nodes": topo.num_nodes,
+                        "devices_per_node": topo.devices_per_node,
+                        "bw_ratio": topo.bw_ratio},
+           "dedup_factor": rcomm.expected_dedup_factor(k, topo),
+           "buckets": {}}
+    for r in (0.0, 0.25, 0.5):
+        fi, fe = rcomm.dispatch_bytes(tokens, k, cfg.d_model, topo=topo,
+                                      r_cond=r, num_layers=cfg.num_layers)
+        hi, he = rcomm.dispatch_bytes(tokens, k, cfg.d_model, topo=topo,
+                                      r_cond=r, num_layers=cfg.num_layers,
+                                      dedup=True)
+        out["buckets"][str(r)] = {
+            "flat": {"intra_bytes": fi, "inter_bytes": fe,
+                     "time_s": rcomm.a2a_time_s(fi, fe, topo)},
+            "hier": {"intra_bytes": hi, "inter_bytes": he,
+                     "time_s": rcomm.a2a_time_s(hi, he, topo)},
+        }
+    return out
+
+
 def run_pair(arch: str, shape_name: str, multi_pod: bool,
              out_path: Path, *, luffy_on: bool = True,
-             bucket: int = 0, variant: str = "baseline"):
+             bucket: int = 0, variant: str = "baseline",
+             nodes: int = 0):
     import jax
     import jax.numpy as jnp
     from repro import optim, serve_lib, train_lib
@@ -103,9 +148,9 @@ def run_pair(arch: str, shape_name: str, multi_pod: bool,
     t0 = time.time()
     cfg = get_config(arch)
     shape = SHAPES[shape_name]
-    mesh = make_production_mesh(multi_pod=multi_pod)
-    rec = {"arch": arch, "shape": shape_name,
-           "mesh": "2x16x16" if multi_pod else "16x16",
+    mesh = make_production_mesh(multi_pod=multi_pod, nodes=nodes)
+    mesh_tag = "x".join(str(d) for d in mesh.devices.shape)
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_tag,
            "variant": variant, "status": "unknown"}
 
     if shape_name == "long_500k" and not cfg.supports_long_decode:
@@ -131,7 +176,8 @@ def run_pair(arch: str, shape_name: str, multi_pod: bool,
     params_in = with_sharding(pstruct, pspecs)
     luffy = LuffyConfig(
         enable_condensation=luffy_on and cfg.uses_moe,
-        enable_migration=luffy_on and cfg.uses_moe)
+        enable_migration=luffy_on and cfg.uses_moe,
+        comm_mode="hier" if nodes > 1 else "flat")
 
     if shape.mode == "train":
         # 100B+ models: full f32 Adam moments cannot fit 16GB/chip even at
@@ -189,6 +235,8 @@ def run_pair(arch: str, shape_name: str, multi_pod: bool,
 
     ma = compiled.memory_analysis()
     ca = compiled.cost_analysis() or {}
+    if isinstance(ca, (list, tuple)):     # old jax: list of per-program dicts
+        ca = ca[0] if ca else {}
     hlo = compiled.as_text()
     coll = parse_collectives(hlo)
     # loop-corrected analysis: cost_analysis counts while (scan) bodies
@@ -258,6 +306,8 @@ def run_pair(arch: str, shape_name: str, multi_pod: bool,
             "active_params": cfg.active_param_count(),
         },
         "analytic": analytic,
+        "comm_ledger": (comm_traffic_ledger(cfg, shape, mesh, nodes=nodes)
+                        if shape.mode == "train" else None),
     })
     out_path.parent.mkdir(parents=True, exist_ok=True)
     out_path.write_text(json.dumps(rec, indent=1))
@@ -343,18 +393,23 @@ def main():
     ap.add_argument("--bucket", type=int, default=0)
     ap.add_argument("--variant", default="baseline")
     ap.add_argument("--no-luffy", action="store_true")
+    ap.add_argument("--nodes", type=int, default=0,
+                    help="hierarchical mesh: split the model axis into "
+                         "this many nodes (comm_mode=hier)")
     args = ap.parse_args()
     if args.all:
         orchestrate(args.jobs)
         return
     mesh_tag = "2x16x16" if args.multi_pod else "16x16"
+    if args.nodes > 1:
+        mesh_tag += f"__hier{args.nodes}"
     out = Path(args.out) if args.out else \
         ARTIFACTS / f"{args.arch}__{args.shape}__{mesh_tag}.json"
     out.parent.mkdir(parents=True, exist_ok=True)
     try:
         run_pair(args.arch, args.shape, args.multi_pod, out,
                  luffy_on=not args.no_luffy, bucket=args.bucket,
-                 variant=args.variant)
+                 variant=args.variant, nodes=args.nodes)
     except Exception as e:
         rec = {"arch": args.arch, "shape": args.shape, "mesh": mesh_tag,
                "variant": args.variant, "status": "error",

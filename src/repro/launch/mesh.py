@@ -1,36 +1,71 @@
-"""Production meshes.
+"""Production meshes + the physical topologies that back them.
 
 ``make_production_mesh`` is a FUNCTION (not a module-level constant) so
 importing this module never touches jax device state. The dry-run sets
 ``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before any jax
 import to get placeholder devices.
 
+Flat meshes carry a ``model`` expert-parallel axis; hierarchical meshes
+(``nodes > 1``) split it into ``("node", "local")`` so the comm
+subsystem can run two-phase collectives over the bandwidth hierarchy
+(DESIGN.md §5). Device order is node-major, matching
+``repro.comm.Topology``.
+
 Target hardware: TPU v5e-class — 197 TFLOP/s bf16, 819 GB/s HBM,
-~50 GB/s/link ICI (constants used by the roofline, see benchmarks/).
+~50 GB/s/link ICI intra-node and ~12 GB/s DCN across nodes (constants
+used by the roofline and the topology-aware traffic model).
 """
 from __future__ import annotations
 
+from typing import Optional
+
 import jax
 
+from repro.comm import Topology, make_mesh
+from repro.comm.topology import DEFAULT_INTER_BW, DEFAULT_INTRA_BW
 
-def make_production_mesh(*, multi_pod: bool = False):
+
+def make_production_mesh(*, multi_pod: bool = False, nodes: int = 0):
+    """16×16 pod (or 2×16×16 multi-pod). ``nodes > 1`` splits the model
+    axis into a (node, local) hierarchy of that many nodes."""
+    if nodes > 1:
+        model = 16
+        assert model % nodes == 0, (model, nodes)
+        shape = (2, 16, nodes, model // nodes) if multi_pod \
+            else (16, nodes, model // nodes)
+        axes = ("pod", "data", "node", "local") if multi_pod \
+            else ("data", "node", "local")
+        return make_mesh(shape, axes)
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)
 
 
-def make_host_mesh(model: int = 4):
-    """Small mesh over whatever devices exist (CPU testing)."""
+def make_host_mesh(model: int = 4, nodes: int = 0):
+    """Small mesh over whatever devices exist (CPU testing). ``nodes > 1``
+    builds the hierarchical ("data", "node", "local") layout."""
     n = len(jax.devices())
     model = min(model, n)
     data = n // model
-    return jax.make_mesh(
-        (data, model), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    if nodes > 1:
+        assert model % nodes == 0, (model, nodes)
+        return make_mesh((data, nodes, model // nodes),
+                         ("data", "node", "local"))
+    return make_mesh((data, model), ("data", "model"))
 
 
-# Hardware constants for the roofline analysis (per chip).
+def topology_for_mesh(mesh, *, intra_bw: Optional[float] = None,
+                      inter_bw: Optional[float] = None) -> Topology:
+    """The hardware topology backing a mesh, priced with the constants
+    below unless overridden."""
+    return Topology.from_mesh(mesh, intra_bw=intra_bw or ICI_BW,
+                              inter_bw=inter_bw or DCN_BW)
+
+
+# Hardware constants for the roofline / topology pricing (per chip).
+# Link bandwidths live in repro.comm.topology (the pricing source of
+# truth); these aliases keep the roofline's historical import path.
 PEAK_FLOPS_BF16 = 197e12      # FLOP/s
 HBM_BW = 819e9                # B/s
-ICI_BW = 4.9e10               # B/s per link (~50 GB/s)
+ICI_BW = DEFAULT_INTRA_BW     # B/s per link (~50 GB/s, intra-node)
+DCN_BW = DEFAULT_INTER_BW     # B/s per link (~12 GB/s, cross-node DCN)

@@ -34,6 +34,16 @@ def main():
     ap.add_argument("--mesh", choices=["host", "production", "none"],
                     default="host")
     ap.add_argument("--model-axis", type=int, default=4)
+    ap.add_argument("--comm-mode", choices=["flat", "hier"], default="flat",
+                    help="expert-parallel collectives: one flat all-to-all "
+                         "or hierarchical two-phase (DESIGN.md §5)")
+    ap.add_argument("--nodes", type=int, default=0,
+                    help="split the model axis into this many nodes "
+                         "(builds a (node, local) mesh; required for "
+                         "--comm-mode hier)")
+    ap.add_argument("--inter-bw", type=float, default=0.0,
+                    help="override cross-node bandwidth (bytes/s) for the "
+                         "topology ledger / migration link costs")
     ap.add_argument("--no-condensation", action="store_true")
     ap.add_argument("--no-migration", action="store_true")
     ap.add_argument("--optimizer", default="adamw")
@@ -51,7 +61,8 @@ def main():
     from repro.configs import get_config
     from repro.data import SyntheticLM
     from repro.dist import DistContext, make_dist, single_device
-    from repro.launch.mesh import make_host_mesh, make_production_mesh
+    from repro.launch.mesh import (make_host_mesh, make_production_mesh,
+                                   topology_for_mesh)
     from repro.models.model import build_model
 
     cfg = get_config(args.arch)
@@ -62,18 +73,29 @@ def main():
     gb = args.global_batch or (8 if args.reduced else 256)
     shape = ShapeConfig("train", args.seq_len, gb, "train")
 
+    nodes = args.nodes
+    if args.comm_mode == "hier" and nodes <= 1:
+        nodes = 2                     # hier needs a (node, local) split
     if args.mesh == "none" or len(jax.devices()) == 1:
         dist = single_device()
     else:
-        mesh = (make_production_mesh() if args.mesh == "production"
-                else make_host_mesh(model=args.model_axis))
-        dist = make_dist(mesh, "train", gb, moe_arch=cfg.uses_moe)
+        mesh = (make_production_mesh(nodes=nodes)
+                if args.mesh == "production"
+                else make_host_mesh(model=args.model_axis, nodes=nodes))
+        topo = topology_for_mesh(
+            mesh, inter_bw=args.inter_bw or None)
+        dist = make_dist(mesh, "train", gb, moe_arch=cfg.uses_moe,
+                         topology=topo)
+        print(f"mesh {dict(zip(mesh.axis_names, mesh.devices.shape))} "
+              f"topology {topo.num_nodes}x{topo.devices_per_node} "
+              f"bw_ratio={topo.bw_ratio:.1f} comm_mode={args.comm_mode}")
 
     luffy = LuffyConfig(
         enable_condensation=not args.no_condensation and cfg.uses_moe,
         enable_migration=not args.no_migration and cfg.uses_moe,
         condense_group=min(128, args.seq_len),
-        combine_slack=2.0)
+        combine_slack=2.0,
+        comm_mode=args.comm_mode)
     ocfg = OptimConfig(name=args.optimizer, lr=args.lr,
                        total_steps=args.steps,
                        warmup_steps=max(2, args.steps // 20))
@@ -118,11 +140,15 @@ def main():
         rec = {"step": i, "time_s": round(dt, 3), "bucket": bucket, **m}
         log.append(rec)
         if i % max(1, args.steps // 20) == 0 or i == args.steps - 1:
+            inter = ""
+            if m.get("inter_bytes_flat", 0.0) > 0:
+                inter = (f" inter={m['inter_bytes_dedup']:.0f}B"
+                         f"/{m['inter_bytes_flat']:.0f}B")
             print(f"step {i:5d} loss={m['loss']:.4f} "
                   f"cond={m['condense_rate']:.2f} bucket={bucket} "
                   f"local={m['local_frac']:.2f} "
-                  f"drop=({m['dispatch_drop']:.3f},{m['combine_drop']:.3f}) "
-                  f"{dt:.2f}s", flush=True)
+                  f"drop=({m['dispatch_drop']:.3f},{m['combine_drop']:.3f})"
+                  f"{inter} {dt:.2f}s", flush=True)
         if args.ckpt and args.ckpt_every and (i + 1) % args.ckpt_every == 0:
             checkpoint.save(args.ckpt, params, pspecs=pspecs, step=i + 1)
     print(f"done: {args.steps} steps in {time.time()-t_start:.1f}s; "

@@ -23,6 +23,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro import comm as rcomm
 from repro.config import LuffyConfig, ModelConfig
 from repro.core import moe_layer as moe
 from repro.dist import DistContext
@@ -186,7 +187,7 @@ def _attn_seqpar(p, cfg, xn, positions, layer_idx, *, causal, dist,
     pos_spec = P(bax, sax)
     p_specs = jax.tree.map(lambda _: P(), p)
     kvv = kv_valid
-    fn = jax.shard_map(
+    fn = rcomm.shard_map(
         inner, mesh=mesh,
         in_specs=(p_specs, x_spec, pos_spec,
                   pos_spec if kvv is not None else P(),
@@ -247,13 +248,9 @@ def _token_mixer_full(p, cfg, x, positions, layer_idx, *, causal, enc_out,
 
 def _pmean_all(v, axes):
     """pmean over all mesh axes regardless of the value's varying state
-    (pcast the missing axes to varying — replicated-over-model decode aux
-    scalars otherwise fail the vma check)."""
-    vma = getattr(jax.typeof(v), "vma", frozenset())
-    missing = tuple(a for a in axes if a not in vma)
-    if missing:
-        v = jax.lax.pcast(v, missing, to="varying")
-    return jax.lax.pmean(v, axes)
+    (replicated-over-model decode aux scalars otherwise fail the vma
+    check on new jax; see repro.comm.compat.pmean_all)."""
+    return rcomm.pmean_all(v, axes)
 
 
 def _moe_apply_dist(p_moe, x, sideband, s_prev, threshold, cfg, luffy,
@@ -274,15 +271,16 @@ def _moe_apply_dist(p_moe, x, sideband, s_prev, threshold, cfg, luffy,
         use_2d = (_os.environ.get("REPRO_MOE_DECODE_2D", "1") == "1"
                   and fsdp
                   and cfg.moe.d_ff % n_fsdp == 0)
+        ma = dist.model_axis          # "model" or ("node", "local")
         moe_specs = jax.tree.map(lambda _: P(), p_moe)
         if use_2d:
             moe_specs["experts"] = {
-                k: (P("model", fsdp, None) if k == "w_down"
-                    else P("model", None, fsdp))
+                k: (P(ma, fsdp, None) if k == "w_down"
+                    else P(ma, None, fsdp))
                 for k in p_moe["experts"]}
         else:
             moe_specs["experts"] = jax.tree.map(
-                lambda _: P("model", None, None), p_moe["experts"])
+                lambda _: P(ma, None, None), p_moe["experts"])
 
         batch_sharded = bool(dist.batch_axes)
 
@@ -295,12 +293,12 @@ def _moe_apply_dist(p_moe, x, sideband, s_prev, threshold, cfg, luffy,
             aux = jax.tree.map(lambda a: _pmean_all(a, all_axes), aux)
             return y, aux
 
-        fn = jax.shard_map(
+        fn = rcomm.shard_map(
             inner_dec, mesh=mesh,
             in_specs=(moe_specs, P(bax, None, None)),
             out_specs=(P(bax, None, None),
                        jax.tree.map(lambda _: P(),
-                                    moe.MoEAux(*([0.0] * 7)))))
+                                    moe.MoEAux(*([0.0] * moe.N_AUX)))))
         y, aux = fn(p_moe, x)
         return y, dict(sideband), None, aux
     if not dist.enabled or dist.model_size == 1:
@@ -326,6 +324,8 @@ def _moe_apply_dist(p_moe, x, sideband, s_prev, threshold, cfg, luffy,
     has_sp = s_prev is not None
 
     fsdp = tuple(a for a in dist.fsdp_axes if a in all_axes)
+    comm_ctx = rcomm.CommContext.build(luffy.comm_mode, dist.model_axis,
+                                       dist.topology)
 
     def inner(p_moe_l, x_l, lbl, slen, sp, thr):
         if fsdp:
@@ -340,7 +340,7 @@ def _moe_apply_dist(p_moe, x, sideband, s_prev, threshold, cfg, luffy,
         sb = {"labels": lbl, "seq_len": slen}
         y, sb2, s_next, aux = moe.moe_core(
             p_moe_l, x_l, sb, cfg, luffy, mode=mode, capacity=capacity,
-            axis_name=dist.model_axis, threshold=thr,
+            comm=comm_ctx, threshold=thr,
             s_prev=(sp if has_sp else None),
             group_size=luffy.condense_group,
             combine_slack=luffy.combine_slack, use_kernel=luffy.use_kernels)
@@ -353,20 +353,22 @@ def _moe_apply_dist(p_moe, x, sideband, s_prev, threshold, cfg, luffy,
                                     luffy.condense_group)
         return y, sb2["labels"], sb2["seq_len"], s_next, aux
 
+    ma = dist.model_axis              # "model" or ("node", "local")
     moe_specs = jax.tree.map(lambda _: P(), p_moe)
     moe_specs["experts"] = {
-        k: (P("model", fsdp if fsdp else None, None) if k == "w_down"
-            else P("model", None, fsdp if fsdp else None))
+        k: (P(ma, fsdp if fsdp else None, None) if k == "w_down"
+            else P(ma, None, fsdp if fsdp else None))
         for k in p_moe["experts"]}
     sp_in = sp_spec if has_sp else P()
     sp_arg = s_prev if has_sp else jnp.zeros((1,), jnp.float32)
     s_out_spec = sp_spec if (luffy.enable_condensation and mode != "decode") \
         else P()
-    fn = jax.shard_map(
+    fn = rcomm.shard_map(
         inner, mesh=mesh,
         in_specs=(moe_specs, x_spec, lbl_spec, len_spec, sp_in, P()),
         out_specs=(x_spec, lbl_spec, len_spec, s_out_spec,
-                   jax.tree.map(lambda _: P(), moe.MoEAux(*([0.0] * 7)))))
+                   jax.tree.map(lambda _: P(),
+                                moe.MoEAux(*([0.0] * moe.N_AUX)))))
     y, lbl2, slen2, s_next, aux = fn(p_moe, x, sideband["labels"],
                                      sideband["seq_len"], sp_arg, threshold)
     if not (luffy.enable_condensation and mode != "decode"):
@@ -401,7 +403,7 @@ def _layer_full(p, cfg, luffy, dist, x, sideband, s_prev, threshold,
             x = x + ssm_mod.rwkv_cmix_apply(p["ffn"], cfg, xn)
         else:
             x = x + bk.ffn_apply(p["ffn"], cfg, xn)
-        aux = moe.MoEAux(*([jnp.float32(0.0)] * 7))
+        aux = moe.MoEAux(*([jnp.float32(0.0)] * moe.N_AUX))
     return x, sideband, s_prev, aux
 
 
@@ -419,11 +421,12 @@ def embed_tokens(params, cfg: ModelConfig, tokens, prefix=None,
     [256,4096,320] buffers dominating the llama4 memory profile)."""
     cdt = bk._dtype(cfg.compute_dtype)
     table = params["embed"]["table"]
+    m_axes = () if dist is None else dist.model_axes_tuple
     staged = (dist is not None and dist.enabled
-              and dist.model_axis in (dist.batch_axes or ()))
+              and any(a in (dist.batch_axes or ()) for a in m_axes))
     if staged:
         from jax.sharding import PartitionSpec as P
-        dax = tuple(a for a in dist.batch_axes if a != dist.model_axis)
+        dax = tuple(a for a in dist.batch_axes if a not in m_axes)
         tokens = dist.constrain(tokens, P(dax or None, dist.seq_axis))
     x = jnp.take(table, tokens, axis=0).astype(cdt)
     if staged:
@@ -541,7 +544,7 @@ def forward_train(params, cfg: ModelConfig, luffy: LuffyConfig,
             aux_sum = jax.tree.map(lambda a, b: a + b, aux_sum, aux)
         return (x, sb, sp, aux_sum), None
 
-    aux0 = moe.MoEAux(*([jnp.float32(0.0)] * 7))
+    aux0 = moe.MoEAux(*([jnp.float32(0.0)] * moe.N_AUX))
     n_groups = cfg.num_layers // period
     # stack the per-position param lists into a tuple pytree for scan
     stacked = tuple(params["layers"])
@@ -579,6 +582,8 @@ def forward_train(params, cfg: ModelConfig, luffy: LuffyConfig,
         "local_frac": aux_mean.local_frac,
         "traffic_before": aux_mean.traffic_before,
         "traffic_after": aux_mean.traffic_after,
+        "inter_bytes_flat": aux_mean.inter_bytes_flat,
+        "inter_bytes_dedup": aux_mean.inter_bytes_dedup,
     }
     return total, metrics
 

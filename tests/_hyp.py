@@ -1,0 +1,34 @@
+"""Optional-dependency shim for hypothesis (see requirements-dev note in
+requirements.txt and DESIGN.md §7).
+
+``hypothesis`` is a dev-only dependency: the property tests use it when
+installed; without it they must *skip* — not kill collection of the
+whole module (the seed repo hard-imported it and the tier-1 suite died
+at collection). Import ``given/settings/st`` from here instead of from
+hypothesis directly: when the package is absent the decorators degrade
+to ``pytest.mark.skip`` and the strategy objects to inert stubs, so
+every non-property test in the same file still runs.
+"""
+import pytest
+
+try:
+    from hypothesis import assume, given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                      # optional dev dependency
+    HAVE_HYPOTHESIS = False
+
+    def assume(*_a, **_k):
+        return True
+
+    def given(*_a, **_k):
+        return lambda f: pytest.mark.skip(
+            reason="hypothesis not installed (optional dev dep)")(f)
+
+    def settings(*_a, **_k):
+        return lambda f: f
+
+    class _StrategyStub:
+        def __getattr__(self, _name):
+            return lambda *a, **k: None
+
+    st = _StrategyStub()

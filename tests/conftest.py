@@ -1,6 +1,9 @@
-"""Shared fixtures. NOTE: no XLA_FLAGS here — unit/smoke tests must see
-the real single CPU device. Multi-device tests spawn subprocesses with
-their own --xla_force_host_platform_device_count (see test_multidevice.py).
+"""Shared fixtures. NOTE: no XLA_FLAGS set here — unit/smoke tests run
+against whatever the environment provides (1 real CPU device locally;
+CI forces 8 fake host devices, which they must also tolerate).
+Multi-device tests spawn subprocesses with their own
+--xla_force_host_platform_device_count regardless (see
+test_multidevice.py / test_comm.py).
 """
 import os
 import sys

@@ -24,8 +24,8 @@ def test_checkpoint_reshards_across_meshes(tmp_path):
         model = build_model(cfg)
         params = model.init(jax.random.PRNGKey(0))
 
-        mesh_a = jax.make_mesh((2, 4), ("data", "model"),
-                               axis_types=(jax.sharding.AxisType.Auto,)*2)
+        from repro.comm import make_mesh
+        mesh_a = make_mesh((2, 4), ("data", "model"))
         dist_a = DistContext(mesh_a, batch_axes=("data", "model"),
                              fsdp_axes=("data",))
         specs_a = model.param_pspecs(dist_a)
@@ -33,8 +33,7 @@ def test_checkpoint_reshards_across_meshes(tmp_path):
             lambda s: dist_a.sharding(s), specs_a))
         checkpoint.save("{tmp_path}/ck", p_a, pspecs=specs_a, step=3)
 
-        mesh_b = jax.make_mesh((4, 2), ("data", "model"),
-                               axis_types=(jax.sharding.AxisType.Auto,)*2)
+        mesh_b = make_mesh((4, 2), ("data", "model"))
         dist_b = DistContext(mesh_b, batch_axes=("data", "model"),
                              fsdp_axes=("data",))
         specs_b = model.param_pspecs(dist_b)

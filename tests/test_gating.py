@@ -2,7 +2,7 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import assume, given, settings, strategies as st
+from _hyp import assume, given, settings, st   # optional dep; skips when absent
 
 from repro.core.gating import (dispatch_positions, expert_load, gate_apply,
                                gate_init)

@@ -37,8 +37,8 @@ def _run(body: str) -> str:
         shape = ShapeConfig("t", 128, 8, "train")
         data = SyntheticLM(cfg, shape)
         b = {k: jnp.asarray(v) for k, v in data.batch(0).items()}
-        mesh = jax.make_mesh((2, 4), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        from repro.comm import make_mesh
+        mesh = make_mesh((2, 4), ("data", "model"))
         dist = DistContext(mesh, batch_axes=("data", "model"),
                            seq_axis=None, fsdp_axes=("data",))
     """) + textwrap.dedent(body)
