@@ -97,6 +97,19 @@ def run(fast: bool = True):
     rows.append(("fig5a/deeper_more_similar", 0.0,
                  f"{fracs[-1] >= fracs[0] - 0.05}"))
 
+    # same-expert similarity deciles + the capacity bucket they support
+    # (the similarity_quantiles → pick_rate_bucket host path the adaptive
+    # threshold uses; quantiles over off-diagonal same-expert pairs only)
+    from repro.core.condensation import (pairwise_cosine, pick_rate_bucket,
+                                         similarity_quantiles)
+    blk = len(states) - 1
+    G = min(128, states[blk].shape[0])
+    sim = np.asarray(pairwise_cosine(jnp.asarray(states[blk][:G])))
+    q = similarity_quantiles(sim, expert_idx=experts[blk][:G])
+    bucket = pick_rate_bucket(0.75, q, (0.0, 0.25, 0.5))
+    rows.append(("fig5a/same_expert_deciles", 0.0,
+                 f"q50={q[5]:.2f} q90={q[9]:.2f} bucket={bucket}"))
+
     # Fig 5b: similarity preservation through the expert
     blk = len(states) - 1
     sims, i, j = _pair_sims(states[blk], experts[blk])

@@ -19,6 +19,7 @@ MODULES = [
     "table4_convergence",   # paper Table IV
     "fig10_sensitivity",    # paper Fig. 10
     "fig_hier_sensitivity",  # beyond-paper: bandwidth-hierarchy sweep
+    "fig_overlap_sweep",    # beyond-paper: pipelined-overlap sweep
     "roofline",             # deliverable (g)
 ]
 
@@ -26,12 +27,14 @@ MODULES = [
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--slow", action="store_true")
-    ap.add_argument("--only", default=None)
+    ap.add_argument("--only", default=None,
+                    help="comma-separated substrings of module names")
     args = ap.parse_args()
     fast = not args.slow
+    only = [s for s in (args.only or "").split(",") if s]
     failures = []
     for mod_name in MODULES:
-        if args.only and args.only not in mod_name:
+        if only and not any(s in mod_name for s in only):
             continue
         print(f"# --- {mod_name} ---", flush=True)
         try:

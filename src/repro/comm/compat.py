@@ -60,6 +60,30 @@ def axis_index(axis_name: AxisName):
     return idx
 
 
+@jax.custom_vjp
+def optimization_barrier(xs):
+    """Differentiable ``jax.lax.optimization_barrier`` over a pytree.
+
+    0.4.x has no differentiation rule for the primitive, so the barrier
+    is wrapped in a custom_vjp with identity cotangents — sound because
+    the barrier only constrains *scheduling*, never values. Used by the
+    ``repro.sched`` pipeline to pin collective issue order inside the
+    differentiated train step.
+    """
+    return jax.lax.optimization_barrier(xs)
+
+
+def _ob_fwd(xs):
+    return optimization_barrier(xs), None
+
+
+def _ob_bwd(_, ct):
+    return (ct,)
+
+
+optimization_barrier.defvjp(_ob_fwd, _ob_bwd)
+
+
 def pmean_all(v, axes: Tuple[str, ...]):
     """pmean over all mesh axes regardless of the value's varying state.
 

@@ -122,6 +122,20 @@ def a2a_time_s(intra_bytes: float, inter_bytes: float,
             + messages_inter * topo.inter_lat)
 
 
+def phase_messages(topo: Topology) -> Tuple[int, int]:
+    """(intra, inter) messages one device sends per two-phase exchange —
+    the per-collective latency term chunked pipelining multiplies (every
+    capacity chunk re-pays it; ``repro.sched.cost`` prices the trade)."""
+    return max(0, topo.devices_per_node - 1), max(0, topo.num_nodes - 1)
+
+
+def chunk_latency_s(topo: Topology) -> float:
+    """Latency one *chunked* collective pays on top of its bandwidth
+    time: per-message latencies over both phases of the exchange."""
+    mi, me = phase_messages(topo)
+    return mi * topo.intra_lat + me * topo.inter_lat
+
+
 def simulate_dispatch_rows(rng: np.random.Generator, tokens: int,
                            top_k: int, topo: Topology, *,
                            r_cond: float = 0.0):

@@ -249,6 +249,17 @@ class LuffyConfig:
     # bit-compatible with "flat" but with node-aggregated inter-node
     # messages and the per-node dedup ledger active.
     comm_mode: str = "flat"
+    # Execution scheduling (DESIGN.md §6): "sync" runs gate → dispatch →
+    # expert FFN → combine strictly in order; "pipeline" splits the
+    # static dispatch capacity into `pipeline_chunks` 8-aligned chunks
+    # and double-buffers chunk k's collectives against chunk k-1's
+    # expert FFN (repro.sched). Forward outputs are bit-identical to
+    # "sync" in both comm modes (weight grads accumulate per chunk, so
+    # training may drift at the last ulp like remat); single-device
+    # runs and the decode all-reduce path (no all-to-all to hide)
+    # degenerate to sync.
+    exec_mode: str = "sync"
+    pipeline_chunks: int = 4
 
 
 # ---------------------------------------------------------------------------

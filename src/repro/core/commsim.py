@@ -25,7 +25,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Dict, Optional
+from typing import Dict, Optional, Tuple
 
 from repro.comm import Topology, dispatch_bytes
 from repro.config import ModelConfig
@@ -103,8 +103,10 @@ def default_topology(num_experts: int, nodes: int = 2,
 
 
 def _hier_comm_ms(setup: PaperSetup, cal: Calibration, topo: Topology,
-                  *, r_cond: float, locality: float) -> float:
-    """Two-phase dispatch+combine time on a hierarchical fabric.
+                  *, r_cond: float, locality: float
+                  ) -> Tuple[float, float]:
+    """(dispatch_ms, combine_ms) of the two-phase exchange on a
+    hierarchical fabric.
 
     The same calibrated ``cal.link_bw`` constant prices the expensive
     (inter-node) axis — it was fit on the flat fabric's bottleneck —
@@ -112,7 +114,9 @@ def _hier_comm_ms(setup: PaperSetup, cal: Calibration, topo: Topology,
     payloads dedupe per node (condensation representatives cross once
     per node); combine rows pre-aggregate within the node before
     crossing back, and the migration locality gain additionally keeps
-    ``locality`` of them off the network entirely.
+    ``locality`` of them off the network entirely. Returned split so the
+    overlap model (``repro.sched.cost``) can pipeline the two directions
+    separately; callers wanting the total sum the pair.
     """
     tokens = setup.tokens
     d = setup.cfg.d_model
@@ -123,26 +127,32 @@ def _hier_comm_ms(setup: PaperSetup, cal: Calibration, topo: Topology,
     inter_c = inter_d * (1.0 - locality)
     inter_bw = cal.link_bw
     intra_bw = cal.link_bw * topo.bw_ratio
-    return ((intra_d + intra_c) / intra_bw
-            + (inter_d + inter_c) / inter_bw) * 1e3
+    dispatch = (intra_d / intra_bw + inter_d / inter_bw) * 1e3
+    combine = (intra_c / intra_bw + inter_c / inter_bw) * 1e3
+    return dispatch, combine
 
 
 def predict(setup: PaperSetup, cal: Calibration, *,
             system: str, r_cond: float = 0.5, locality: float = 0.35,
             contention_slope: float = 0.44,
             popular_frac: float = 0.5,
-            topo: Optional[Topology] = None) -> Dict[str, float]:
+            topo: Optional[Topology] = None,
+            chunks: Optional[int] = None) -> Dict[str, float]:
     """Return {'comp_ms', 'comm_ms'} for one system.
 
     ``vanilla-hier`` / ``luffy-hier`` price the two-phase hierarchical
     collectives on a (nodes × devices/node) fabric described by ``topo``
-    (default: 2-node split of the expert devices, bw_ratio 4)."""
+    (default: 2-node split of the expert devices, bw_ratio 4).
+    ``vanilla-overlap`` / ``luffy-overlap`` additionally pipeline the
+    expert FFN against dispatch/combine over ``chunks`` capacity chunks
+    (None = optimal; ``repro.sched.cost``) and also report
+    ``step_ms`` / ``sync_ms`` / ``chunks``."""
     E = setup.cfg.moe.num_experts
     attn = _attn_flops(setup)
     if system in ("vanilla-hier", "luffy-hier"):
         topo = topo if topo is not None else default_topology(E)
         is_luffy = system == "luffy-hier"
-        comm_ms = _hier_comm_ms(
+        d_ms, c_ms = _hier_comm_ms(
             setup, cal, topo,
             r_cond=r_cond if is_luffy else 0.0,
             locality=locality if is_luffy else 0.0)
@@ -150,7 +160,26 @@ def predict(setup: PaperSetup, cal: Calibration, *,
             comp = attn * 0.92 + _expert_flops(setup, 1.0 - r_cond)
         else:
             comp = attn + _expert_flops(setup)
-        return {"comp_ms": comp / cal.speed * 1e3, "comm_ms": comm_ms}
+        return {"comp_ms": comp / cal.speed * 1e3, "comm_ms": d_ms + c_ms}
+    if system in ("vanilla-overlap", "luffy-overlap"):
+        from repro.sched import cost as sched_cost
+        topo = topo if topo is not None else default_topology(E)
+        is_luffy = system == "luffy-overlap"
+        rc = r_cond if is_luffy else 0.0
+        d_ms, c_ms = _hier_comm_ms(setup, cal, topo, r_cond=rc,
+                                   locality=locality if is_luffy else 0.0)
+        attn_ms = attn * (0.92 if is_luffy else 1.0) / cal.speed * 1e3
+        ffn_ms = _expert_flops(setup, 1.0 - rc) / cal.speed * 1e3
+        kw = dict(dispatch_ms=d_ms, ffn_ms=ffn_ms, combine_ms=c_ms)
+        if chunks is None:
+            n, moe_ms = sched_cost.optimal_chunks(topo, **kw)
+        else:
+            n = chunks
+            moe_ms = sched_cost.overlap_ms(topo, n, **kw)
+        return {"comp_ms": attn_ms + ffn_ms, "comm_ms": d_ms + c_ms,
+                "step_ms": attn_ms + moe_ms,
+                "sync_ms": attn_ms + sched_cost.sync_ms(topo, **kw),
+                "chunks": n}
     if system == "vanilla":
         comm = 2 * _a2a_bytes(setup)
         comp = attn + _expert_flops(setup)

@@ -171,9 +171,32 @@ def uncondense(y, rep_idx):
     return jnp.take(y, rep_idx, axis=0)
 
 
-def similarity_quantiles(sim, same_expert_only: bool = True):
+def similarity_quantiles(sim, expert_idx=None, same_expert_only: bool = True):
     """Decile values of the off-diagonal similarity distribution (host
-    stats for bucket selection / Fig. 5)."""
-    s = sim.reshape(-1)
-    qs = jnp.linspace(0.0, 1.0, 11)
-    return jnp.quantile(s, qs)
+    stats for bucket selection / Fig. 5).
+
+    sim: [..., G, G] similarity; expert_idx: [..., G] primary expert ids,
+    required when ``same_expert_only`` — only off-diagonal same-expert
+    pairs (the pairs condensation can actually merge) enter the
+    distribution, not the mostly-zero full matrix. Host-side numpy (the
+    selection size is data-dependent, so this is not traceable); returns
+    the 11 decile values ``pick_rate_bucket`` consumes.
+    """
+    import numpy as np
+    s = np.asarray(sim, np.float64)
+    G = s.shape[-1]
+    s = s.reshape(-1, s.shape[-2], G)
+    off_diag = ~np.eye(G, dtype=bool)
+    if same_expert_only:
+        if expert_idx is None:
+            raise ValueError(
+                "same_expert_only=True needs expert_idx to identify "
+                "same-expert pairs (or pass same_expert_only=False)")
+        e = np.asarray(expert_idx).reshape(-1, G)
+        mask = (e[:, :, None] == e[:, None, :]) & off_diag[None]
+    else:
+        mask = np.broadcast_to(off_diag[None], s.shape)
+    vals = s[mask]
+    if vals.size == 0:
+        vals = np.zeros((1,), np.float64)
+    return np.quantile(vals, np.linspace(0.0, 1.0, 11))

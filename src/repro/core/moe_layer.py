@@ -41,6 +41,7 @@ from repro.config import LuffyConfig, MoEConfig, ModelConfig
 from repro.core import condensation as cond
 from repro.core import migration as mig
 from repro.core.gating import dispatch_positions, gate_apply, gate_init
+from repro.sched import plan_chunks, run_pipeline
 
 Array = jnp.ndarray
 
@@ -350,33 +351,94 @@ def moe_core(params, x, sideband: Dict[str, Array], cfg: ModelConfig,
     mbuf = mbuf.at[e_safe, p_safe].add(
         meta * v_f[:, None].astype(jnp.int32), mode="drop")
 
-    # ---- dispatch all-to-all (flat or hierarchical two-phase) -------------
-    if M > 1:
-        buf = comm.all_to_all(buf)
-        mbuf = comm.all_to_all(mbuf)
-    # [M_src * E_local, C, .] -> [E_local, M_src*C, .]
-    rows = buf.reshape(M, E_local, C, d + 2).transpose(1, 0, 2, 3) \
-              .reshape(E_local, M * C, d + 2)
-    rmeta = mbuf.reshape(M, E_local, C, 2).transpose(1, 0, 2, 3) \
-                .reshape(E_local, M * C, 2)
+    # ---- dispatch → expert FFN → (vanilla) combine ------------------------
+    # exec_mode="pipeline" chunks the static capacity dim and runs the
+    # repro.sched software pipeline: chunk k's collective is issued before
+    # chunk k-1's FFN result is consumed (DESIGN.md §6). Bit-identical to
+    # "sync": capacity slicing commutes with the data-movement-only
+    # collectives and the row-wise FFN, and chunk results are reassembled
+    # in the sync layout before any order-sensitive step (the migrate-mode
+    # regroup sorts across ALL rows, so it stays a post-pipeline barrier).
+    def _ffn_rows(rows_k):
+        """rows_k: [E_local, M, Ck, d+2] -> (out, prim) same leading dims."""
+        xr = rows_k[..., :d]
+        gw = rows_k[..., d:d + 1]
+        prim_k = rows_k[..., d + 1:d + 2]
+        ck = rows_k.shape[2]
+        h = _rms(xr, params["norm"]["scale"]).astype(cdt)
+        y = expert_ffn(params["experts"], h.reshape(E_local, M * ck, d),
+                       act, cdt, use_kernel=use_kernel) \
+            .reshape(E_local, M, ck, d)
+        out_k = y * gw
+        if migrate:
+            out_k = out_k + xr * prim_k    # primary copy carries residual
+        return out_k, prim_k
 
-    # ---- expert computation ----------------------------------------------
-    xr = rows[..., :d]
-    gw = rows[..., d:d + 1]
-    prim = rows[..., d + 1:d + 2]
-    h = _rms(xr, params["norm"]["scale"]).astype(cdt)
-    y = expert_ffn(params["experts"], h, act, cdt, use_kernel=use_kernel)
-    out_rows = y * gw
-    if migrate:
-        out_rows = out_rows + xr * prim        # primary copy carries residual
+    assert luffy.exec_mode in ("sync", "pipeline"), luffy.exec_mode
+    pipelined = luffy.exec_mode == "pipeline" and M > 1
+    if pipelined:
+        plan = plan_chunks(C, luffy.pipeline_chunks)
+
+        def _disp(k):
+            # vanilla needs no row metadata — exchanging it would put a
+            # dead collective on the pipelined critical path (the barrier
+            # keeps payloads live, so XLA could not DCE it there)
+            o, s = plan.offsets[k], plan.sizes[k]
+            bk = comm.all_to_all(jax.lax.slice_in_dim(buf, o, o + s,
+                                                      axis=1))
+            if not migrate:
+                return bk
+            return bk, comm.all_to_all(jax.lax.slice_in_dim(mbuf, o, o + s,
+                                                            axis=1))
+
+        def _compute(k, payload):
+            bk, mk = payload if migrate else (payload, None)
+            s = plan.sizes[k]
+            rows_k = bk.reshape(M, E_local, s, d + 2).transpose(1, 0, 2, 3)
+            if not migrate:
+                return _ffn_rows(rows_k)
+            meta_k = mk.reshape(M, E_local, s, 2).transpose(1, 0, 2, 3)
+            return _ffn_rows(rows_k) + (meta_k,)
+
+        if not migrate:
+            def _comb(k, res):
+                out_k = res[0]                 # [E_local, M, Ck, d]
+                back_k = out_k.transpose(1, 0, 2, 3) \
+                              .reshape(E, out_k.shape[2], d)
+                return comm.combine(back_k)
+
+            _, backs = run_pipeline(plan.n_chunks, dispatch=_disp,
+                                    compute=_compute, combine=_comb)
+            back = jnp.concatenate(backs, axis=1)            # [E, C, d]
+        else:
+            outs, _ = run_pipeline(plan.n_chunks, dispatch=_disp,
+                                   compute=_compute)
+            out_rows = jnp.concatenate([o for o, _, _ in outs], axis=2) \
+                          .reshape(E_local, M * C, d)
+            prim = jnp.concatenate([p for _, p, _ in outs], axis=2) \
+                      .reshape(E_local, M * C, 1)
+            rmeta = jnp.concatenate([m for _, _, m in outs], axis=2) \
+                       .reshape(E_local, M * C, 2)
+    else:
+        if M > 1:
+            buf = comm.all_to_all(buf)
+            mbuf = comm.all_to_all(mbuf)
+        # [M_src * E_local, C, .] -> [E_local, M_src, C, .]
+        rows4 = buf.reshape(M, E_local, C, d + 2).transpose(1, 0, 2, 3)
+        rmeta = mbuf.reshape(M, E_local, C, 2).transpose(1, 0, 2, 3) \
+                    .reshape(E_local, M * C, 2)
+        out4, prim4 = _ffn_rows(rows4)
+        out_rows = out4.reshape(E_local, M * C, d)
+        prim = prim4.reshape(E_local, M * C, 1)
+        if not migrate:
+            back = out_rows.reshape(E_local, M, C, d) \
+                           .transpose(1, 0, 2, 3).reshape(E, C, d)
+            if M > 1:
+                back = comm.combine(back)
 
     # ---- combine ----------------------------------------------------------
     if not migrate:
-        # vanilla: return rows to their source in dispatch layout
-        back = out_rows.reshape(E_local, M, C, d).transpose(1, 0, 2, 3) \
-                       .reshape(E, C, d)
-        if M > 1:
-            back = comm.combine(back)
+        # vanilla: rows returned to their source in dispatch layout
         vals = back[e_safe, p_safe] * v_f[:, None].astype(cdt)  # [T*k, d]
         delta = jnp.sum(vals.reshape(T, m.top_k, d), axis=1)
         y_tok = xf + delta.astype(xf.dtype)

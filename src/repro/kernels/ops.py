@@ -20,7 +20,7 @@ def _interpret() -> bool:
 
 
 def masked_similarity(x, mask, **kw):
-    kw.setdefault("interpret", _interpret())
+    # backend detection lives in the kernel itself (interpret=None)
     return _similarity.masked_similarity(x, mask, **kw)
 
 

@@ -13,6 +13,7 @@ matrix by streaming d in [bd]-sized VMEM slabs.
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -54,9 +55,16 @@ def _sim_kernel(mask_any_ref, x_ref, y_ref, mask_ref, out_ref, *, bd, d):
 
 @functools.partial(jax.jit, static_argnames=("bg", "bd", "interpret"))
 def masked_similarity(x, mask, *, bg: int = DEFAULT_BG,
-                      bd: int = DEFAULT_BD, interpret: bool = True):
+                      bd: int = DEFAULT_BD,
+                      interpret: Optional[bool] = None):
     """x: [G, d]; mask: [G, G] bool. Returns [G, G] f32 similarity in
-    [0,1], zeroed where mask is False; fully-masked tiles are skipped."""
+    [0,1], zeroed where mask is False; fully-masked tiles are skipped.
+
+    ``interpret=None`` (default) resolves by backend like the other
+    kernels: the compiled Mosaic kernel on TPU, interpreter mode
+    elsewhere. Pass an explicit bool to override (tests force True)."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
     G, d = x.shape
     bg = min(bg, G)
     bd = min(bd, d)

@@ -88,16 +88,24 @@ def parse_collectives(hlo_text: str):
     return out
 
 
-def comm_traffic_ledger(cfg, shape, mesh, *, nodes: int = 0):
-    """Analytic per-step dispatch traffic split by link tier (DESIGN.md §5).
+def comm_traffic_ledger(cfg, shape, mesh, *, nodes: int = 0,
+                        exec_chunks: int = 0):
+    """Analytic per-step dispatch traffic split by link tier (DESIGN.md §5)
+    plus the modeled compute/communication overlap (§6).
 
     For each condensation rate bucket: bytes a flat all-to-all ships
-    across nodes vs. the hierarchical path after per-node dedup. On a
-    flat mesh the ledger prices a hypothetical ``nodes``-way split of
-    the model axis (default 4) — the planning number for moving to a
-    hierarchical deployment."""
+    across nodes vs. the hierarchical path after per-node dedup, and the
+    pipelined MoE-sublayer time — at exactly ``exec_chunks`` chunks when
+    the run executed a pipeline, else at the 1..16 planning optimum
+    (dispatch and combine priced on the hier bytes, expert FFN on the
+    peak-FLOP roofline). On a flat mesh the ledger prices a hypothetical
+    ``nodes``-way split of the model axis (default 4) — the planning
+    number for moving to a hierarchical deployment."""
     from repro import comm as rcomm
-    from repro.launch.mesh import DCN_BW, ICI_BW, topology_for_mesh
+    from repro.core.moe_layer import capacity_for
+    from repro.launch.mesh import (DCN_BW, ICI_BW, PEAK_FLOPS_BF16,
+                                   topology_for_mesh)
+    from repro.sched import optimal_chunks, overlap_ms, plan_chunks, sync_ms
     names = tuple(mesh.axis_names)
     if "node" in names:
         topo = topology_for_mesh(mesh)
@@ -123,11 +131,31 @@ def comm_traffic_ledger(cfg, shape, mesh, *, nodes: int = 0):
         hi, he = rcomm.dispatch_bytes(tokens, k, cfg.d_model, topo=topo,
                                       r_cond=r, num_layers=cfg.num_layers,
                                       dedup=True)
+        # overlap: dispatch ≈ combine on the hier bytes; expert FFN at
+        # the bf16 roofline spread over the expert shards
+        d_ms = rcomm.a2a_time_s(hi, he, topo) * 1e3
+        ffn_flops = (tokens * (1.0 - r) * k * 4 * cfg.d_model
+                     * cfg.moe.d_ff * cfg.num_layers)
+        ffn_ms = ffn_flops / (PEAK_FLOPS_BF16 * topo.num_devices) * 1e3
+        kw = dict(dispatch_ms=d_ms, ffn_ms=ffn_ms, combine_ms=d_ms)
+        if exec_chunks > 0:      # report the executed configuration,
+            # with the executor's own capacity clipping (plan_chunks
+            # caps the chunk count at this bucket's capacity / 8)
+            cap = capacity_for(cfg.moe, tokens // mesh.devices.size,
+                               cfg.moe.num_experts, rate=r)
+            n_opt = plan_chunks(cap, exec_chunks).n_chunks
+            t_opt = overlap_ms(topo, n_opt, **kw)
+        else:                    # planning search
+            n_opt, t_opt = optimal_chunks(topo, max_chunks=16, **kw)
+        t_sync = sync_ms(topo, **kw)
         out["buckets"][str(r)] = {
             "flat": {"intra_bytes": fi, "inter_bytes": fe,
                      "time_s": rcomm.a2a_time_s(fi, fe, topo)},
             "hier": {"intra_bytes": hi, "inter_bytes": he,
                      "time_s": rcomm.a2a_time_s(hi, he, topo)},
+            "overlap": {"ffn_ms": ffn_ms, "sync_ms": t_sync,
+                        "pipelined_ms": t_opt, "chunks": n_opt,
+                        "speedup": t_sync / max(t_opt, 1e-12)},
         }
     return out
 
@@ -135,7 +163,8 @@ def comm_traffic_ledger(cfg, shape, mesh, *, nodes: int = 0):
 def run_pair(arch: str, shape_name: str, multi_pod: bool,
              out_path: Path, *, luffy_on: bool = True,
              bucket: int = 0, variant: str = "baseline",
-             nodes: int = 0):
+             nodes: int = 0, exec_mode: str = "sync",
+             pipeline_chunks: int = 4):
     import jax
     import jax.numpy as jnp
     from repro import optim, serve_lib, train_lib
@@ -151,7 +180,7 @@ def run_pair(arch: str, shape_name: str, multi_pod: bool,
     mesh = make_production_mesh(multi_pod=multi_pod, nodes=nodes)
     mesh_tag = "x".join(str(d) for d in mesh.devices.shape)
     rec = {"arch": arch, "shape": shape_name, "mesh": mesh_tag,
-           "variant": variant, "status": "unknown"}
+           "variant": variant, "exec_mode": exec_mode, "status": "unknown"}
 
     if shape_name == "long_500k" and not cfg.supports_long_decode:
         rec["status"] = "skipped"
@@ -177,7 +206,8 @@ def run_pair(arch: str, shape_name: str, multi_pod: bool,
     luffy = LuffyConfig(
         enable_condensation=luffy_on and cfg.uses_moe,
         enable_migration=luffy_on and cfg.uses_moe,
-        comm_mode="hier" if nodes > 1 else "flat")
+        comm_mode="hier" if nodes > 1 else "flat",
+        exec_mode=exec_mode, pipeline_chunks=pipeline_chunks)
 
     if shape.mode == "train":
         # 100B+ models: full f32 Adam moments cannot fit 16GB/chip even at
@@ -306,7 +336,10 @@ def run_pair(arch: str, shape_name: str, multi_pod: bool,
             "active_params": cfg.active_param_count(),
         },
         "analytic": analytic,
-        "comm_ledger": (comm_traffic_ledger(cfg, shape, mesh, nodes=nodes)
+        "comm_ledger": (comm_traffic_ledger(
+            cfg, shape, mesh, nodes=nodes,
+            exec_chunks=(pipeline_chunks if exec_mode == "pipeline"
+                         else 0))
                         if shape.mode == "train" else None),
     })
     out_path.parent.mkdir(parents=True, exist_ok=True)
@@ -396,6 +429,12 @@ def main():
     ap.add_argument("--nodes", type=int, default=0,
                     help="hierarchical mesh: split the model axis into "
                          "this many nodes (comm_mode=hier)")
+    ap.add_argument("--exec-mode", choices=["sync", "pipeline"],
+                    default="sync",
+                    help="MoE execution schedule: strict order or "
+                         "chunked pipeline with overlap (DESIGN.md §6)")
+    ap.add_argument("--pipeline-chunks", type=int, default=4,
+                    help="capacity chunks for --exec-mode pipeline")
     args = ap.parse_args()
     if args.all:
         orchestrate(args.jobs)
@@ -403,13 +442,17 @@ def main():
     mesh_tag = "2x16x16" if args.multi_pod else "16x16"
     if args.nodes > 1:
         mesh_tag += f"__hier{args.nodes}"
+    if args.exec_mode == "pipeline":
+        mesh_tag += f"__pipe{args.pipeline_chunks}"
     out = Path(args.out) if args.out else \
         ARTIFACTS / f"{args.arch}__{args.shape}__{mesh_tag}.json"
     out.parent.mkdir(parents=True, exist_ok=True)
     try:
         run_pair(args.arch, args.shape, args.multi_pod, out,
                  luffy_on=not args.no_luffy, bucket=args.bucket,
-                 variant=args.variant, nodes=args.nodes)
+                 variant=args.variant, nodes=args.nodes,
+                 exec_mode=args.exec_mode,
+                 pipeline_chunks=args.pipeline_chunks)
     except Exception as e:
         rec = {"arch": args.arch, "shape": args.shape, "mesh": mesh_tag,
                "variant": args.variant, "status": "error",

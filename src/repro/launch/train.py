@@ -44,6 +44,15 @@ def main():
     ap.add_argument("--inter-bw", type=float, default=0.0,
                     help="override cross-node bandwidth (bytes/s) for the "
                          "topology ledger / migration link costs")
+    ap.add_argument("--exec-mode", choices=["sync", "pipeline"],
+                    default="sync",
+                    help="MoE execution schedule: strict dispatch→FFN→"
+                         "combine order, or chunked software pipeline "
+                         "overlapping collectives with expert compute "
+                         "(bit-identical; DESIGN.md §6)")
+    ap.add_argument("--pipeline-chunks", type=int, default=4,
+                    help="capacity chunks for --exec-mode pipeline "
+                         "(clipped to capacity/8)")
     ap.add_argument("--no-condensation", action="store_true")
     ap.add_argument("--no-migration", action="store_true")
     ap.add_argument("--optimizer", default="adamw")
@@ -88,14 +97,17 @@ def main():
                          topology=topo)
         print(f"mesh {dict(zip(mesh.axis_names, mesh.devices.shape))} "
               f"topology {topo.num_nodes}x{topo.devices_per_node} "
-              f"bw_ratio={topo.bw_ratio:.1f} comm_mode={args.comm_mode}")
+              f"bw_ratio={topo.bw_ratio:.1f} comm_mode={args.comm_mode} "
+              f"exec_mode={args.exec_mode}")
 
     luffy = LuffyConfig(
         enable_condensation=not args.no_condensation and cfg.uses_moe,
         enable_migration=not args.no_migration and cfg.uses_moe,
         condense_group=min(128, args.seq_len),
         combine_slack=2.0,
-        comm_mode=args.comm_mode)
+        comm_mode=args.comm_mode,
+        exec_mode=args.exec_mode,
+        pipeline_chunks=args.pipeline_chunks)
     ocfg = OptimConfig(name=args.optimizer, lr=args.lr,
                        total_steps=args.steps,
                        warmup_steps=max(2, args.steps // 20))

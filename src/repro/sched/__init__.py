@@ -1,0 +1,26 @@
+"""Execution scheduling subsystem (DESIGN.md §6).
+
+Where :mod:`repro.comm` decides *where bytes go and what they cost*,
+``repro.sched`` decides *when the collectives that carry them run*. It
+splits the MoE hot path's static dispatch capacity into 8-aligned chunks
+(:mod:`repro.sched.plan`), executes dispatch → expert FFN → combine as a
+double-buffered software pipeline so chunk ``k``'s collective is in
+flight while chunk ``k-1`` computes (:mod:`repro.sched.pipeline`), and
+prices the resulting compute/communication overlap analytically for
+``commsim`` and the dry-run ledger (:mod:`repro.sched.cost`).
+
+The pipelined executor is a pure re-ordering of the sync path — chunking
+the capacity dimension of the dispatch buffers commutes with the
+(data-movement-only) collectives and with the row-wise expert FFN, so
+``LuffyConfig.exec_mode="pipeline"`` is bit-identical to ``"sync"``
+(tested per {migration, condensation} × {flat, hier} combination).
+"""
+from repro.sched.cost import optimal_chunks, overlap_ms, sync_ms
+from repro.sched.pipeline import (format_schedule, pipeline_schedule,
+                                  run_pipeline)
+from repro.sched.plan import ChunkPlan, plan_chunks
+
+__all__ = [
+    "ChunkPlan", "format_schedule", "optimal_chunks", "overlap_ms",
+    "pipeline_schedule", "plan_chunks", "run_pipeline", "sync_ms",
+]

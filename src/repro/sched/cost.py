@@ -1,0 +1,67 @@
+"""Analytic overlap pricing for the chunked pipeline (DESIGN.md §6).
+
+Models one MoE sublayer executed as the ``repro.sched.pipeline``
+schedule: dispatch / expert-FFN / combine stage totals ``D``, ``F``,
+``Cm`` split into ``n`` chunks run as a 3-stage linear pipeline, so
+
+    T(n) = d + f + c + (n - 1) * max(d, f, c)
+
+with per-chunk stage times ``d = D/n + o``, ``f = F/n``,
+``c = Cm/n + o`` — ``o`` the per-chunk collective overhead (message
+latencies from the :class:`~repro.comm.Topology` plus a fixed issue
+cost). ``n = 1`` degenerates to the sync path ``D + F + Cm + 2o``;
+large ``n`` approaches ``max(D, F, Cm)`` (perfect overlap) until the
+``(n-1)·o`` term wins. This is the number ``commsim``'s
+``vanilla-overlap``/``luffy-overlap`` systems and the dry-run
+``comm_ledger`` report, and what ``benchmarks/fig_overlap_sweep.py``
+sweeps against chunk count and bandwidth ratio.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+from repro.comm.ledger import chunk_latency_s
+from repro.comm.topology import Topology
+
+# Fixed per-chunk collective issue cost (ms): launch + fusion-boundary
+# overhead of one extra start/done pair. Swamped by bandwidth terms at
+# production payload sizes; keeps the optimal chunk count finite.
+DEFAULT_CHUNK_OVERHEAD_MS = 0.05
+
+
+def overlap_ms(topo: Topology, chunks: int, *, dispatch_ms: float,
+               ffn_ms: float, combine_ms: float = 0.0,
+               chunk_overhead_ms: float = DEFAULT_CHUNK_OVERHEAD_MS
+               ) -> float:
+    """Modeled MoE-sublayer time (ms) pipelined over ``chunks`` chunks."""
+    n = max(1, int(chunks))
+    o = chunk_overhead_ms + chunk_latency_s(topo) * 1e3
+    d = dispatch_ms / n + o
+    f = ffn_ms / n
+    c = combine_ms / n + (o if combine_ms > 0.0 else 0.0)
+    return d + f + c + (n - 1) * max(d, f, c)
+
+
+def sync_ms(topo: Topology, *, dispatch_ms: float, ffn_ms: float,
+            combine_ms: float = 0.0,
+            chunk_overhead_ms: float = DEFAULT_CHUNK_OVERHEAD_MS) -> float:
+    """The unpipelined baseline — ``overlap_ms`` at one chunk."""
+    return overlap_ms(topo, 1, dispatch_ms=dispatch_ms, ffn_ms=ffn_ms,
+                      combine_ms=combine_ms,
+                      chunk_overhead_ms=chunk_overhead_ms)
+
+
+def optimal_chunks(topo: Topology, *, dispatch_ms: float, ffn_ms: float,
+                   combine_ms: float = 0.0, max_chunks: int = 16,
+                   chunk_overhead_ms: float = DEFAULT_CHUNK_OVERHEAD_MS
+                   ) -> Tuple[int, float]:
+    """(argmin chunk count, modeled ms) over ``1..max_chunks``; ties go
+    to the smaller chunk count (fewer collectives, same time)."""
+    best_n, best_t = 1, None
+    for n in range(1, max(1, max_chunks) + 1):
+        t = overlap_ms(topo, n, dispatch_ms=dispatch_ms, ffn_ms=ffn_ms,
+                       combine_ms=combine_ms,
+                       chunk_overhead_ms=chunk_overhead_ms)
+        if best_t is None or t < best_t - 1e-12:
+            best_n, best_t = n, t
+    return best_n, best_t

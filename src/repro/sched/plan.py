@@ -1,0 +1,60 @@
+"""Chunk planning over the dispatch-capacity dimension (DESIGN.md §6).
+
+The MoE dispatch buffer is ``[E, C, row]`` with a *static* per-(source,
+expert) capacity ``C`` (always 8-aligned; see ``moe_layer.capacity_for``).
+A :class:`ChunkPlan` partitions ``C`` into contiguous 8-aligned
+sub-capacities. Because gating, dispatch positions and drop decisions are
+computed *before* the buffers are sliced, per-chunk semantics are exactly
+the sync path's — a row lands in chunk ``j`` iff its dispatch position
+falls inside chunk ``j``'s capacity window, and capacity overflow still
+drops exactly the rows with ``pos >= C``.
+
+8-alignment matters twice: it keeps every chunk's trailing dims on TPU
+lane boundaries (so the sliced collectives lay out like the full one),
+and it guarantees a chunk is never empty (``C >= 8``).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+ALIGN = 8
+
+
+class ChunkPlan(NamedTuple):
+    """Contiguous partition of the capacity dimension."""
+    capacity: int                 # total per-(source, expert) capacity
+    sizes: Tuple[int, ...]        # per-chunk sub-capacities (8-aligned)
+
+    @property
+    def n_chunks(self) -> int:
+        return len(self.sizes)
+
+    @property
+    def offsets(self) -> Tuple[int, ...]:
+        out, off = [], 0
+        for s in self.sizes:
+            out.append(off)
+            off += s
+        return tuple(out)
+
+    def slices(self) -> Tuple[Tuple[int, int], ...]:
+        """(offset, size) pairs, in capacity order."""
+        return tuple(zip(self.offsets, self.sizes))
+
+
+def plan_chunks(capacity: int, n_chunks: int, *, align: int = ALIGN
+                ) -> ChunkPlan:
+    """Split ``capacity`` into at most ``n_chunks`` aligned sub-capacities.
+
+    ``capacity`` must itself be a multiple of ``align`` (the capacity
+    helpers guarantee this). The request is clipped so every chunk gets at
+    least one alignment unit; units are distributed as evenly as possible
+    with the remainder on the leading chunks, so chunk sizes differ by at
+    most ``align``.
+    """
+    assert capacity >= align and capacity % align == 0, capacity
+    units = capacity // align
+    n = max(1, min(int(n_chunks), units))
+    base, rem = divmod(units, n)
+    sizes = tuple((base + (1 if i < rem else 0)) * align for i in range(n))
+    return ChunkPlan(capacity, sizes)

@@ -106,3 +106,28 @@ def test_kernel_path_matches_jnp(rng):
     b = cond.condense_tokens(x, e, 0.7, group_size=G, use_kernel=True)
     np.testing.assert_array_equal(np.asarray(a.rep_idx),
                                   np.asarray(b.rep_idx))
+
+
+def test_similarity_quantiles_same_expert_masking(rng):
+    """Quantiles must cover only off-diagonal same-expert pairs — the
+    pairs condensation can merge — not the mostly-zero full matrix."""
+    G = 8
+    e = np.array([0, 0, 0, 0, 1, 1, 1, 1])
+    sim = np.zeros((G, G))
+    same = e[:, None] == e[None, :]
+    sim[same] = 0.9                          # condensable pairs: high
+    np.fill_diagonal(sim, 1.0)
+    q = cond.similarity_quantiles(sim, expert_idx=e)
+    assert q.shape == (11,)
+    # every masked value is 0.9: all deciles equal it (no zeros, no diag)
+    np.testing.assert_allclose(q, 0.9)
+    # unmasked: the cross-expert zeros dominate the low deciles (the
+    # diagonal stays excluded in both modes)
+    q_all = cond.similarity_quantiles(sim, same_expert_only=False)
+    assert q_all[0] == 0.0 and q_all[-1] == 0.9
+    with pytest.raises(ValueError):
+        cond.similarity_quantiles(sim)       # mask needs expert ids
+    # batched [n_groups, G, G] input, as produced by condense_tokens
+    q_b = cond.similarity_quantiles(
+        np.stack([sim, sim]), expert_idx=np.stack([e, e]))
+    np.testing.assert_allclose(q_b, 0.9)

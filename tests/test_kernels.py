@@ -21,6 +21,25 @@ def test_masked_similarity(rng, G, d, dtype):
                                atol=tol, rtol=tol)
 
 
+def test_masked_similarity_backend_detected_default(rng):
+    """interpret defaults by backend (None → interpreter off-TPU), both
+    through ops and when calling the kernel module directly; an explicit
+    bool still overrides."""
+    from repro.kernels import similarity as sim_mod
+    G, d = 128, 256
+    x = jnp.asarray(rng.standard_normal((G, d)), jnp.float32)
+    e = jnp.asarray(rng.integers(0, 4, G))
+    mask = e[:, None] == e[None, :]
+    want = ref.masked_similarity_ref(x, mask)
+    if jax.default_backend() == "tpu":       # auto-compiles there instead
+        pytest.skip("default resolves to the compiled Mosaic kernel")
+    for got in (ops.masked_similarity(x, mask),
+                sim_mod.masked_similarity(x, mask),
+                sim_mod.masked_similarity(x, mask, interpret=True)):
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   atol=1e-5, rtol=1e-5)
+
+
 def test_similarity_tile_earlyout(rng):
     """Fully-masked tiles must be exactly zero (skipped)."""
     G, d = 256, 128

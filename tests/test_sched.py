@@ -1,0 +1,300 @@
+"""repro.sched: chunk planning, pipeline schedule/executor, overlap cost
+model, commsim overlap systems, and end-to-end ``exec_mode="pipeline"``
+bit-identity on 8 forced host devices (DESIGN.md §6)."""
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _hyp import given, settings, st   # optional dep; skips when absent
+
+from repro.comm import Topology
+from repro.sched import (format_schedule, optimal_chunks, overlap_ms,
+                         pipeline_schedule, plan_chunks, run_pipeline,
+                         sync_ms)
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+
+
+# ---------------------------------------------------------------------------
+# chunk planning
+# ---------------------------------------------------------------------------
+
+def test_plan_chunks_even_split():
+    p = plan_chunks(64, 4)
+    assert p.sizes == (16, 16, 16, 16)
+    assert p.offsets == (0, 16, 32, 48)
+    assert p.slices() == ((0, 16), (16, 16), (32, 16), (48, 16))
+
+
+def test_plan_chunks_uneven_and_clipped():
+    p = plan_chunks(40, 3)
+    assert p.sizes == (16, 16, 8)          # remainder on leading chunks
+    assert sum(p.sizes) == 40
+    assert plan_chunks(16, 100).sizes == (8, 8)   # clipped to C/8
+    assert plan_chunks(8, 4).sizes == (8,)        # never empty chunks
+    with pytest.raises(AssertionError):
+        plan_chunks(12, 2)                 # capacity must be 8-aligned
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(1, 64), st.integers(1, 12))
+def test_plan_chunks_properties(units, n):
+    cap = units * 8
+    p = plan_chunks(cap, n)
+    assert sum(p.sizes) == cap
+    assert all(s > 0 and s % 8 == 0 for s in p.sizes)
+    assert p.n_chunks == min(n, units)
+    assert max(p.sizes) - min(p.sizes) <= 8    # near-even split
+    # offsets tile the capacity contiguously
+    assert p.offsets[0] == 0
+    assert all(o + s == o2 for (o, s), o2 in
+               zip(p.slices(), p.offsets[1:] + (cap,)))
+
+
+# ---------------------------------------------------------------------------
+# pipeline schedule / executor
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n", [1, 2, 3, 5, 8])
+def test_pipeline_schedule_invariants(n):
+    sched = pipeline_schedule(n)
+    pos = {(s.name, s.chunk): i for i, s in enumerate(sched)}
+    assert len(pos) == len(sched) == 3 * n         # no duplicates
+    outstanding, peak = set(), 0
+    for s in sched:
+        if s.name == "dispatch":
+            outstanding.add(s.chunk)
+        elif s.name == "compute":
+            outstanding.discard(s.chunk)
+        peak = max(peak, len(outstanding))
+    assert peak <= 2                               # double-buffered
+    for k in range(n):
+        assert pos[("dispatch", k)] < pos[("compute", k)] \
+            < pos[("combine", k)]
+        if k + 1 < n:
+            # chunk k+1's collective is in flight while chunk k computes
+            assert pos[("dispatch", k + 1)] < pos[("compute", k)]
+    text = format_schedule(n)
+    assert "dispatch[0]" in text and f"compute[{n - 1}]" in text
+
+
+@pytest.mark.parametrize("barrier", [True, False])
+def test_run_pipeline_matches_direct_execution(rng, barrier):
+    x = jnp.asarray(rng.standard_normal((6, 5)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((5, 5)), jnp.float32)
+
+    def go(xx):
+        outs, combs = run_pipeline(
+            6,
+            dispatch=lambda k: xx[k] * 2.0,
+            compute=lambda k, p: p @ w + k,
+            combine=lambda k, o: o.sum(),
+            barrier=barrier)
+        return jnp.stack(outs), jnp.stack(combs)
+
+    outs, combs = jax.jit(go)(x)
+    want = jnp.stack([x[k] * 2.0 @ w + k for k in range(6)])
+    np.testing.assert_allclose(np.asarray(outs), np.asarray(want),
+                               rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(combs),
+                               np.asarray(want.sum(-1)), rtol=1e-6)
+    # differentiable end to end (the train step backprops through it)
+    g = jax.grad(lambda xx: go(xx)[1].sum())(x)
+    assert np.isfinite(np.asarray(g)).all()
+
+
+def test_run_pipeline_without_combine():
+    outs, combs = run_pipeline(3, dispatch=lambda k: jnp.float32(k),
+                               compute=lambda k, p: p + 1)
+    assert combs is None
+    assert [float(o) for o in outs] == [1.0, 2.0, 3.0]
+
+
+# ---------------------------------------------------------------------------
+# overlap cost model
+# ---------------------------------------------------------------------------
+
+def test_overlap_cost_model_contracts():
+    topo = Topology(num_nodes=2, devices_per_node=4)
+    kw = dict(dispatch_ms=1000.0, ffn_ms=600.0, combine_ms=800.0)
+    assert overlap_ms(topo, 1, **kw) == pytest.approx(sync_ms(topo, **kw))
+    # monotone non-increasing from 1 chunk to the optimum
+    n_opt, t_opt = optimal_chunks(topo, max_chunks=16, **kw)
+    ts = [overlap_ms(topo, n, **kw) for n in range(1, n_opt + 1)]
+    assert all(a >= b - 1e-9 for a, b in zip(ts, ts[1:]))
+    assert t_opt == pytest.approx(ts[-1])
+    # pipelining can't beat the slowest stage, and must beat sync
+    assert t_opt > max(kw.values()) - 1e-9
+    assert t_opt < sync_ms(topo, **kw)
+    # heavy per-chunk overhead pushes the optimum back toward 1 chunk
+    n_hv, _ = optimal_chunks(topo, max_chunks=16,
+                             chunk_overhead_ms=500.0, **kw)
+    assert n_hv < n_opt
+    # message latencies enter the per-chunk cost
+    lat = Topology(num_nodes=2, devices_per_node=4, intra_lat=1e-3,
+                   inter_lat=1e-2)
+    assert overlap_ms(lat, 4, **kw) > overlap_ms(topo, 4, **kw)
+
+
+def test_commsim_overlap_systems():
+    from repro.configs import get_config
+    from repro.core import commsim
+    cfg = get_config("moe-gpt2", num_experts=8)
+    setup = commsim.PaperSetup(cfg=cfg)
+    comp, comm = commsim.PAPER_VANILLA["moe-gpt2"][8]
+    cal = commsim.calibrate(setup, comp, comm)
+    topo = commsim.default_topology(8, nodes=2, bw_ratio=4.0)
+    for system in ("vanilla-overlap", "luffy-overlap"):
+        hier = commsim.predict(setup, cal,
+                               system=system.replace("overlap", "hier"),
+                               topo=topo)
+        ov = commsim.predict(setup, cal, system=system, topo=topo)
+        # sync baseline is the hier prediction (same bytes, no overlap)
+        # plus the two one-shot collective launch overheads
+        from repro.sched.cost import DEFAULT_CHUNK_OVERHEAD_MS
+        assert ov["sync_ms"] == pytest.approx(
+            hier["comp_ms"] + hier["comm_ms"],
+            abs=2 * DEFAULT_CHUNK_OVERHEAD_MS + 1e-6)
+        # paper-ratio acceptance: >= 1.2x predicted end-to-end speedup
+        assert ov["sync_ms"] / ov["step_ms"] >= 1.2
+        # explicit chunk counts are monotone non-increasing to the opt
+        steps = [commsim.predict(setup, cal, system=system, topo=topo,
+                                 chunks=n)["step_ms"]
+                 for n in range(1, ov["chunks"] + 1)]
+        assert all(a >= b - 1e-9 for a, b in zip(steps, steps[1:]))
+        assert steps[-1] == pytest.approx(ov["step_ms"])
+
+
+def test_fig_overlap_sweep_contracts():
+    """The benchmark's own JSON contracts (it raises when violated)."""
+    sys.path.insert(0, ROOT)
+    from benchmarks import fig_overlap_sweep
+    out = fig_overlap_sweep.sweep()
+    paper = out["ratios"][f"{out['paper_bw_ratio']:g}"]
+    assert all(rec["speedup"] >= 1.2 for rec in paper.values())
+
+
+# ---------------------------------------------------------------------------
+# exec_mode="pipeline" — single-device fallback + 8-device bit-identity
+# ---------------------------------------------------------------------------
+
+def test_pipeline_single_device_falls_back_to_sync(rng):
+    import dataclasses
+    from repro.config import LuffyConfig, ModelConfig, MoEConfig
+    from repro.core import moe_layer as ml
+    cfg = ModelConfig(
+        name="t", kind="decoder", family="moe", num_layers=2,
+        d_model=32, d_ff=64, vocab_size=128,
+        moe=MoEConfig(num_experts=4, top_k=2, d_ff=64),
+        layer_ffn_pattern=("moe",), compute_dtype="float32",
+        param_dtype="float32")
+    p = ml.moe_init(jax.random.PRNGKey(0), cfg)
+    x = jnp.asarray(rng.standard_normal((2, 16, 32)), jnp.float32)
+    sb = {"labels": jnp.zeros((2, 16), jnp.int32),
+          "seq_len": jnp.full((2,), 16, jnp.int32)}
+    base = LuffyConfig(enable_condensation=False, enable_migration=False)
+    pipe = dataclasses.replace(base, exec_mode="pipeline",
+                               pipeline_chunks=4)
+    ys, *_ = ml.moe_core(p, x, dict(sb), cfg, base, mode="vanilla",
+                         capacity=256, axis_name=None,
+                         threshold=jnp.float32(1.0))
+    yp, *_ = ml.moe_core(p, x, dict(sb), cfg, pipe, mode="vanilla",
+                         capacity=256, axis_name=None,
+                         threshold=jnp.float32(1.0))
+    np.testing.assert_array_equal(np.asarray(ys), np.asarray(yp))
+
+
+def _run(script_body: str) -> str:
+    script = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import dataclasses
+        import itertools
+        import jax, jax.numpy as jnp
+        import numpy as np
+        from repro.comm import Topology, make_mesh
+        from repro.configs import get_config
+        from repro.config import reduced, LuffyConfig, ShapeConfig
+        from repro.models.model import build_model
+        from repro.dist import DistContext
+        from repro.data import SyntheticLM
+        from repro.core.moe_layer import capacity_for
+
+        cfg = reduced(get_config("moe-gpt2"), num_layers=2, d_model=128)
+        cfg = dataclasses.replace(cfg, compute_dtype="float32")
+        model = build_model(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        shape = ShapeConfig("t", 64, 8, "train")
+        data = SyntheticLM(cfg, shape)
+        b = {k: jnp.asarray(v) for k, v in data.batch(0).items()}
+        cap = capacity_for(cfg.moe, 64, cfg.moe.num_experts, slack=8.0)
+
+        def loss(dist, luffy):
+            l, m = jax.jit(lambda p, bb: model.train_loss(
+                p, bb, jnp.float32(0.4), luffy=luffy, dist=dist,
+                capacity=cap))(params, b)
+            return float(l), m
+    """) + textwrap.dedent(script_body)
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    out = subprocess.run([sys.executable, "-c", script], cwd=ROOT,
+                         capture_output=True, text=True, env=env,
+                         timeout=1200)
+    assert out.returncode == 0, out.stderr[-3000:]
+    return out.stdout
+
+
+def test_pipeline_bit_identical_flat_all_combos():
+    """{migration, condensation} on/off × pipeline chunks on the flat
+    comm path: pipeline == sync bit-for-bit (same mesh, same batch)."""
+    out = _run("""
+        mesh = make_mesh((2, 4), ("data", "model"))
+        dist = DistContext(mesh, batch_axes=("data", "model"),
+                           seq_axis=None, fsdp_axes=("data",),
+                           model_axis="model", topology=Topology.flat(4))
+        for mig, cond in itertools.product((True, False), repeat=2):
+            base = LuffyConfig(enable_condensation=cond,
+                               enable_migration=mig, combine_slack=4.0,
+                               condense_group=32, comm_mode="flat")
+            chunk_counts = (3, 8) if (mig and cond) else (3,)
+            ls, ms = loss(dist, base)
+            for nc in chunk_counts:
+                pipe = dataclasses.replace(base, exec_mode="pipeline",
+                                           pipeline_chunks=nc)
+                lp, mp = loss(dist, pipe)
+                assert ls == lp, (mig, cond, nc, ls, lp)
+                for k in ms:
+                    assert float(ms[k]) == float(mp[k]), (mig, cond, k)
+        print("OK")
+    """)
+    assert "OK" in out
+
+
+def test_pipeline_bit_identical_hier_all_combos():
+    """Same four combos through the hierarchical two-phase collectives
+    on a (2 node × 2 local) mesh."""
+    out = _run("""
+        mesh = make_mesh((2, 2, 2), ("data", "node", "local"))
+        dist = DistContext(mesh, batch_axes=("data", "node", "local"),
+                           seq_axis=None, fsdp_axes=("data",),
+                           model_axis=("node", "local"),
+                           topology=Topology(2, 2))
+        for mig, cond in itertools.product((True, False), repeat=2):
+            base = LuffyConfig(enable_condensation=cond,
+                               enable_migration=mig, combine_slack=4.0,
+                               condense_group=32, comm_mode="hier")
+            pipe = dataclasses.replace(base, exec_mode="pipeline",
+                                       pipeline_chunks=3)
+            ls, ms = loss(dist, base)
+            lp, mp = loss(dist, pipe)
+            assert ls == lp, (mig, cond, ls, lp)
+            for k in ms:
+                assert float(ms[k]) == float(mp[k]), (mig, cond, k)
+        print("OK")
+    """)
+    assert "OK" in out
