@@ -20,6 +20,7 @@ MODULES = [
     "fig10_sensitivity",    # paper Fig. 10
     "fig_hier_sensitivity",  # beyond-paper: bandwidth-hierarchy sweep
     "fig_overlap_sweep",    # beyond-paper: pipelined-overlap sweep
+    "fig_objective_sweep",  # beyond-paper: traffic vs overlap objective
     "roofline",             # deliverable (g)
 ]
 

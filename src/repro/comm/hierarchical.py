@@ -70,11 +70,14 @@ class CommContext(NamedTuple):
     """How the MoE layer should run its expert-parallel collectives.
 
     ``axes`` are the mesh axes spanning the expert-parallel dimension,
-    node-major (("model",) flat, ("node", "local") hierarchical).
+    node-major (("model",) flat, ("node", "local") hierarchical). A
+    ``"local"`` context (no axes) is the single-device degenerate case:
+    size 1, identity collectives — so executors can hold ONE non-optional
+    comm handle instead of special-casing ``comm is None``.
     ``topology`` prices the links; None means uniform/unknown.
     """
-    mode: str                           # "flat" | "hier"
-    axes: Tuple[str, ...]
+    mode: str                           # "flat" | "hier" | "local"
+    axes: Tuple[str, ...] = ()
     topology: Optional[Topology] = None
 
     @classmethod
@@ -92,15 +95,39 @@ class CommContext(NamedTuple):
             raise ValueError(f"unknown comm_mode {mode!r}")
         return cls(mode, axes, topology)
 
+    @classmethod
+    def local(cls, topology: Optional[Topology] = None) -> "CommContext":
+        """Single-device context: identity collectives, size 1."""
+        return cls("local", (), topology)
+
+    @classmethod
+    def ensure(cls, comm: Optional["CommContext"],
+               axis_name: Optional[AxisName] = None,
+               topology: Optional[Topology] = None) -> "CommContext":
+        """Normalize the historical ``(comm, axis_name)`` call boundary to
+        one non-optional context: an existing context wins, a bare axis
+        name becomes a flat context over it, neither becomes local."""
+        if comm is not None:
+            return comm
+        if axis_name is not None:
+            return cls.build("flat", axis_name, topology)
+        return cls.local(topology)
+
     # -- axis arithmetic (shard_map-side) ------------------------------------
     @property
-    def axis_name(self) -> AxisName:
+    def axis_name(self) -> Optional[AxisName]:
+        if not self.axes:
+            return None
         return self.axes[0] if len(self.axes) == 1 else self.axes
 
     def size(self) -> int:
+        if self.mode == "local":
+            return 1
         return compat.axis_size(self.axes)
 
     def index(self):
+        if self.mode == "local":
+            return 0
         return compat.axis_index(self.axes)
 
     @property
@@ -116,6 +143,8 @@ class CommContext(NamedTuple):
     # -- collectives ---------------------------------------------------------
     def all_to_all(self, x):
         """Dispatch-layout exchange: dim 0 = one chunk per device."""
+        if self.mode == "local":
+            return x
         if self.mode == "hier":
             return hier_all_to_all(x, self.node_axis, self.local_axis)
         return jax.lax.all_to_all(x, self.axis_name, split_axis=0,
@@ -123,6 +152,8 @@ class CommContext(NamedTuple):
 
     def combine(self, x):
         """Combine-layout exchange (same chunk convention)."""
+        if self.mode == "local":
+            return x
         if self.mode == "hier":
             return hier_combine(x, self.node_axis, self.local_axis)
         return jax.lax.all_to_all(x, self.axis_name, split_axis=0,

@@ -260,6 +260,13 @@ class LuffyConfig:
     # degenerate to sync.
     exec_mode: str = "sync"
     pipeline_chunks: int = 4
+    # Migration planner objective (DESIGN.md §7): "traffic" minimizes
+    # link-cost-weighted combine bytes (the historical objective, exactly);
+    # "overlap" minimizes modeled *exposed* — un-overlappable — time of
+    # the pipelined exchange (repro.plan.objectives), preferring plans
+    # that keep bytes off whichever link tier the pipeline cannot hide.
+    # Registry-extensible: repro.plan.objectives.register_objective.
+    plan_objective: str = "traffic"
 
 
 # ---------------------------------------------------------------------------

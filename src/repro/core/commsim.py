@@ -27,7 +27,7 @@ import dataclasses
 import math
 from typing import Dict, Optional, Tuple
 
-from repro.comm import Topology, dispatch_bytes
+from repro.comm import Topology
 from repro.config import ModelConfig
 
 BYTES = 4        # fp32 activations on V100 (paper's setting)
@@ -102,34 +102,29 @@ def default_topology(num_experts: int, nodes: int = 2,
                     intra_bw=bw_ratio, inter_bw=1.0)
 
 
-def _hier_comm_ms(setup: PaperSetup, cal: Calibration, topo: Topology,
-                  *, r_cond: float, locality: float
-                  ) -> Tuple[float, float]:
-    """(dispatch_ms, combine_ms) of the two-phase exchange on a
-    hierarchical fabric.
+def _hier_estimate(setup: PaperSetup, cal: Calibration, topo: Topology,
+                   *, r_cond: float, locality: float, ffn_ms: float = 0.0,
+                   chunks: Optional[int] = None):
+    """The exchange's :class:`repro.plan.PlanEstimate` on a hierarchical
+    fabric — the SAME pricing the plan builder attaches to every
+    :class:`~repro.plan.ExchangePlan` (commsim no longer recomputes it).
 
-    The same calibrated ``cal.link_bw`` constant prices the expensive
+    The calibrated ``cal.link_bw`` constant prices the expensive
     (inter-node) axis — it was fit on the flat fabric's bottleneck —
     and the cheap axis runs ``topo.bw_ratio`` times faster. Dispatch
     payloads dedupe per node (condensation representatives cross once
     per node); combine rows pre-aggregate within the node before
     crossing back, and the migration locality gain additionally keeps
-    ``locality`` of them off the network entirely. Returned split so the
-    overlap model (``repro.sched.cost``) can pipeline the two directions
-    separately; callers wanting the total sum the pair.
+    ``locality`` of them off the network entirely. Dispatch and combine
+    come back split so the overlap model can pipeline the two directions
+    separately.
     """
-    tokens = setup.tokens
-    d = setup.cfg.d_model
-    intra_d, inter_d = dispatch_bytes(
-        tokens, setup.top_k, d, topo=topo, r_cond=r_cond,
-        bytes_per_el=BYTES, num_layers=setup.cfg.num_layers, dedup=True)
-    intra_c = intra_d * (1.0 - locality)
-    inter_c = inter_d * (1.0 - locality)
-    inter_bw = cal.link_bw
-    intra_bw = cal.link_bw * topo.bw_ratio
-    dispatch = (intra_d / intra_bw + inter_d / inter_bw) * 1e3
-    combine = (intra_c / intra_bw + inter_c / inter_bw) * 1e3
-    return dispatch, combine
+    from repro.plan import estimate_exchange
+    return estimate_exchange(
+        setup.tokens, setup.top_k, setup.cfg.d_model, topo=topo,
+        r_cond=r_cond, locality=locality, bytes_per_el=BYTES,
+        num_layers=setup.cfg.num_layers, ffn_ms=ffn_ms, chunks=chunks,
+        intra_bw=cal.link_bw * topo.bw_ratio, inter_bw=cal.link_bw)
 
 
 def predict(setup: PaperSetup, cal: Calibration, *,
@@ -152,7 +147,7 @@ def predict(setup: PaperSetup, cal: Calibration, *,
     if system in ("vanilla-hier", "luffy-hier"):
         topo = topo if topo is not None else default_topology(E)
         is_luffy = system == "luffy-hier"
-        d_ms, c_ms = _hier_comm_ms(
+        est = _hier_estimate(
             setup, cal, topo,
             r_cond=r_cond if is_luffy else 0.0,
             locality=locality if is_luffy else 0.0)
@@ -160,26 +155,22 @@ def predict(setup: PaperSetup, cal: Calibration, *,
             comp = attn * 0.92 + _expert_flops(setup, 1.0 - r_cond)
         else:
             comp = attn + _expert_flops(setup)
-        return {"comp_ms": comp / cal.speed * 1e3, "comm_ms": d_ms + c_ms}
+        return {"comp_ms": comp / cal.speed * 1e3,
+                "comm_ms": est.dispatch_ms + est.combine_ms}
     if system in ("vanilla-overlap", "luffy-overlap"):
-        from repro.sched import cost as sched_cost
         topo = topo if topo is not None else default_topology(E)
         is_luffy = system == "luffy-overlap"
         rc = r_cond if is_luffy else 0.0
-        d_ms, c_ms = _hier_comm_ms(setup, cal, topo, r_cond=rc,
-                                   locality=locality if is_luffy else 0.0)
         attn_ms = attn * (0.92 if is_luffy else 1.0) / cal.speed * 1e3
         ffn_ms = _expert_flops(setup, 1.0 - rc) / cal.speed * 1e3
-        kw = dict(dispatch_ms=d_ms, ffn_ms=ffn_ms, combine_ms=c_ms)
-        if chunks is None:
-            n, moe_ms = sched_cost.optimal_chunks(topo, **kw)
-        else:
-            n = chunks
-            moe_ms = sched_cost.overlap_ms(topo, n, **kw)
-        return {"comp_ms": attn_ms + ffn_ms, "comm_ms": d_ms + c_ms,
-                "step_ms": attn_ms + moe_ms,
-                "sync_ms": attn_ms + sched_cost.sync_ms(topo, **kw),
-                "chunks": n}
+        est = _hier_estimate(setup, cal, topo, r_cond=rc,
+                             locality=locality if is_luffy else 0.0,
+                             ffn_ms=ffn_ms, chunks=chunks)
+        return {"comp_ms": attn_ms + ffn_ms,
+                "comm_ms": est.dispatch_ms + est.combine_ms,
+                "step_ms": attn_ms + est.overlap_ms,
+                "sync_ms": attn_ms + est.sync_ms,
+                "chunks": est.chunks}
     if system == "vanilla":
         comm = 2 * _a2a_bytes(setup)
         comp = attn + _expert_flops(setup)

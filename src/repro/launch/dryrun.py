@@ -93,7 +93,10 @@ def comm_traffic_ledger(cfg, shape, mesh, *, nodes: int = 0,
     """Analytic per-step dispatch traffic split by link tier (DESIGN.md §5)
     plus the modeled compute/communication overlap (§6).
 
-    For each condensation rate bucket: bytes a flat all-to-all ships
+    One :func:`repro.plan.estimate_exchange` call per condensation rate
+    bucket — the SAME per-phase estimate the plan builder attaches to
+    every :class:`~repro.plan.ExchangePlan` (the ledger reports plan
+    numbers, it does not recompute them): bytes a flat all-to-all ships
     across nodes vs. the hierarchical path after per-node dedup, and the
     pipelined MoE-sublayer time — at exactly ``exec_chunks`` chunks when
     the run executed a pipeline, else at the 1..16 planning optimum
@@ -105,7 +108,8 @@ def comm_traffic_ledger(cfg, shape, mesh, *, nodes: int = 0,
     from repro.core.moe_layer import capacity_for
     from repro.launch.mesh import (DCN_BW, ICI_BW, PEAK_FLOPS_BF16,
                                    topology_for_mesh)
-    from repro.sched import optimal_chunks, overlap_ms, plan_chunks, sync_ms
+    from repro.plan import estimate_exchange
+    from repro.sched import plan_chunks
     names = tuple(mesh.axis_names)
     if "node" in names:
         topo = topology_for_mesh(mesh)
@@ -126,36 +130,33 @@ def comm_traffic_ledger(cfg, shape, mesh, *, nodes: int = 0,
            "dedup_factor": rcomm.expected_dedup_factor(k, topo),
            "buckets": {}}
     for r in (0.0, 0.25, 0.5):
-        fi, fe = rcomm.dispatch_bytes(tokens, k, cfg.d_model, topo=topo,
-                                      r_cond=r, num_layers=cfg.num_layers)
-        hi, he = rcomm.dispatch_bytes(tokens, k, cfg.d_model, topo=topo,
-                                      r_cond=r, num_layers=cfg.num_layers,
-                                      dedup=True)
-        # overlap: dispatch ≈ combine on the hier bytes; expert FFN at
-        # the bf16 roofline spread over the expert shards
-        d_ms = rcomm.a2a_time_s(hi, he, topo) * 1e3
+        # dispatch ≈ combine on the hier bytes; expert FFN at the bf16
+        # roofline spread over the expert shards
         ffn_flops = (tokens * (1.0 - r) * k * 4 * cfg.d_model
                      * cfg.moe.d_ff * cfg.num_layers)
         ffn_ms = ffn_flops / (PEAK_FLOPS_BF16 * topo.num_devices) * 1e3
-        kw = dict(dispatch_ms=d_ms, ffn_ms=ffn_ms, combine_ms=d_ms)
         if exec_chunks > 0:      # report the executed configuration,
             # with the executor's own capacity clipping (plan_chunks
             # caps the chunk count at this bucket's capacity / 8)
             cap = capacity_for(cfg.moe, tokens // mesh.devices.size,
                                cfg.moe.num_experts, rate=r)
-            n_opt = plan_chunks(cap, exec_chunks).n_chunks
-            t_opt = overlap_ms(topo, n_opt, **kw)
+            chunks = plan_chunks(cap, exec_chunks).n_chunks
         else:                    # planning search
-            n_opt, t_opt = optimal_chunks(topo, max_chunks=16, **kw)
-        t_sync = sync_ms(topo, **kw)
+            chunks = None
+        est = estimate_exchange(tokens, k, cfg.d_model, topo=topo,
+                                r_cond=r, num_layers=cfg.num_layers,
+                                ffn_ms=ffn_ms, chunks=chunks)
         out["buckets"][str(r)] = {
-            "flat": {"intra_bytes": fi, "inter_bytes": fe,
-                     "time_s": rcomm.a2a_time_s(fi, fe, topo)},
-            "hier": {"intra_bytes": hi, "inter_bytes": he,
-                     "time_s": rcomm.a2a_time_s(hi, he, topo)},
-            "overlap": {"ffn_ms": ffn_ms, "sync_ms": t_sync,
-                        "pipelined_ms": t_opt, "chunks": n_opt,
-                        "speedup": t_sync / max(t_opt, 1e-12)},
+            "flat": {"intra_bytes": est.flat_intra_dispatch_bytes,
+                     "inter_bytes": est.flat_inter_dispatch_bytes,
+                     "time_s": est.flat_dispatch_ms / 1e3},
+            "hier": {"intra_bytes": est.intra_dispatch_bytes,
+                     "inter_bytes": est.inter_dispatch_bytes,
+                     "time_s": est.dispatch_ms / 1e3},
+            "overlap": {"ffn_ms": est.ffn_ms, "sync_ms": est.sync_ms,
+                        "pipelined_ms": est.overlap_ms,
+                        "chunks": est.chunks,
+                        "speedup": est.speedup},
         }
     return out
 
@@ -164,7 +165,7 @@ def run_pair(arch: str, shape_name: str, multi_pod: bool,
              out_path: Path, *, luffy_on: bool = True,
              bucket: int = 0, variant: str = "baseline",
              nodes: int = 0, exec_mode: str = "sync",
-             pipeline_chunks: int = 4):
+             pipeline_chunks: int = 4, plan_objective: str = "traffic"):
     import jax
     import jax.numpy as jnp
     from repro import optim, serve_lib, train_lib
@@ -180,7 +181,8 @@ def run_pair(arch: str, shape_name: str, multi_pod: bool,
     mesh = make_production_mesh(multi_pod=multi_pod, nodes=nodes)
     mesh_tag = "x".join(str(d) for d in mesh.devices.shape)
     rec = {"arch": arch, "shape": shape_name, "mesh": mesh_tag,
-           "variant": variant, "exec_mode": exec_mode, "status": "unknown"}
+           "variant": variant, "exec_mode": exec_mode,
+           "plan_objective": plan_objective, "status": "unknown"}
 
     if shape_name == "long_500k" and not cfg.supports_long_decode:
         rec["status"] = "skipped"
@@ -207,7 +209,8 @@ def run_pair(arch: str, shape_name: str, multi_pod: bool,
         enable_condensation=luffy_on and cfg.uses_moe,
         enable_migration=luffy_on and cfg.uses_moe,
         comm_mode="hier" if nodes > 1 else "flat",
-        exec_mode=exec_mode, pipeline_chunks=pipeline_chunks)
+        exec_mode=exec_mode, pipeline_chunks=pipeline_chunks,
+        plan_objective=plan_objective)
 
     if shape.mode == "train":
         # 100B+ models: full f32 Adam moments cannot fit 16GB/chip even at
@@ -435,6 +438,9 @@ def main():
                          "chunked pipeline with overlap (DESIGN.md §6)")
     ap.add_argument("--pipeline-chunks", type=int, default=4,
                     help="capacity chunks for --exec-mode pipeline")
+    ap.add_argument("--plan-objective", default="traffic",
+                    choices=["traffic", "overlap"],
+                    help="migration planner objective (DESIGN.md §7)")
     args = ap.parse_args()
     if args.all:
         orchestrate(args.jobs)
@@ -444,6 +450,8 @@ def main():
         mesh_tag += f"__hier{args.nodes}"
     if args.exec_mode == "pipeline":
         mesh_tag += f"__pipe{args.pipeline_chunks}"
+    if args.plan_objective != "traffic":
+        mesh_tag += f"__{args.plan_objective}"
     out = Path(args.out) if args.out else \
         ARTIFACTS / f"{args.arch}__{args.shape}__{mesh_tag}.json"
     out.parent.mkdir(parents=True, exist_ok=True)
@@ -452,7 +460,8 @@ def main():
                  luffy_on=not args.no_luffy, bucket=args.bucket,
                  variant=args.variant, nodes=args.nodes,
                  exec_mode=args.exec_mode,
-                 pipeline_chunks=args.pipeline_chunks)
+                 pipeline_chunks=args.pipeline_chunks,
+                 plan_objective=args.plan_objective)
     except Exception as e:
         rec = {"arch": args.arch, "shape": args.shape, "mesh": mesh_tag,
                "variant": args.variant, "status": "error",

@@ -2,6 +2,13 @@
 
     PYTHONPATH=src python -m repro.launch.serve --arch olmoe-1b-7b \
         --reduced --batch 4 --prompt-len 32 --gen 16
+
+The MoE sublayers run through the same ``repro.plan`` build/execute core
+as training (DESIGN.md §7), so the execution-schedule knobs apply here
+too: ``--exec-mode pipeline`` chunks the prefill dispatch capacity and
+overlaps the expert collectives with compute, ``--prefill batch`` runs
+one whole-prompt ``serve_lib.prefill`` pass through that executor (and
+times it) before the cache-building decode loop.
 """
 from __future__ import annotations
 
@@ -17,6 +24,29 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--model-axis", type=int, default=4)
+    ap.add_argument("--prefill", choices=["step", "batch"], default="step",
+                    help="step: feed the prompt token-by-token (cache-"
+                         "correct for every arch family); batch: also run "
+                         "one whole-prompt prefill through the shared "
+                         "build/execute MoE core (times the pipelined "
+                         "serving forward)")
+    ap.add_argument("--exec-mode", choices=["sync", "pipeline"],
+                    default="sync",
+                    help="MoE execution schedule for prefill/decode "
+                         "sublayers: strict order or chunked software "
+                         "pipeline with compute/comm overlap "
+                         "(bit-identical; DESIGN.md §6)")
+    ap.add_argument("--pipeline-chunks", type=int, default=4,
+                    help="capacity chunks for --exec-mode pipeline")
+    ap.add_argument("--plan-objective", default="traffic",
+                    choices=["traffic", "overlap"],
+                    help="migration planner objective (DESIGN.md §7). "
+                         "RESERVED for a future serving migration mode: "
+                         "today serving forces migration off (prompts "
+                         "are never re-homed), so both choices build "
+                         "identical vanilla plans — the flag only "
+                         "threads the config through for parity with "
+                         "train/dryrun")
     args = ap.parse_args()
 
     import jax
@@ -39,12 +69,33 @@ def main():
         dist = make_dist(mesh, "decode", args.batch, moe_arch=cfg.uses_moe)
     else:
         dist = single_device()
-    luffy = LuffyConfig(enable_condensation=False, enable_migration=False)
+    luffy = LuffyConfig(enable_condensation=False, enable_migration=False,
+                        exec_mode=args.exec_mode,
+                        pipeline_chunks=args.pipeline_chunks,
+                        plan_objective=args.plan_objective)
+    print(f"exec_mode={args.exec_mode} chunks={args.pipeline_chunks} "
+          f"plan_objective={args.plan_objective}")
 
     r = np.random.default_rng(0)
     B, S = args.batch, args.prompt_len
     prompts = jnp.asarray(r.integers(1, cfg.vocab_size, (B, S)), jnp.int32)
     s_max = S + args.gen
+    if args.prefill == "batch":
+        # whole-prompt forward through the shared build/execute MoE core
+        # (the pipelined serving path inherited from repro.plan)
+        if len(jax.devices()) > 1:
+            pdist = make_dist(mesh, "prefill", B, moe_arch=cfg.uses_moe)
+        else:
+            pdist = single_device()
+        pf = jax.jit(lambda p, t: model.prefill(
+            p, t, s_max, luffy=luffy, dist=pdist)[0])
+        logits_pf = pf(params, prompts)
+        jax.block_until_ready(logits_pf)
+        t0 = time.time()
+        logits_pf = jax.block_until_ready(pf(params, prompts))
+        dt = time.time() - t0
+        print(f"batched prefill({B}x{S} tokens): {dt:.3f}s "
+              f"({B * S / max(dt, 1e-9):.0f} tok/s)")
     t0 = time.time()
     cache = serve_lib.cache_struct(cfg, B, s_max, as_struct=False)
     dec = jax.jit(lambda p, c, t: serve_lib.decode_step(

@@ -53,6 +53,11 @@ def main():
     ap.add_argument("--pipeline-chunks", type=int, default=4,
                     help="capacity chunks for --exec-mode pipeline "
                          "(clipped to capacity/8)")
+    ap.add_argument("--plan-objective", default="traffic",
+                    choices=["traffic", "overlap"],
+                    help="migration planner objective (DESIGN.md §7): "
+                         "link-cost-weighted bytes, or modeled exposed "
+                         "(un-overlappable) time under the pipeline")
     ap.add_argument("--no-condensation", action="store_true")
     ap.add_argument("--no-migration", action="store_true")
     ap.add_argument("--optimizer", default="adamw")
@@ -98,7 +103,8 @@ def main():
         print(f"mesh {dict(zip(mesh.axis_names, mesh.devices.shape))} "
               f"topology {topo.num_nodes}x{topo.devices_per_node} "
               f"bw_ratio={topo.bw_ratio:.1f} comm_mode={args.comm_mode} "
-              f"exec_mode={args.exec_mode}")
+              f"exec_mode={args.exec_mode} "
+              f"plan_objective={args.plan_objective}")
 
     luffy = LuffyConfig(
         enable_condensation=not args.no_condensation and cfg.uses_moe,
@@ -107,7 +113,8 @@ def main():
         combine_slack=2.0,
         comm_mode=args.comm_mode,
         exec_mode=args.exec_mode,
-        pipeline_chunks=args.pipeline_chunks)
+        pipeline_chunks=args.pipeline_chunks,
+        plan_objective=args.plan_objective)
     ocfg = OptimConfig(name=args.optimizer, lr=args.lr,
                        total_steps=args.steps,
                        warmup_steps=max(2, args.steps // 20))

@@ -1,0 +1,29 @@
+"""Exchange planning subsystem (DESIGN.md §7).
+
+Where :mod:`repro.comm` decides *where bytes go and what they cost* and
+:mod:`repro.sched` decides *when the collectives run*, ``repro.plan``
+materializes the whole decision as data: :func:`build_exchange_plan`
+turns one router output into a frozen :class:`ExchangePlan` (routing,
+condensation map, migration assignment, chunk schedule, per-phase
+estimates) and :func:`execute_plan` is the thin executor every consumer
+— train forward, serving prefill, future paths — shares. Planning
+policy is pluggable through :mod:`repro.plan.objectives`
+(``LuffyConfig.plan_objective``: ``"traffic"`` reproduces the historical
+link-cost-weighted planner exactly, ``"overlap"`` minimizes modeled
+exposed time); :mod:`repro.plan.estimate` is the single analytic pricing
+source the dry-run ledger and ``commsim`` report from.
+"""
+from repro.plan.estimate import PlanEstimate, estimate_exchange
+from repro.plan.exchange import (ExchangeAux, ExchangePlan, MoEAux, N_AUX,
+                                 build_exchange_plan, execute_plan)
+from repro.plan.objectives import (ObjectiveContext, available_objectives,
+                                   get_objective,
+                                   plan_migration_with_objective,
+                                   register_objective)
+
+__all__ = [
+    "ExchangeAux", "ExchangePlan", "MoEAux", "N_AUX", "ObjectiveContext",
+    "PlanEstimate", "available_objectives", "build_exchange_plan",
+    "estimate_exchange", "execute_plan", "get_objective",
+    "plan_migration_with_objective", "register_objective",
+]

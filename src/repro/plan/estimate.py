@@ -1,0 +1,103 @@
+"""Analytic per-phase estimates attached to an :class:`ExchangePlan`.
+
+One exchange = dispatch all-to-all → expert FFN → combine all-to-all.
+:func:`estimate_exchange` prices each phase on a :class:`~repro.comm`
+``Topology`` — per-tier bytes (flat wire vs per-node-deduplicated),
+bandwidth-latency phase times, and the pipelined/sync sublayer times of
+the ``repro.sched.cost`` overlap model — in ONE place, so the plan
+builder, ``core/commsim.py`` and the dry-run ``comm_ledger`` all report
+the same numbers instead of each recomputing them (DESIGN.md §7).
+
+Everything here is host-side float arithmetic on static shapes: an
+estimate is metadata riding on the plan pytree, never traced.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+from repro.comm import ledger as comm_ledger
+from repro.comm.topology import Topology
+from repro.sched import cost as sched_cost
+
+
+class PlanEstimate(NamedTuple):
+    """Per-phase byte/latency model of one exchange (all static floats).
+
+    Byte fields are split by link tier (intra-node vs inter-node) and by
+    wire format: ``flat_*`` is what a flat all-to-all ships, the unprefixed
+    fields are the per-node-deduplicated hierarchical payload (equal on
+    flat topologies). Times come from the same bandwidth-latency and
+    3-stage overlap models the rest of the repo prices with.
+    """
+    intra_dispatch_bytes: float
+    inter_dispatch_bytes: float
+    flat_intra_dispatch_bytes: float
+    flat_inter_dispatch_bytes: float
+    intra_combine_bytes: float
+    inter_combine_bytes: float
+    dispatch_ms: float
+    combine_ms: float
+    flat_dispatch_ms: float
+    ffn_ms: float
+    sync_ms: float
+    overlap_ms: float
+    chunks: int
+
+    @property
+    def speedup(self) -> float:
+        return self.sync_ms / max(self.overlap_ms, 1e-12)
+
+
+def estimate_exchange(tokens: int, top_k: int, d_model: int, *,
+                      topo: Topology, r_cond: float = 0.0,
+                      locality: float = 0.0, bytes_per_el: int = 4,
+                      num_layers: int = 1, ffn_ms: float = 0.0,
+                      chunks: Optional[int] = None, max_chunks: int = 16,
+                      intra_bw: Optional[float] = None,
+                      inter_bw: Optional[float] = None,
+                      chunk_overhead_ms: float =
+                      sched_cost.DEFAULT_CHUNK_OVERHEAD_MS) -> PlanEstimate:
+    """Price one exchange of ``tokens`` × ``top_k`` dispatch rows.
+
+    ``r_cond`` removes condensed tokens before dispatch; ``locality``
+    scales the combine payload by the migration locality gain (rows whose
+    new home is their expert device never cross the wire). ``ffn_ms`` is
+    the modeled expert-FFN stage the pipeline overlaps against; with
+    ``chunks=None`` the 1..``max_chunks`` planning optimum is searched,
+    otherwise the given (executor-clipped) chunk count is priced.
+    ``intra_bw``/``inter_bw`` override the topology's link bandwidths —
+    commsim passes its *calibrated* effective bandwidth here.
+    """
+    fi, fe = comm_ledger.dispatch_bytes(
+        tokens, top_k, d_model, topo=topo, r_cond=r_cond,
+        bytes_per_el=bytes_per_el, num_layers=num_layers, dedup=False)
+    hi, he = comm_ledger.dispatch_bytes(
+        tokens, top_k, d_model, topo=topo, r_cond=r_cond,
+        bytes_per_el=bytes_per_el, num_layers=num_layers, dedup=True)
+    ci, ce = hi * (1.0 - locality), he * (1.0 - locality)
+    bw_i = intra_bw if intra_bw is not None else topo.intra_bw
+    bw_e = inter_bw if inter_bw is not None else topo.inter_bw
+
+    def phase_ms(intra_bytes: float, inter_bytes: float) -> float:
+        mi, me = comm_ledger.phase_messages(topo)
+        return (intra_bytes / bw_i + inter_bytes / bw_e
+                + mi * topo.intra_lat + me * topo.inter_lat) * 1e3
+
+    d_ms = phase_ms(hi, he)
+    c_ms = phase_ms(ci, ce)
+    kw = dict(dispatch_ms=d_ms, ffn_ms=ffn_ms, combine_ms=c_ms,
+              chunk_overhead_ms=chunk_overhead_ms)
+    if chunks is None:
+        n, t_pipe = sched_cost.optimal_chunks(topo, max_chunks=max_chunks,
+                                              **kw)
+    else:
+        n = max(1, int(chunks))
+        t_pipe = sched_cost.overlap_ms(topo, n, **kw)
+    return PlanEstimate(
+        intra_dispatch_bytes=hi, inter_dispatch_bytes=he,
+        flat_intra_dispatch_bytes=fi, flat_inter_dispatch_bytes=fe,
+        intra_combine_bytes=ci, inter_combine_bytes=ce,
+        dispatch_ms=d_ms, combine_ms=c_ms,
+        flat_dispatch_ms=phase_ms(fi, fe),
+        ffn_ms=ffn_ms, sync_ms=sched_cost.sync_ms(topo, **kw),
+        overlap_ms=t_pipe, chunks=n)

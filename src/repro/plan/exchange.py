@@ -1,0 +1,527 @@
+"""Plan/execute split for the MoE exchange (DESIGN.md §7).
+
+Every decision about one expert-parallel exchange — routing, the
+condensation map (§V), the migration assignment (§IV), the pipeline
+chunk schedule (§6) and the per-phase cost estimates — is materialized
+as ONE frozen record, :class:`ExchangePlan`, by
+:func:`build_exchange_plan`; :func:`execute_plan` is a thin executor
+that moves the bytes the plan prescribes. ``core/moe_layer.moe_core``
+is build + execute and nothing else, so the train forward, the serving
+prefill path and any future consumer share the same decisions and the
+same executor, and planning policy (``LuffyConfig.plan_objective``,
+:mod:`repro.plan.objectives`) is swappable without touching execution.
+
+Both halves run *inside* the same ``shard_map`` trace: the plan's array
+fields are per-device traced values (replicated where they must agree,
+e.g. the migration permutation), its static fields (mode, capacity,
+chunk schedule, comm context, estimates) are fixed at trace time.
+Splitting a pure computation into two functions does not change any
+value's defining subgraph, so build + execute is bit-identical to the
+fused pre-split ``moe_core`` (tested: ``tests/test_plan.py``).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.comm import CommContext
+from repro.comm import ledger as comm_ledger
+from repro.config import LuffyConfig, ModelConfig
+from repro.core import condensation as cond
+from repro.core.gating import GateOutput, dispatch_positions
+from repro.plan import objectives
+from repro.plan.estimate import PlanEstimate, estimate_exchange
+from repro.sched import ChunkPlan, plan_chunks, run_pipeline
+
+Array = jnp.ndarray
+
+
+class MoEAux(NamedTuple):
+    aux_loss: Array
+    dispatch_drop: Array      # fraction of kept rows dropped at dispatch
+    combine_drop: Array       # fraction of rows dropped at combine regroup
+    condense_rate: Array      # fraction of tokens condensed
+    local_frac: Array         # fraction of combine rows staying on-device
+    traffic_before: Array     # plan ledger (link-cost-weighted tokens
+    traffic_after: Array      # crossing devices, without/with migration)
+    inter_bytes_flat: Array   # dispatch bytes a flat a2a ships across nodes
+    inter_bytes_dedup: Array  # modeled bytes after per-node dedup (hier
+                              # mode; the executed wire is still dense)
+
+N_AUX = len(MoEAux._fields)
+
+
+def _rms(x, scale, eps=1e-6):
+    xf = x.astype(jnp.float32)
+    v = jnp.mean(xf * xf, -1, keepdims=True)
+    return (xf * jax.lax.rsqrt(v + eps) * scale.astype(jnp.float32))
+
+
+def expert_ffn(ew, h, act, compute_dtype, use_kernel: bool = False):
+    """h: [E_local, R, d] normed inputs -> [E_local, R, d]."""
+    if use_kernel:
+        from repro.kernels import ops as kops
+        return kops.expert_ffn(h, ew["w_up"], ew["w_gate"], ew["w_down"], act)
+    cdt = compute_dtype
+    hc = h.astype(cdt)
+    up = jnp.einsum("erd,edf->erf", hc, ew["w_up"].astype(cdt))
+    gt = jnp.einsum("erd,edf->erf", hc, ew["w_gate"].astype(cdt))
+    hh = act(gt) * up
+    return jnp.einsum("erf,efd->erd", hh, ew["w_down"].astype(cdt))
+
+
+# ---------------------------------------------------------------------------
+# the plan
+# ---------------------------------------------------------------------------
+
+class ExchangePlan(NamedTuple):
+    """Every decision about one exchange, as data.
+
+    Static fields (python values, fixed at trace time) describe *how* to
+    execute; traced fields describe *what* the router/condenser/planner
+    decided for this step's tokens. ``estimate`` carries the analytic
+    per-phase byte/latency model (None on single-device / unknown
+    topologies) — dry-run ledgers and commsim report off it.
+    """
+    # -- static decisions ---------------------------------------------------
+    mode: str                     # "vanilla" | "migrate"
+    migrate: bool                 # mode == "migrate" and active (M > 1)
+    condense: bool                # condensation active this call
+    pipelined: bool               # chunked software pipeline vs sync
+    capacity: int                 # per-(source, expert) dispatch capacity
+    chunks: ChunkPlan             # capacity partition (1 chunk = sync)
+    comm: CommContext             # collective strategy (never None)
+    objective: str                # planner objective that produced this
+    group_size: int               # condensation group G
+    combine_slack: float          # migrate-mode combine buffer slack
+    use_kernel: bool
+    estimate: Optional[PlanEstimate]
+    # -- routing (traced) ---------------------------------------------------
+    expert_idx: Array             # [T, k] global expert ids
+    gate_weights: Array           # [T, k] combine weights
+    positions: Array              # [T, k] dispatch buffer positions
+    valid: Array                  # [T, k] row takes a dispatch slot
+    aux_loss: Array               # [] router load-balance loss
+    dispatch_drop: Array          # [] fraction of kept rows dropped
+    # -- condensation map ---------------------------------------------------
+    rep_idx: Array                # [T] representative per token
+    s_next: Optional[Array]       # similarity history for the next block
+    condense_rate: Array          # [] fraction condensed
+    # -- migration assignment ----------------------------------------------
+    dest_global: Array            # [n_seq] new global slot per local slot
+    traffic_before: Array         # [] weighted combine rows, identity plan
+    traffic_after: Array          # [] weighted combine rows, this plan
+    # -- traced wire ledger -------------------------------------------------
+    inter_bytes_flat: Array
+    inter_bytes_dedup: Array
+
+
+class ExchangeAux(NamedTuple):
+    """Executor outputs riding alongside ``y``."""
+    sideband: Dict[str, Array]    # per-sequence state at its (new) home
+    s_next: Optional[Array]       # similarity history (migrated if needed)
+    moe: MoEAux
+
+
+# ---------------------------------------------------------------------------
+# build
+# ---------------------------------------------------------------------------
+
+def build_exchange_plan(gate: GateOutput, xn: Array, cfg: ModelConfig,
+                        luffy: LuffyConfig, comm: CommContext, *,
+                        mode: str, capacity: int,
+                        sideband: Dict[str, Array],
+                        threshold=None, s_prev: Optional[Array] = None,
+                        group_size: int = 128, combine_slack: float = 1.0,
+                        use_kernel: bool = False) -> ExchangePlan:
+    """Decide one exchange: condensation map, dispatch slots/drops, the
+    migration assignment (via the ``luffy.plan_objective`` registry
+    entry), the chunk schedule, and the analytic phase estimates.
+
+    gate: router output over ``xn`` [T, d] (normed tokens, T = n_seq*S);
+    sideband must hold ``seq_len`` [n_seq]. Pure function of the routing
+    — no payload bytes move here.
+    """
+    m = cfg.moe
+    T, d = xn.shape
+    n_seq = sideband["seq_len"].shape[0]
+    S = T // n_seq
+    E = m.num_experts
+    M = comm.size()
+    assert E % M == 0, (E, M)
+    E_local = E // M
+    my = comm.index()
+    C = capacity
+    expert_idx, gate_w = gate.expert_idx, gate.gate_weights   # [T,k]
+
+    # token validity (length padding)
+    pos_in_seq = jnp.tile(jnp.arange(S, dtype=jnp.int32)[None], (n_seq, 1))
+    token_valid = (pos_in_seq < sideband["seq_len"][:, None]).reshape(T)
+    keep = jnp.tile(token_valid[:, None], (1, m.top_k))
+
+    # ---- token condensation (§V) ----------------------------------------
+    do_condense = luffy.enable_condensation and mode != "decode"
+    if do_condense:
+        co = cond.condense_tokens(
+            xn, expert_idx[:, 0], threshold, group_size=group_size,
+            s_prev=(None if s_prev is None
+                    else s_prev.reshape(-1, group_size, group_size)),
+            s1=luffy.s1, s2=luffy.s2, use_kernel=use_kernel)
+        keep = keep & co.is_rep[:, None]
+        rep_idx, s_next = co.rep_idx, co.sim
+        c_rate = co.rate
+    else:
+        rep_idx = jnp.arange(T, dtype=jnp.int32)
+        s_next, c_rate = None, jnp.float32(0.0)
+
+    # ---- dispatch positions & drops --------------------------------------
+    pos = dispatch_positions(expert_idx, keep, E)             # [T,k]
+    valid = keep & (pos < C)
+    kept = jnp.sum(keep.astype(jnp.float32))
+    d_drop = 1.0 - jnp.sum(valid.astype(jnp.float32)) / jnp.maximum(kept, 1.0)
+
+    # ---- execution schedule + phase estimates ----------------------------
+    from repro.models.blocks import _dtype
+    cdt = _dtype(cfg.compute_dtype)
+    pipelined = luffy.exec_mode == "pipeline" and M > 1
+    assert luffy.exec_mode in ("sync", "pipeline"), luffy.exec_mode
+    chunks = plan_chunks(C, luffy.pipeline_chunks if pipelined else 1)
+    topo = comm.topology
+    est = None
+    if topo is not None and M > 1:
+        ffn_rows = E * C        # static per-device FFN rows (M*C*E_local)
+        # 4·d·d_ff flops/row (up+down matmuls) — the repo-wide pricing
+        # convention (commsim._expert_flops, dryrun ledger, objective
+        # sweep); gate matmuls are deliberately excluded everywhere so
+        # objective decisions stay consistent with the calibrated model
+        ffn_ms = ffn_rows * 4.0 * d * m.d_ff / luffy.gpu_speed * 1e3
+        est = estimate_exchange(
+            T, m.top_k, d, topo=topo,
+            bytes_per_el=jnp.dtype(cdt).itemsize, ffn_ms=ffn_ms,
+            chunks=chunks.n_chunks)
+
+    # ---- inter-node traffic ledger (DESIGN.md §5) ------------------------
+    if topo is not None and topo.hierarchical and M > 1:
+        row_bytes = float((d + 2) * jnp.dtype(cdt).itemsize)
+        ib_flat, ib_dedup = comm_ledger.dispatch_node_ledger(
+            expert_idx, valid, my, e_local=E_local, topo=topo,
+            row_bytes=row_bytes)
+        if comm.mode != "hier":
+            ib_dedup = ib_flat      # the flat path ships every copy
+    else:
+        ib_flat = ib_dedup = jnp.float32(0.0)
+
+    # ---- migration plan (§IV) — BEFORE dispatch so combine can be
+    # re-addressed. Replicated within the model row. -----------------------
+    migrate = (mode == "migrate") and luffy.enable_migration and M > 1
+    if migrate:
+        dev_of_e = expert_idx // E_local                      # [T,k]
+        oh = jax.nn.one_hot(dev_of_e, M, dtype=jnp.float32) \
+            * valid[..., None].astype(jnp.float32)
+        counts_local = oh.reshape(n_seq, S, m.top_k, M).sum((1, 2))  # [n_seq,M]
+        counts_g = jax.lax.all_gather(counts_local, comm.axis_name, axis=0,
+                                      tiled=True)             # [M*n_seq, M]
+        lens_g = jax.lax.all_gather(sideband["seq_len"], comm.axis_name,
+                                    axis=0, tiled=True)       # [M*n_seq]
+        octx = objectives.ObjectiveContext(topo=topo)
+        if est is not None:
+            octx = objectives.ObjectiveContext(
+                topo=topo, ffn_ms=est.ffn_ms,
+                dispatch_intra_ms=est.intra_dispatch_bytes
+                / topo.intra_bw * 1e3,
+                dispatch_inter_ms=est.inter_dispatch_bytes
+                / topo.inter_bw * 1e3,
+                chunks=chunks.n_chunks,
+                row_bytes=float(d * jnp.dtype(cdt).itemsize))
+        mplan = objectives.plan_migration_with_objective(
+            counts_g, lens_g.astype(jnp.float32), n_seq,
+            objective=luffy.plan_objective, ctx=octx, q=luffy.q,
+            d_model=d, speed=luffy.gpu_speed)
+        my_slots = my * n_seq + jnp.arange(n_seq, dtype=jnp.int32)
+        dest_global = mplan.perm[my_slots]                    # [n_seq]
+        t_before, t_after = mplan.traffic_before, mplan.traffic_after
+    else:
+        dest_global = my * n_seq + jnp.arange(n_seq, dtype=jnp.int32)
+        t_before = t_after = jnp.float32(0.0)
+
+    return ExchangePlan(
+        mode=mode, migrate=migrate, condense=do_condense,
+        pipelined=pipelined, capacity=C, chunks=chunks, comm=comm,
+        objective=luffy.plan_objective, group_size=group_size,
+        combine_slack=combine_slack, use_kernel=use_kernel, estimate=est,
+        expert_idx=expert_idx, gate_weights=gate_w, positions=pos,
+        valid=valid, aux_loss=gate.aux_loss, dispatch_drop=d_drop,
+        rep_idx=rep_idx, s_next=s_next, condense_rate=c_rate,
+        dest_global=dest_global, traffic_before=t_before,
+        traffic_after=t_after, inter_bytes_flat=ib_flat,
+        inter_bytes_dedup=ib_dedup)
+
+
+# ---------------------------------------------------------------------------
+# execute
+# ---------------------------------------------------------------------------
+
+def execute_plan(params, x: Array, sideband: Dict[str, Array],
+                 plan: ExchangePlan, cfg: ModelConfig
+                 ) -> Tuple[Array, ExchangeAux]:
+    """Move the bytes the plan prescribes: pack dispatch buffers, run the
+    (optionally pipelined) dispatch → expert FFN → combine exchange,
+    regroup/un-condense, apply shared experts. No decisions are made
+    here — the plan is the single source of truth, so the train forward
+    and the serving prefill execute identically.
+
+    x: [n_seq, S, d] pre-norm hidden. Returns ``(y, ExchangeAux)``; in
+    vanilla mode ``y = x + moe_delta``, in migrate mode ``y`` is the full
+    post-block hidden materialized at *new* slots.
+    """
+    from repro.models.blocks import _act, _dtype
+    m = cfg.moe
+    cdt = _dtype(cfg.compute_dtype)
+    act = _act(cfg.act)
+    n_seq, S, d = x.shape
+    T = n_seq * S
+    E = m.num_experts
+    comm = plan.comm
+    M = comm.size()
+    E_local = E // M
+    my = comm.index()
+    C = plan.capacity
+    migrate = plan.migrate
+    use_kernel = plan.use_kernel
+    group_size = plan.group_size
+    expert_idx, gate_w = plan.expert_idx, plan.gate_weights
+    pos, valid = plan.positions, plan.valid
+    rep_idx, s_next = plan.rep_idx, plan.s_next
+    dest_global = plan.dest_global
+
+    xf = x.reshape(T, d)
+
+    # ---- build dispatch buffers ------------------------------------------
+    # payload row: [x_raw(d), gate_w, is_primary]; meta: (dest_slot+1, pos)
+    is_primary = (jnp.arange(m.top_k) == 0)[None, :]          # [1,k]
+    tok_slot = jnp.tile((jnp.arange(T, dtype=jnp.int32) // S)[:, None],
+                        (1, m.top_k))                         # local seq slot
+    tok_pos = jnp.tile((jnp.arange(T, dtype=jnp.int32) % S)[:, None],
+                       (1, m.top_k))
+    dest_of_tok = dest_global[tok_slot]                       # [T,k]
+
+    e_f = expert_idx.reshape(-1)
+    p_f = pos.reshape(-1)
+    v_f = valid.reshape(-1)
+    payload = jnp.concatenate([
+        jnp.tile(xf.astype(cdt)[:, None], (1, m.top_k, 1)),
+        gate_w[..., None].astype(cdt),
+        jnp.broadcast_to(is_primary, (T, m.top_k))[..., None].astype(cdt),
+    ], axis=-1).reshape(-1, d + 2)                            # [T*k, d+2]
+    meta = jnp.stack([dest_of_tok + 1, tok_pos], -1).reshape(-1, 2)
+
+    buf = jnp.zeros((E, C, d + 2), cdt)
+    mbuf = jnp.zeros((E, C, 2), jnp.int32)
+    p_safe = jnp.where(v_f, p_f, 0)
+    e_safe = jnp.where(v_f, e_f, 0)
+    buf = buf.at[e_safe, p_safe].add(
+        payload * v_f[:, None].astype(cdt), mode="drop")
+    mbuf = mbuf.at[e_safe, p_safe].add(
+        meta * v_f[:, None].astype(jnp.int32), mode="drop")
+
+    # ---- dispatch → expert FFN → (vanilla) combine ------------------------
+    # plan.pipelined chunks the static capacity dim and runs the
+    # repro.sched software pipeline: chunk k's collective is issued before
+    # chunk k-1's FFN result is consumed (DESIGN.md §6). Bit-identical to
+    # sync: capacity slicing commutes with the data-movement-only
+    # collectives and the row-wise FFN, and chunk results are reassembled
+    # in the sync layout before any order-sensitive step (the migrate-mode
+    # regroup sorts across ALL rows, so it stays a post-pipeline barrier).
+    def _ffn_rows(rows_k):
+        """rows_k: [E_local, M, Ck, d+2] -> (out, prim) same leading dims."""
+        xr = rows_k[..., :d]
+        gw = rows_k[..., d:d + 1]
+        prim_k = rows_k[..., d + 1:d + 2]
+        ck = rows_k.shape[2]
+        h = _rms(xr, params["norm"]["scale"]).astype(cdt)
+        y = expert_ffn(params["experts"], h.reshape(E_local, M * ck, d),
+                       act, cdt, use_kernel=use_kernel) \
+            .reshape(E_local, M, ck, d)
+        out_k = y * gw
+        if migrate:
+            out_k = out_k + xr * prim_k    # primary copy carries residual
+        return out_k, prim_k
+
+    if plan.pipelined:
+        cplan = plan.chunks
+
+        def _disp(k):
+            # vanilla needs no row metadata — exchanging it would put a
+            # dead collective on the pipelined critical path (the barrier
+            # keeps payloads live, so XLA could not DCE it there)
+            o, s = cplan.offsets[k], cplan.sizes[k]
+            bk = comm.all_to_all(jax.lax.slice_in_dim(buf, o, o + s,
+                                                      axis=1))
+            if not migrate:
+                return bk
+            return bk, comm.all_to_all(jax.lax.slice_in_dim(mbuf, o, o + s,
+                                                            axis=1))
+
+        def _compute(k, payload):
+            bk, mk = payload if migrate else (payload, None)
+            s = cplan.sizes[k]
+            rows_k = bk.reshape(M, E_local, s, d + 2).transpose(1, 0, 2, 3)
+            if not migrate:
+                return _ffn_rows(rows_k)
+            meta_k = mk.reshape(M, E_local, s, 2).transpose(1, 0, 2, 3)
+            return _ffn_rows(rows_k) + (meta_k,)
+
+        if not migrate:
+            def _comb(k, res):
+                out_k = res[0]                 # [E_local, M, Ck, d]
+                back_k = out_k.transpose(1, 0, 2, 3) \
+                              .reshape(E, out_k.shape[2], d)
+                return comm.combine(back_k)
+
+            _, backs = run_pipeline(cplan.n_chunks, dispatch=_disp,
+                                    compute=_compute, combine=_comb)
+            back = jnp.concatenate(backs, axis=1)            # [E, C, d]
+        else:
+            outs, _ = run_pipeline(cplan.n_chunks, dispatch=_disp,
+                                   compute=_compute)
+            out_rows = jnp.concatenate([o for o, _, _ in outs], axis=2) \
+                          .reshape(E_local, M * C, d)
+            prim = jnp.concatenate([p for _, p, _ in outs], axis=2) \
+                      .reshape(E_local, M * C, 1)
+            rmeta = jnp.concatenate([m for _, _, m in outs], axis=2) \
+                       .reshape(E_local, M * C, 2)
+    else:
+        if M > 1:
+            buf = comm.all_to_all(buf)
+            mbuf = comm.all_to_all(mbuf)
+        # [M_src * E_local, C, .] -> [E_local, M_src, C, .]
+        rows4 = buf.reshape(M, E_local, C, d + 2).transpose(1, 0, 2, 3)
+        rmeta = mbuf.reshape(M, E_local, C, 2).transpose(1, 0, 2, 3) \
+                    .reshape(E_local, M * C, 2)
+        out4, prim4 = _ffn_rows(rows4)
+        out_rows = out4.reshape(E_local, M * C, d)
+        prim = prim4.reshape(E_local, M * C, 1)
+        if not migrate:
+            back = out_rows.reshape(E_local, M, C, d) \
+                           .transpose(1, 0, 2, 3).reshape(E, C, d)
+            if M > 1:
+                back = comm.combine(back)
+
+    # ---- combine ----------------------------------------------------------
+    if not migrate:
+        # vanilla: rows returned to their source in dispatch layout
+        vals = back[e_safe, p_safe] * v_f[:, None].astype(cdt)  # [T*k, d]
+        delta = jnp.sum(vals.reshape(T, m.top_k, d), axis=1)
+        y_tok = xf + delta.astype(xf.dtype)
+        c_drop = jnp.float32(0.0)
+        local_frac = jnp.float32(1.0 / M)
+        new_sideband = dict(sideband)
+    else:
+        # regroup rows by destination device (priority: residual rows first)
+        R = E_local * M * C
+        o_f = out_rows.reshape(R, d)
+        dslot = rmeta[..., 0].reshape(R) - 1               # -1 = empty row
+        rpos = rmeta[..., 1].reshape(R)
+        rprim = prim.reshape(R) > 0.5
+        rvalid = dslot >= 0
+        ddev = jnp.where(rvalid, dslot // n_seq, M)        # M = dummy bin
+        prio = (~rvalid).astype(jnp.int32) * 2 + (~rprim).astype(jnp.int32)
+        order = jnp.argsort(prio, stable=True)
+        o_f, dslot, rpos, ddev, rvalid = (a[order] for a in
+                                          (o_f, dslot, rpos, ddev, rvalid))
+        C_comb = max(8, int(math.ceil(
+            plan.combine_slack * E_local * C / 8)) * 8)
+        oh = jax.nn.one_hot(ddev, M, dtype=jnp.int32)
+        rank = (jnp.cumsum(oh, axis=0) - oh)[jnp.arange(R), jnp.where(
+            rvalid, ddev, 0)]
+        keep_c = rvalid & (rank < C_comb)
+        n_rv = jnp.sum(rvalid.astype(jnp.float32))
+        c_drop = 1.0 - jnp.sum(keep_c.astype(jnp.float32)) / jnp.maximum(
+            n_rv, 1.0)
+        local_frac = jnp.sum((keep_c & (ddev == my)).astype(jnp.float32)) \
+            / jnp.maximum(n_rv, 1.0)
+        dd_s = jnp.where(keep_c, ddev, 0)
+        rk_s = jnp.where(keep_c, rank, 0)
+        cbuf = jnp.zeros((M, C_comb, d), cdt).at[dd_s, rk_s].add(
+            o_f * keep_c[:, None].astype(cdt), mode="drop")
+        cmeta = jnp.zeros((M, C_comb, 2), jnp.int32).at[dd_s, rk_s].add(
+            jnp.stack([jnp.where(keep_c, dslot % n_seq + 1, 0),
+                       jnp.where(keep_c, rpos, 0)], -1), mode="drop")
+        if M > 1:
+            cbuf = comm.combine(cbuf)
+            cmeta = comm.combine(cmeta)
+        rs = cbuf.reshape(M * C_comb, d)
+        rslot = cmeta[..., 0].reshape(-1) - 1
+        rp = cmeta[..., 1].reshape(-1)
+        ok = rslot >= 0
+        y_grid = jnp.zeros((n_seq, S, d), cdt).at[
+            jnp.where(ok, rslot, 0), jnp.where(ok, rp, 0)].add(
+            rs * ok[:, None].astype(cdt), mode="drop")
+        y_tok = y_grid.reshape(T, d).astype(xf.dtype)
+        # sideband travels with sequences
+        new_sideband = _exchange_sideband(
+            sideband, dest_global, n_seq, M, comm)
+
+    # ---- un-condense (token_to_token replacement, §VI) --------------------
+    if plan.condense:
+        if not migrate:
+            y_tok = cond.uncondense(y_tok, rep_idx)
+        else:
+            # rep map migrated as sideband: [n_seq, S] local rep position
+            rep_local = (rep_idx % S).reshape(n_seq, S).astype(jnp.int32)
+            rep_sb = _exchange_sideband({"rep": rep_local}, dest_global,
+                                        n_seq, M, comm)["rep"]
+            yg = y_tok.reshape(n_seq, S, d)
+            y_tok = jnp.take_along_axis(yg, rep_sb[..., None], axis=1
+                                        ).reshape(T, d)
+        if s_next is not None and migrate:
+            ng = S // group_size
+            s_mig = s_next.reshape(n_seq, ng, group_size, group_size)
+            s_next = _exchange_sideband(
+                {"s": s_mig.astype(jnp.bfloat16)}, dest_global, n_seq, M,
+                comm)["s"].astype(jnp.float32)
+            s_next = s_next.reshape(-1, group_size, group_size)
+
+    y_out = y_tok.reshape(n_seq, S, d)
+
+    # ---- shared experts (always-on, llama4-style) -------------------------
+    if "shared" in params:
+        from repro.models.blocks import ffn_apply
+        sh = ffn_apply({"w_up": params["shared"]["w_up"],
+                        "w_gate": params["shared"]["w_gate"],
+                        "w_down": params["shared"]["w_down"]},
+                       cfg, _rms(y_out if migrate else x.reshape(n_seq, S, d),
+                                 params["norm"]["scale"]).astype(cdt))
+        y_out = y_out + sh.astype(y_out.dtype)
+
+    aux = MoEAux(plan.aux_loss, plan.dispatch_drop, c_drop,
+                 plan.condense_rate, local_frac, plan.traffic_before,
+                 plan.traffic_after, plan.inter_bytes_flat,
+                 plan.inter_bytes_dedup)
+    return y_out, ExchangeAux(sideband=new_sideband, s_next=s_next, moe=aux)
+
+
+def _exchange_sideband(sb: Dict[str, Array], dest_global: Array,
+                       n_seq: int, M: int,
+                       comm: CommContext) -> Dict[str, Array]:
+    """Move per-sequence side info to new homes (bijection on slots)."""
+    if M == 1:
+        # permutation within the single device
+        out = {}
+        inv = jnp.zeros((n_seq,), jnp.int32).at[dest_global % n_seq].set(
+            jnp.arange(n_seq, dtype=jnp.int32))
+        for k, v in sb.items():
+            out[k] = v[inv]
+        return out
+    out = {}
+    dd = dest_global // n_seq
+    ds = dest_global % n_seq
+    for k, v in sb.items():
+        buf = jnp.zeros((M, n_seq) + v.shape[1:], v.dtype)
+        buf = buf.at[dd, ds].add(v)
+        buf = comm.combine(buf)
+        out[k] = jnp.sum(buf, axis=0)      # exactly-one-writer per slot
+    return out

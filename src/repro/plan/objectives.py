@@ -1,0 +1,260 @@
+"""Pluggable migration-planner objectives (DESIGN.md §7).
+
+The migration greedy (``core/migration.py`` Algorithm 1) ranks candidate
+destinations by a ``[M, M]`` per-byte link-cost matrix. An *objective*
+decides what that matrix prices and, when the greedy cannot optimize the
+true goal exactly, how to select among candidate plans:
+
+* ``"traffic"`` — the historical objective, exactly: minimize
+  link-cost-weighted combine bytes (``Topology.link_cost()``; uniform
+  ``1 − I`` on flat fabrics). Plans are bit-identical to the pre-registry
+  code path.
+* ``"overlap"`` — minimize modeled **exposed** (un-overlappable) time of
+  the pipelined exchange. With the ``repro.sched`` pipeline hiding
+  collectives under expert compute, a byte only costs wall-clock when its
+  link tier is the pipeline bottleneck: intra-node bytes are hidden
+  ``chunks``-fold deeper than bottleneck inter-node bytes, so the
+  greedy's effective inter/intra cost ratio grows from ``bw_ratio`` to
+  ``≈ chunks · bw_ratio``. Because that matrix is a surrogate, the
+  objective evaluates BOTH its own plan and the traffic plan under the
+  phase-decomposed exposed-time model and keeps the better one — an
+  ``"overlap"`` plan is never worse in modeled exposed ms than the
+  ``"traffic"`` plan on the same instance.
+
+New objectives register with :func:`register_objective` and are selected
+by ``LuffyConfig.plan_objective`` (CLI ``--plan-objective``).
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, NamedTuple, Optional
+
+import numpy as np
+
+import jax.numpy as jnp
+
+from repro.comm.topology import Topology
+from repro.core import migration as mig
+from repro.sched.cost import DEFAULT_CHUNK_OVERHEAD_MS
+
+
+class ObjectiveContext(NamedTuple):
+    """Static facts an objective prices a migration against.
+
+    Phase times model ONE device's share of one exchange (the same units
+    as the evaluator's combine times): ``dispatch_*_ms`` are
+    plan-invariant (routing fixes them before migration re-homes
+    anything); ``ffn_ms`` is the expert-FFN stage the pipeline hides
+    collectives under; ``chunks`` is the executed/planned pipeline depth
+    (1 = sync); ``row_bytes`` converts the planner's token counts to
+    combine-payload bytes.
+    """
+    topo: Optional[Topology]
+    ffn_ms: float = 0.0
+    dispatch_intra_ms: float = 0.0
+    dispatch_inter_ms: float = 0.0
+    chunks: int = 1
+    row_bytes: float = 4.0
+    chunk_overhead_ms: float = DEFAULT_CHUNK_OVERHEAD_MS
+
+    @property
+    def hierarchical(self) -> bool:
+        return self.topo is not None and self.topo.hierarchical
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+# objective(counts, seq_lens, n_per_dev, *, ctx, q, d_model, speed)
+#   -> MigrationPlan   (numpy in -> host plan, jax in -> traceable plan)
+Objective = Callable[..., mig.MigrationPlan]
+
+OBJECTIVES: Dict[str, Objective] = {}
+
+
+def register_objective(name: str):
+    """Decorator: register a planner objective under ``name``."""
+    def deco(fn: Objective) -> Objective:
+        OBJECTIVES[name] = fn
+        return fn
+    return deco
+
+
+def available_objectives():
+    return sorted(OBJECTIVES)
+
+
+def get_objective(name: str) -> Objective:
+    try:
+        return OBJECTIVES[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown plan_objective {name!r}; registered objectives: "
+            f"{available_objectives()}") from None
+
+
+def plan_migration_with_objective(counts, seq_lens, n_per_dev: int, *,
+                                  objective: str = "traffic",
+                                  ctx: Optional[ObjectiveContext] = None,
+                                  q: int = 3, d_model: int = 1024,
+                                  speed: float = 1e13) -> mig.MigrationPlan:
+    """Run Algorithm 1 under the named objective. Array types select the
+    backend: numpy inputs use the host planner, jax inputs the traceable
+    one (both stay in lock-step; see ``core/migration.py``)."""
+    fn = get_objective(objective)
+    if ctx is None:
+        ctx = ObjectiveContext(topo=None)
+    return fn(counts, seq_lens, n_per_dev, ctx=ctx, q=q, d_model=d_model,
+              speed=speed)
+
+
+# ---------------------------------------------------------------------------
+# shared helpers
+# ---------------------------------------------------------------------------
+
+def _is_traced(x) -> bool:
+    return isinstance(x, jnp.ndarray)
+
+
+def _planner(counts):
+    return mig.plan_migration_jax if _is_traced(counts) \
+        else mig.plan_migration_np
+
+
+def _as_cost(matrix: Optional[np.ndarray], counts):
+    if matrix is None:
+        return None
+    if _is_traced(counts):
+        return jnp.asarray(matrix, jnp.float32)
+    return np.asarray(matrix, np.float64)
+
+
+def traffic_link_cost(topo: Optional[Topology]) -> Optional[np.ndarray]:
+    """The historical matrix: ``Topology.link_cost()`` when hierarchical,
+    None (planners fall back to ``1 − I``) otherwise — exactly
+    ``CommContext.link_cost()`` semantics."""
+    if topo is None or not topo.hierarchical:
+        return None
+    return topo.link_cost()
+
+
+def exposed_link_cost(ctx: ObjectiveContext) -> np.ndarray:
+    """[M, M] per-byte *exposed-time* cost under the chunked pipeline.
+
+    Phase-decomposed pipeline model: per-chunk stage times are
+    ``{dispatch_intra, dispatch_inter, ffn, combine_intra,
+    combine_inter}`` and the steady state runs at their max. A combine
+    byte on tier ``t`` always pays its bandwidth time in the boundary
+    chunk (weight ``1/n``) and additionally in every steady-state chunk
+    iff tier ``t``'s stage is the bottleneck (weight ``(n-1)/n``). The
+    bottleneck test uses the plan-invariant baseline (combine ≈ dispatch
+    bytes — the identity plan). Normalized so an intra-node byte costs 1;
+    at ``chunks=1`` (sync) this degenerates to ``link_cost()`` exactly.
+    """
+    topo = ctx.topo
+    assert topo is not None and topo.hierarchical, topo
+    n = max(1, int(ctx.chunks))
+    f = ctx.ffn_ms / n
+    per_byte = {"intra": 1e3 / topo.intra_bw, "inter": 1e3 / topo.inter_bw}
+    stage0 = {"intra": ctx.dispatch_intra_ms / n,
+              "inter": ctx.dispatch_inter_ms / n}
+    peak = max(f, *stage0.values())
+    alpha = {t: (1.0 if stage0[t] >= peak - 1e-12 else 1.0 / n)
+             for t in stage0}
+    w_intra = alpha["intra"] * per_byte["intra"]
+    w_inter = alpha["inter"] * per_byte["inter"]
+    ratio = w_inter / max(w_intra, 1e-30)
+    M = topo.num_devices
+    dev = np.arange(M)
+    same_node = topo.node_of(dev)[:, None] == topo.node_of(dev)[None, :]
+    cost = np.where(same_node, 1.0, ratio)
+    np.fill_diagonal(cost, 0.0)
+    return cost.astype(np.float64)
+
+
+def combine_tier_ms(counts, assign, topo: Topology, row_bytes: float):
+    """(intra_ms, inter_ms) of the combine phase for a migration plan:
+    ``counts[i, m]`` rows travel device ``m`` → ``assign[i]``; diagonal
+    rows never touch the wire. numpy/jnp agnostic (traceable)."""
+    xp = jnp if _is_traced(counts) or _is_traced(assign) else np
+    M = counts.shape[1]
+    L = topo.devices_per_node
+    src = xp.arange(M)
+    dst = xp.asarray(assign)
+    same_dev = src[None, :] == dst[:, None]               # [n_slots, M]
+    same_node = (src[None, :] // L) == (dst[:, None] // L)
+    c = counts * row_bytes
+    intra = xp.sum(xp.where(same_node & ~same_dev, c, 0.0))
+    inter = xp.sum(xp.where(~same_node, c, 0.0))
+    return intra / topo.intra_bw * 1e3, inter / topo.inter_bw * 1e3
+
+
+def exposed_ms(ctx: ObjectiveContext, combine_intra_ms, combine_inter_ms):
+    """Modeled exposed sublayer time (ms) of the 5-stage chunked
+    pipeline: warm-up + cool-down of every stage plus ``(n-1)`` chunks at
+    the bottleneck stage's rate. The phase-refined sibling of
+    ``repro.sched.cost.overlap_ms`` (which folds each direction's two
+    phases into one stage); traceable when the combine times are."""
+    xp = jnp if (_is_traced(combine_intra_ms)
+                 or _is_traced(combine_inter_ms)) else np
+    n = max(1, int(ctx.chunks))
+    o = ctx.chunk_overhead_ms / 2.0
+    stages = (ctx.dispatch_intra_ms / n + o,
+              ctx.dispatch_inter_ms / n + o,
+              ctx.ffn_ms / n,
+              combine_intra_ms / n + o,
+              combine_inter_ms / n + o)
+    peak = stages[0]
+    for s in stages[1:]:
+        peak = xp.maximum(peak, s)
+    return sum(stages) + (n - 1) * peak
+
+
+def plan_exposed_ms(counts, assign, ctx: ObjectiveContext):
+    """Exposed time of a migration plan's exchange (traceable)."""
+    ci, ce = combine_tier_ms(counts, assign, ctx.topo, ctx.row_bytes)
+    return exposed_ms(ctx, ci, ce)
+
+
+def _select_plan(take_a, a: mig.MigrationPlan,
+                 b: mig.MigrationPlan) -> mig.MigrationPlan:
+    if not _is_traced(a.assign) and not _is_traced(b.assign):
+        return a if bool(take_a) else b
+    return mig.MigrationPlan(*(jnp.where(take_a, x, y)
+                               for x, y in zip(a, b)))
+
+
+# ---------------------------------------------------------------------------
+# the objectives
+# ---------------------------------------------------------------------------
+
+@register_objective("traffic")
+def traffic_objective(counts, seq_lens, n_per_dev: int, *,
+                      ctx: ObjectiveContext, q: int = 3,
+                      d_model: int = 1024,
+                      speed: float = 1e13) -> mig.MigrationPlan:
+    """Historical objective: link-cost-weighted combine bytes."""
+    cost = _as_cost(traffic_link_cost(ctx.topo), counts)
+    return _planner(counts)(counts, seq_lens, n_per_dev, q=q,
+                            d_model=d_model, speed=speed, link_cost=cost)
+
+
+@register_objective("overlap")
+def overlap_objective(counts, seq_lens, n_per_dev: int, *,
+                      ctx: ObjectiveContext, q: int = 3,
+                      d_model: int = 1024,
+                      speed: float = 1e13) -> mig.MigrationPlan:
+    """Exposed-time objective (ROADMAP item 1): greedy on the
+    exposure-weighted matrix, then keep whichever of {exposed-plan,
+    traffic-plan} models less un-overlappable time — never worse than
+    ``"traffic"`` by construction."""
+    base = traffic_objective(counts, seq_lens, n_per_dev, ctx=ctx, q=q,
+                             d_model=d_model, speed=speed)
+    if not ctx.hierarchical or ctx.chunks <= 1:
+        return base          # nothing to hide behind — exposed == traffic
+    cost = _as_cost(exposed_link_cost(ctx), counts)
+    cand = _planner(counts)(counts, seq_lens, n_per_dev, q=q,
+                            d_model=d_model, speed=speed, link_cost=cost)
+    t_cand = plan_exposed_ms(counts, cand.assign, ctx)
+    t_base = plan_exposed_ms(counts, base.assign, ctx)
+    return _select_plan(t_cand < t_base, cand, base)

@@ -294,7 +294,12 @@ def decode_step(params, cfg: ModelConfig, luffy: LuffyConfig,
 def prefill(params, cfg: ModelConfig, luffy: LuffyConfig, dist: DistContext,
             tokens, s_max: int, *, prefix=None, enc_input=None):
     """Full forward over the prompt; builds the decode cache.
-    Returns (last-token logits [B,V], cache)."""
+    Returns (last-token logits [B,V], cache).
+
+    MoE sublayers run through the shared ``repro.plan`` build/execute
+    core (DESIGN.md §7), so ``luffy.exec_mode="pipeline"`` chunks the
+    prefill dispatch capacity exactly like the train forward (migration/
+    condensation are forced off — serving prompts are not re-homed)."""
     import dataclasses as _dc
     period = pattern_period(cfg)
     x = embed_tokens(params, cfg, tokens, prefix, dist=dist)

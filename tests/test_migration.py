@@ -72,6 +72,43 @@ def test_plan_jax_matches_np(seed, M, n_per_dev):
                                atol=1e-2)
 
 
+@pytest.mark.parametrize("seed", [0, 1, 2, 3, 4, 5])
+def test_plan_np_jax_parity_nonuniform_link_cost(seed):
+    """Host and device planners agree under genuinely non-uniform cost
+    matrices: the 2×4 hierarchical topology AND a random symmetric
+    per-link matrix (not expressible as any topology) — the greedy's
+    step-1 traffic ranking must weight links identically in both."""
+    from repro.comm import Topology
+    r = np.random.default_rng(seed)
+    M, n_per = 8, 2
+    n_slots = M * n_per
+    counts = (r.random((n_slots, M)) ** 3)
+    counts = counts / counts.sum(1, keepdims=True) * 100
+    counts = counts + r.random(counts.shape) * 1e-3     # break ties
+    lens = r.integers(10, 100, n_slots).astype(np.float64)
+    rand = r.random((M, M)) * 4.0 + 0.5
+    rand = (rand + rand.T) / 2.0
+    np.fill_diagonal(rand, 0.0)
+    for cost in (Topology(2, 4).link_cost(), rand):
+        p_np = mig.plan_migration_np(counts, lens, n_per, q=3,
+                                     link_cost=cost)
+        p_jx = mig.plan_migration_jax(jnp.asarray(counts, jnp.float32),
+                                      jnp.asarray(lens, jnp.float32),
+                                      n_per, q=3,
+                                      link_cost=jnp.asarray(cost,
+                                                            jnp.float32))
+        np.testing.assert_array_equal(np.asarray(p_jx.assign),
+                                      np.asarray(p_np.assign))
+        np.testing.assert_array_equal(np.asarray(p_jx.perm),
+                                      np.asarray(p_np.perm))
+        perm = np.asarray(p_np.perm)
+        assert sorted(perm.tolist()) == list(range(n_slots))
+        assert float(p_np.traffic_after) <= float(p_np.traffic_before) + 1e-6
+        np.testing.assert_allclose(float(p_jx.traffic_after),
+                                   float(p_np.traffic_after), rtol=1e-4,
+                                   atol=1e-2)
+
+
 def test_migration_prefers_majority_device():
     """A sequence with 90% of its tokens on device 2 should be homed
     there (q covers it, capacity allows)."""
