@@ -21,6 +21,7 @@ MODULES = [
     "fig_hier_sensitivity",  # beyond-paper: bandwidth-hierarchy sweep
     "fig_overlap_sweep",    # beyond-paper: pipelined-overlap sweep
     "fig_objective_sweep",  # beyond-paper: traffic vs overlap objective
+    "fig_plan_reuse",       # beyond-paper: plan-lifecycle reuse sweep
     "roofline",             # deliverable (g)
 ]
 

@@ -14,7 +14,7 @@ Single source of truth for *where bytes go and what they cost*:
   axis arithmetic) so the rest of the codebase never version-checks.
 """
 from repro.comm.compat import (axis_index, axis_size, make_mesh, pmean_all,
-                               shard_map)
+                               pvary_all, shard_map)
 from repro.comm.hierarchical import (CommContext, hier_all_to_all,
                                      hier_combine)
 from repro.comm.ledger import (a2a_time_s, dispatch_bytes,
@@ -26,5 +26,5 @@ __all__ = [
     "CommContext", "Topology", "a2a_time_s", "axis_index", "axis_size",
     "dispatch_bytes", "dispatch_node_ledger", "expected_dedup_factor",
     "hier_all_to_all", "hier_combine", "make_mesh", "model_axes_of",
-    "pmean_all", "shard_map", "simulate_dispatch_rows",
+    "pmean_all", "pvary_all", "shard_map", "simulate_dispatch_rows",
 ]

@@ -84,6 +84,20 @@ def _ob_bwd(_, ct):
 optimization_barrier.defvjp(_ob_fwd, _ob_bwd)
 
 
+def pvary_all(v, axes: Tuple[str, ...]):
+    """Mark ``v`` varying over ``axes`` (new-jax vma types) — the value
+    is unchanged. Used when a replicated-within-a-row value (e.g. the
+    all-gathered plan-reuse signature) is returned through out_specs
+    that treat it as per-device varying; old jax needs nothing."""
+    typeof = getattr(jax, "typeof", None)
+    if typeof is not None and hasattr(jax.lax, "pcast"):
+        vma = getattr(typeof(v), "vma", frozenset())
+        missing = tuple(a for a in axes if a not in vma)
+        if missing:
+            v = jax.lax.pcast(v, missing, to="varying")
+    return v
+
+
 def pmean_all(v, axes: Tuple[str, ...]):
     """pmean over all mesh axes regardless of the value's varying state.
 

@@ -259,6 +259,10 @@ class LuffyConfig:
     # runs and the decode all-reduce path (no all-to-all to hide)
     # degenerate to sync.
     exec_mode: str = "sync"
+    # Capacity chunks for exec_mode="pipeline". 0 (or negative) requests
+    # the objective-planned chunk count: build_exchange_plan reuses
+    # estimate_exchange(chunks=None)'s 1..16 search instead of this
+    # constant (an explicit positive value always overrides).
     pipeline_chunks: int = 4
     # Migration planner objective (DESIGN.md §7): "traffic" minimizes
     # link-cost-weighted combine bytes (the historical objective, exactly);
@@ -267,6 +271,29 @@ class LuffyConfig:
     # that keep bytes off whichever link tier the pipeline cannot hide.
     # Registry-extensible: repro.plan.objectives.register_objective.
     plan_objective: str = "traffic"
+    # Plan lifecycle (DESIGN.md §9): cross-layer migration-plan reuse
+    # inside the layer scan. "off" replans every MoE sublayer (the
+    # historical behavior); "signature" carries the plan through the
+    # scan and re-runs the greedy only when the routing signature
+    # (gathered per-slot expert counts + sequence lengths) drifts from
+    # what the carried plan expects — on a match the emitted plan is
+    # bit-identical to a full replan; "always" trusts the carried plan
+    # without revalidation (outputs may then differ from "off").
+    # Reuse requires plan_objective="traffic" (the "overlap" portfolio
+    # may execute a plan the pure greedy would not re-derive); other
+    # objectives replan every sublayer regardless of this setting.
+    plan_reuse: str = "off"
+
+
+def resolve_pipeline_chunks(pipeline_chunks: Optional[int],
+                            plan_objective: str) -> int:
+    """Launcher default for ``--pipeline-chunks`` (None = unset): the
+    objective-planned count (0, see ``LuffyConfig.pipeline_chunks``)
+    under the "overlap" objective, the historical 4 otherwise. An
+    explicit CLI value always wins."""
+    if pipeline_chunks is not None:
+        return pipeline_chunks
+    return 0 if plan_objective == "overlap" else 4
 
 
 # ---------------------------------------------------------------------------

@@ -210,3 +210,20 @@ def identity_plan(n_slots: int, n_per_dev: int) -> MigrationPlan:
     idx = jnp.arange(n_slots, dtype=jnp.int32)
     return MigrationPlan(idx // n_per_dev, idx % n_per_dev, idx,
                          jnp.float32(0), jnp.float32(0))
+
+
+def home_plan(counts, n_per_dev: int, link_cost=None) -> MigrationPlan:
+    """The keep-everything-home plan WITH the traffic ledger.
+
+    Runs ``_finalize_plan`` on the identity assignment, so the returned
+    record is bit-for-bit what the greedy planners return whenever their
+    assignment equals the current placement (``traffic_before ==
+    traffic_after``, identity ``perm``). The plan-reuse fast path
+    (``repro.plan.exchange``) emits this instead of re-running the
+    greedy when the routing signature revalidates. numpy/jnp agnostic.
+    """
+    xp = jnp if isinstance(counts, jnp.ndarray) else np
+    n_slots = counts.shape[0]
+    home = (xp.arange(n_slots) // n_per_dev).astype(xp.int32)
+    return MigrationPlan(*_finalize_plan(home, counts, n_per_dev,
+                                         link_cost=link_cost))

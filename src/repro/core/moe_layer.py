@@ -184,6 +184,7 @@ def moe_decode_allreduce(params, x, cfg: ModelConfig, *, capacity: int,
     d_drop = 1.0 - jnp.sum(valid.astype(jnp.float32)) / jnp.maximum(kept, 1.0)
     aux = MoEAux(gate.aux_loss, d_drop, jnp.float32(0.0), jnp.float32(0.0),
                  jnp.float32(1.0 / max(M, 1)), jnp.float32(0.0),
+                 jnp.float32(0.0), jnp.float32(0.0), jnp.float32(0.0),
                  jnp.float32(0.0), jnp.float32(0.0), jnp.float32(0.0))
     return y, aux
 
@@ -191,6 +192,42 @@ def moe_decode_allreduce(params, x, cfg: ModelConfig, *, capacity: int,
 # ---------------------------------------------------------------------------
 # The per-device core
 # ---------------------------------------------------------------------------
+
+def moe_core_planned(params, x, sideband: Dict[str, Array],
+                     cfg: ModelConfig, luffy: LuffyConfig, *, mode: str,
+                     capacity: int, axis_name=None, threshold=None,
+                     s_prev: Optional[Array] = None,
+                     group_size: int = 128, combine_slack: float = 1.0,
+                     use_kernel: bool = False,
+                     comm: Optional[CommContext] = None,
+                     reuse_from=None, plan_template=None):
+    """``moe_core`` that also returns the :class:`ExchangePlan` it built
+    — the plan-lifecycle entry point (DESIGN.md §9). ``reuse_from``
+    threads a prior plan/signature into ``build_exchange_plan``'s
+    revalidation fast path; ``plan_template`` (a cached static template
+    from :class:`repro.plan.cache.PlanCache`) switches the vanilla path
+    to ``instantiate_plan``, skipping planning entirely.
+    Returns (y, new_sideband, s_next, aux, plan)."""
+    from repro.models.blocks import _dtype
+    from repro.plan.exchange import instantiate_plan
+    comm = CommContext.ensure(comm, axis_name)
+    n_seq, S, d = x.shape
+    xf = x.reshape(n_seq * S, d)
+    xn = _rms(xf, params["norm"]["scale"]).astype(_dtype(cfg.compute_dtype))
+    gate = gate_apply(params["router"], xn, cfg.moe.top_k)
+    if plan_template is not None:
+        plan = instantiate_plan(
+            plan_template, gate, xn, cfg, comm, capacity=capacity,
+            sideband=sideband, use_kernel=use_kernel)
+    else:
+        plan = build_exchange_plan(
+            gate, xn, cfg, luffy, comm, mode=mode, capacity=capacity,
+            sideband=sideband, threshold=threshold, s_prev=s_prev,
+            group_size=group_size, combine_slack=combine_slack,
+            use_kernel=use_kernel, reuse_from=reuse_from)
+    y, aux = execute_plan(params, x, sideband, plan, cfg)
+    return y, aux.sideband, aux.s_next, aux.moe, plan
+
 
 def moe_core(params, x, sideband: Dict[str, Array], cfg: ModelConfig,
              luffy: LuffyConfig, *, mode: str, capacity: int,
@@ -216,18 +253,14 @@ def moe_core(params, x, sideband: Dict[str, Array], cfg: ModelConfig,
 
     This is nothing but the two-phase ``repro.plan`` API (DESIGN.md §7):
     every decision lives in the :class:`~repro.plan.ExchangePlan`, every
-    byte moves in :func:`~repro.plan.execute_plan`.
+    byte moves in :func:`~repro.plan.execute_plan`. (The plan-lifecycle
+    sibling ``moe_core_planned`` additionally returns the plan and takes
+    ``reuse_from``/``plan_template``; this historical entry point keeps
+    the 4-tuple contract.)
     """
-    from repro.models.blocks import _dtype
-    comm = CommContext.ensure(comm, axis_name)
-    n_seq, S, d = x.shape
-    xf = x.reshape(n_seq * S, d)
-    xn = _rms(xf, params["norm"]["scale"]).astype(_dtype(cfg.compute_dtype))
-    gate = gate_apply(params["router"], xn, cfg.moe.top_k)
-    plan = build_exchange_plan(
-        gate, xn, cfg, luffy, comm, mode=mode, capacity=capacity,
-        sideband=sideband, threshold=threshold, s_prev=s_prev,
+    y, sb, s_next, aux, _ = moe_core_planned(
+        params, x, sideband, cfg, luffy, mode=mode, capacity=capacity,
+        axis_name=axis_name, threshold=threshold, s_prev=s_prev,
         group_size=group_size, combine_slack=combine_slack,
-        use_kernel=use_kernel)
-    y, aux = execute_plan(params, x, sideband, plan, cfg)
-    return y, aux.sideband, aux.s_next, aux.moe
+        use_kernel=use_kernel, comm=comm)
+    return y, sb, s_next, aux

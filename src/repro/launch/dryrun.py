@@ -89,7 +89,7 @@ def parse_collectives(hlo_text: str):
 
 
 def comm_traffic_ledger(cfg, shape, mesh, *, nodes: int = 0,
-                        exec_chunks: int = 0):
+                        exec_chunks: int = 0, plan_reuse: str = "off"):
     """Analytic per-step dispatch traffic split by link tier (DESIGN.md §5)
     plus the modeled compute/communication overlap (§6).
 
@@ -158,6 +158,40 @@ def comm_traffic_ledger(cfg, shape, mesh, *, nodes: int = 0,
                         "chunks": est.chunks,
                         "speedup": est.speedup},
         }
+
+    # ---- plan-reuse ledger (DESIGN.md §9) --------------------------------
+    # Modeled under stable routing (the regime reuse exists for): with
+    # plan_reuse on, one full replan per forward seeds the carried plan
+    # and every later MoE sublayer revalidates instead of replanning.
+    from repro.plan import estimate_planning_ms, estimate_revalidate_ms
+    n_moe = sum(1 for i in range(cfg.num_layers)
+                if cfg.ffn_kind(i) == "moe")
+    M = topo.num_devices
+    # migrate-mode training shards the batch over ALL mesh axes (the
+    # planner only runs when seq_axis is None; see dist.make_dist), so
+    # per-device n_seq is global_batch / mesh size and the planner sees
+    # M * n_seq global slots
+    n_seq_local = max(1, shape.global_batch // mesh.devices.size)
+    n_slots = M * n_seq_local
+    built = n_moe if plan_reuse == "off" else min(1, n_moe)
+    reused = n_moe - built
+    plan_ms = estimate_planning_ms(n_slots, M)
+    reval_ms = estimate_revalidate_ms(n_slots, M)
+    # "always" trusts the carry without the signature compare, so it
+    # pays no revalidation cost; "signature" checks every reused layer
+    checks = reused if plan_reuse == "signature" else 0
+    out["plan_reuse"] = {
+        "mode": plan_reuse,
+        "moe_sublayers": n_moe,
+        "n_slots": n_slots,
+        "plans_built_per_step": built,
+        "plans_reused_per_step": reused,
+        "revalidation_mismatches": 0,      # stable-routing model
+        "planning_ms_per_plan": plan_ms,
+        "revalidate_ms_per_check": reval_ms,
+        "planning_ms_saved_per_step": reused * plan_ms
+        - checks * reval_ms,
+    }
     return out
 
 
@@ -165,7 +199,8 @@ def run_pair(arch: str, shape_name: str, multi_pod: bool,
              out_path: Path, *, luffy_on: bool = True,
              bucket: int = 0, variant: str = "baseline",
              nodes: int = 0, exec_mode: str = "sync",
-             pipeline_chunks: int = 4, plan_objective: str = "traffic"):
+             pipeline_chunks: int = 4, plan_objective: str = "traffic",
+             plan_reuse: str = "off"):
     import jax
     import jax.numpy as jnp
     from repro import optim, serve_lib, train_lib
@@ -182,7 +217,8 @@ def run_pair(arch: str, shape_name: str, multi_pod: bool,
     mesh_tag = "x".join(str(d) for d in mesh.devices.shape)
     rec = {"arch": arch, "shape": shape_name, "mesh": mesh_tag,
            "variant": variant, "exec_mode": exec_mode,
-           "plan_objective": plan_objective, "status": "unknown"}
+           "plan_objective": plan_objective, "plan_reuse": plan_reuse,
+           "status": "unknown"}
 
     if shape_name == "long_500k" and not cfg.supports_long_decode:
         rec["status"] = "skipped"
@@ -210,7 +246,7 @@ def run_pair(arch: str, shape_name: str, multi_pod: bool,
         enable_migration=luffy_on and cfg.uses_moe,
         comm_mode="hier" if nodes > 1 else "flat",
         exec_mode=exec_mode, pipeline_chunks=pipeline_chunks,
-        plan_objective=plan_objective)
+        plan_objective=plan_objective, plan_reuse=plan_reuse)
 
     if shape.mode == "train":
         # 100B+ models: full f32 Adam moments cannot fit 16GB/chip even at
@@ -342,7 +378,7 @@ def run_pair(arch: str, shape_name: str, multi_pod: bool,
         "comm_ledger": (comm_traffic_ledger(
             cfg, shape, mesh, nodes=nodes,
             exec_chunks=(pipeline_chunks if exec_mode == "pipeline"
-                         else 0))
+                         else 0), plan_reuse=plan_reuse)
                         if shape.mode == "train" else None),
     })
     out_path.parent.mkdir(parents=True, exist_ok=True)
@@ -436,12 +472,22 @@ def main():
                     default="sync",
                     help="MoE execution schedule: strict order or "
                          "chunked pipeline with overlap (DESIGN.md §6)")
-    ap.add_argument("--pipeline-chunks", type=int, default=4,
-                    help="capacity chunks for --exec-mode pipeline")
+    ap.add_argument("--pipeline-chunks", type=int, default=None,
+                    help="capacity chunks for --exec-mode pipeline "
+                         "(default 4; under --plan-objective overlap "
+                         "the estimate search picks the count)")
     ap.add_argument("--plan-objective", default="traffic",
                     choices=["traffic", "overlap"],
                     help="migration planner objective (DESIGN.md §7)")
+    ap.add_argument("--plan-reuse", default="off",
+                    choices=["off", "signature", "always"],
+                    help="cross-layer plan reuse; also selects the "
+                         "comm_ledger plan_reuse section's modeled "
+                         "mode (DESIGN.md §9)")
     args = ap.parse_args()
+    from repro.config import resolve_pipeline_chunks
+    args.pipeline_chunks = resolve_pipeline_chunks(args.pipeline_chunks,
+                                                   args.plan_objective)
     if args.all:
         orchestrate(args.jobs)
         return
@@ -452,6 +498,8 @@ def main():
         mesh_tag += f"__pipe{args.pipeline_chunks}"
     if args.plan_objective != "traffic":
         mesh_tag += f"__{args.plan_objective}"
+    if args.plan_reuse != "off":
+        mesh_tag += f"__reuse-{args.plan_reuse}"
     out = Path(args.out) if args.out else \
         ARTIFACTS / f"{args.arch}__{args.shape}__{mesh_tag}.json"
     out.parent.mkdir(parents=True, exist_ok=True)
@@ -461,7 +509,8 @@ def main():
                  variant=args.variant, nodes=args.nodes,
                  exec_mode=args.exec_mode,
                  pipeline_chunks=args.pipeline_chunks,
-                 plan_objective=args.plan_objective)
+                 plan_objective=args.plan_objective,
+                 plan_reuse=args.plan_reuse)
     except Exception as e:
         rec = {"arch": args.arch, "shape": args.shape, "mesh": mesh_tag,
                "variant": args.variant, "status": "error",

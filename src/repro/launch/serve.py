@@ -36,8 +36,18 @@ def main():
                          "sublayers: strict order or chunked software "
                          "pipeline with compute/comm overlap "
                          "(bit-identical; DESIGN.md §6)")
-    ap.add_argument("--pipeline-chunks", type=int, default=4,
-                    help="capacity chunks for --exec-mode pipeline")
+    ap.add_argument("--pipeline-chunks", type=int, default=None,
+                    help="capacity chunks for --exec-mode pipeline "
+                         "(default 4; under --plan-objective overlap "
+                         "the estimate search picks the count)")
+    ap.add_argument("--plan-cache", default="",
+                    help="directory for the serialized ExchangePlan "
+                         "cache (DESIGN.md §9): prefill looks up "
+                         "precomputed static plans by batch-shape key "
+                         "and executes them without planning")
+    ap.add_argument("--precompute-plans", action="store_true",
+                    help="warm --plan-cache with this run's prefill "
+                         "shape before serving (ahead-of-time planning)")
     ap.add_argument("--plan-objective", default="traffic",
                     choices=["traffic", "overlap"],
                     help="migration planner objective (DESIGN.md §7). "
@@ -69,17 +79,29 @@ def main():
         dist = make_dist(mesh, "decode", args.batch, moe_arch=cfg.uses_moe)
     else:
         dist = single_device()
+    from repro.config import resolve_pipeline_chunks
+    pipeline_chunks = resolve_pipeline_chunks(args.pipeline_chunks,
+                                              args.plan_objective)
     luffy = LuffyConfig(enable_condensation=False, enable_migration=False,
                         exec_mode=args.exec_mode,
-                        pipeline_chunks=args.pipeline_chunks,
+                        pipeline_chunks=pipeline_chunks,
                         plan_objective=args.plan_objective)
-    print(f"exec_mode={args.exec_mode} chunks={args.pipeline_chunks} "
-          f"plan_objective={args.plan_objective}")
+    print(f"exec_mode={args.exec_mode} chunks={pipeline_chunks} "
+          f"plan_objective={args.plan_objective} "
+          f"plan_cache={args.plan_cache or 'off'}")
 
     r = np.random.default_rng(0)
     B, S = args.batch, args.prompt_len
     prompts = jnp.asarray(r.integers(1, cfg.vocab_size, (B, S)), jnp.int32)
     s_max = S + args.gen
+    plan_cache = None
+    if args.plan_cache:
+        from repro.plan.cache import PlanCache
+        plan_cache = PlanCache(args.plan_cache)
+        if args.prefill != "batch":
+            print("WARNING: --plan-cache only engages on the batched "
+                  "prefill path; pass --prefill batch (the step-wise "
+                  "prompt feed never builds exchange plans)")
     if args.prefill == "batch":
         # whole-prompt forward through the shared build/execute MoE core
         # (the pipelined serving path inherited from repro.plan)
@@ -87,8 +109,18 @@ def main():
             pdist = make_dist(mesh, "prefill", B, moe_arch=cfg.uses_moe)
         else:
             pdist = single_device()
+        if plan_cache is not None and args.precompute_plans \
+                and cfg.uses_moe:
+            import dataclasses as _dc
+            from repro.plan.cache import precompute_prefill_plans
+            nl = _dc.replace(luffy, enable_condensation=False,
+                             enable_migration=False)
+            key = precompute_prefill_plans(cfg, nl, pdist, B, S,
+                                           plan_cache)
+            print(f"precomputed prefill plan: {key}")
         pf = jax.jit(lambda p, t: model.prefill(
-            p, t, s_max, luffy=luffy, dist=pdist)[0])
+            p, t, s_max, luffy=luffy, dist=pdist,
+            plan_cache=plan_cache)[0])
         logits_pf = pf(params, prompts)
         jax.block_until_ready(logits_pf)
         t0 = time.time()
@@ -96,6 +128,8 @@ def main():
         dt = time.time() - t0
         print(f"batched prefill({B}x{S} tokens): {dt:.3f}s "
               f"({B * S / max(dt, 1e-9):.0f} tok/s)")
+        if plan_cache is not None:
+            print(f"plan cache: {plan_cache.stats()}")
     t0 = time.time()
     cache = serve_lib.cache_struct(cfg, B, s_max, as_struct=False)
     dec = jax.jit(lambda p, c, t: serve_lib.decode_step(

@@ -50,14 +50,23 @@ def main():
                          "combine order, or chunked software pipeline "
                          "overlapping collectives with expert compute "
                          "(bit-identical; DESIGN.md §6)")
-    ap.add_argument("--pipeline-chunks", type=int, default=4,
+    ap.add_argument("--pipeline-chunks", type=int, default=None,
                     help="capacity chunks for --exec-mode pipeline "
-                         "(clipped to capacity/8)")
+                         "(clipped to capacity/8). Default: 4, except "
+                         "under --plan-objective overlap where the "
+                         "estimate search picks the count (0 = force "
+                         "the planned count; DESIGN.md §9)")
     ap.add_argument("--plan-objective", default="traffic",
                     choices=["traffic", "overlap"],
                     help="migration planner objective (DESIGN.md §7): "
                          "link-cost-weighted bytes, or modeled exposed "
                          "(un-overlappable) time under the pipeline")
+    ap.add_argument("--plan-reuse", default="off",
+                    choices=["off", "signature", "always"],
+                    help="cross-layer migration-plan reuse (DESIGN.md "
+                         "§9): replan every MoE sublayer, revalidate a "
+                         "carried plan by routing signature, or trust "
+                         "it unconditionally")
     ap.add_argument("--no-condensation", action="store_true")
     ap.add_argument("--no-migration", action="store_true")
     ap.add_argument("--optimizer", default="adamw")
@@ -104,8 +113,14 @@ def main():
               f"topology {topo.num_nodes}x{topo.devices_per_node} "
               f"bw_ratio={topo.bw_ratio:.1f} comm_mode={args.comm_mode} "
               f"exec_mode={args.exec_mode} "
-              f"plan_objective={args.plan_objective}")
+              f"plan_objective={args.plan_objective} "
+              f"plan_reuse={args.plan_reuse}")
 
+    # objective-aware chunk count (DESIGN.md §9): under the "overlap"
+    # objective the estimate search picks n_chunks unless the CLI pins it
+    from repro.config import resolve_pipeline_chunks
+    pipeline_chunks = resolve_pipeline_chunks(args.pipeline_chunks,
+                                              args.plan_objective)
     luffy = LuffyConfig(
         enable_condensation=not args.no_condensation and cfg.uses_moe,
         enable_migration=not args.no_migration and cfg.uses_moe,
@@ -113,8 +128,9 @@ def main():
         combine_slack=2.0,
         comm_mode=args.comm_mode,
         exec_mode=args.exec_mode,
-        pipeline_chunks=args.pipeline_chunks,
-        plan_objective=args.plan_objective)
+        pipeline_chunks=pipeline_chunks,
+        plan_objective=args.plan_objective,
+        plan_reuse=args.plan_reuse)
     ocfg = OptimConfig(name=args.optimizer, lr=args.lr,
                        total_steps=args.steps,
                        warmup_steps=max(2, args.steps // 20))

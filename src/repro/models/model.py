@@ -46,9 +46,11 @@ class Model:
                                      tokens)
 
     def prefill(self, params, tokens, s_max, *, luffy: LuffyConfig,
-                dist: DistContext, prefix=None, enc_input=None):
+                dist: DistContext, prefix=None, enc_input=None,
+                plan_cache=None):
         return serve_lib.prefill(params, self.cfg, luffy, dist, tokens,
-                                 s_max, prefix=prefix, enc_input=enc_input)
+                                 s_max, prefix=prefix, enc_input=enc_input,
+                                 plan_cache=plan_cache)
 
     # ---- sharding rules ----------------------------------------------------
     def param_pspecs(self, dist: DistContext, params_struct=None):

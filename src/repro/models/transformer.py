@@ -254,8 +254,17 @@ def _pmean_all(v, axes):
 
 
 def _moe_apply_dist(p_moe, x, sideband, s_prev, threshold, cfg, luffy,
-                    dist: DistContext, mode: str, capacity: int):
-    """Wrap moe_core in shard_map when a mesh is present."""
+                    dist: DistContext, mode: str, capacity: int,
+                    plan_carry=None, plan_template=None):
+    """Wrap moe_core in shard_map when a mesh is present.
+
+    plan_carry (DESIGN.md §9): the cross-sublayer plan-reuse state —
+    ``{"counts", "lens", "valid"}`` global arrays threaded through the
+    layer scan; None disables threading (the return slot is then None).
+    plan_template: a cached static :class:`ExchangePlan` template (the
+    serving path) routed to ``instantiate_plan`` instead of a build.
+    Returns (y, sideband, s_next, aux, plan_carry_out)."""
+    from repro.plan.exchange import PlanSignature
     if mode == "decode" and dist.enabled and dist.model_size > 1:
         # decode: tokens replicated over the model axis; all-reduce MoE
         # (see moe_decode_allreduce — the S=1 token dim cannot shard)
@@ -300,18 +309,28 @@ def _moe_apply_dist(p_moe, x, sideband, s_prev, threshold, cfg, luffy,
                        jax.tree.map(lambda _: P(),
                                     moe.MoEAux(*([0.0] * moe.N_AUX)))))
         y, aux = fn(p_moe, x)
-        return y, dict(sideband), None, aux
+        return y, dict(sideband), None, aux, plan_carry
     if not dist.enabled or dist.model_size == 1:
         sb = dict(sideband)
-        y, sb2, s_next, aux = moe.moe_core(
+        reuse = None
+        if plan_carry is not None:
+            reuse = PlanSignature(plan_carry["counts"], plan_carry["lens"],
+                                  plan_carry["valid"])
+        y, sb2, s_next, aux, plan = moe.moe_core_planned(
             p_moe, x, sb, cfg, luffy, mode=mode, capacity=capacity,
             axis_name=None, threshold=threshold, s_prev=s_prev,
             group_size=luffy.condense_group,
-            combine_slack=luffy.combine_slack, use_kernel=luffy.use_kernels)
+            combine_slack=luffy.combine_slack, use_kernel=luffy.use_kernels,
+            reuse_from=reuse, plan_template=plan_template)
         if s_next is not None:
             G = luffy.condense_group
             s_next = s_next.reshape(x.shape[0], x.shape[1] // G, G, G)
-        return y, sb2, s_next, aux
+        carry_out = None
+        if plan_carry is not None:
+            sig = plan.signature
+            carry_out = {"counts": sig.counts, "lens": sig.lens,
+                         "valid": sig.valid}
+        return y, sb2, s_next, aux, carry_out
 
     mesh = dist.mesh
     all_axes = tuple(mesh.axis_names)
@@ -326,8 +345,9 @@ def _moe_apply_dist(p_moe, x, sideband, s_prev, threshold, cfg, luffy,
     fsdp = tuple(a for a in dist.fsdp_axes if a in all_axes)
     comm_ctx = rcomm.CommContext.build(luffy.comm_mode, dist.model_axis,
                                        dist.topology)
+    has_pc = plan_carry is not None
 
-    def inner(p_moe_l, x_l, lbl, slen, sp, thr):
+    def inner(p_moe_l, x_l, lbl, slen, sp, thr, pcc, pcl, pcv):
         if fsdp:
             # explicit bf16 FSDP all-gather of the expert F-dim shards;
             # leaving this to GSPMD hoists an f32 convert before the
@@ -338,12 +358,14 @@ def _moe_apply_dist(p_moe, x, sideband, s_prev, threshold, cfg, luffy,
                     w, fsdp, axis=(1 if k == "w_down" else 2), tiled=True)
                 for k, w in p_moe_l["experts"].items()}
         sb = {"labels": lbl, "seq_len": slen}
-        y, sb2, s_next, aux = moe.moe_core(
+        reuse = PlanSignature(pcc, pcl, pcv) if has_pc else None
+        y, sb2, s_next, aux, plan = moe.moe_core_planned(
             p_moe_l, x_l, sb, cfg, luffy, mode=mode, capacity=capacity,
             comm=comm_ctx, threshold=thr,
             s_prev=(sp if has_sp else None),
             group_size=luffy.condense_group,
-            combine_slack=luffy.combine_slack, use_kernel=luffy.use_kernels)
+            combine_slack=luffy.combine_slack, use_kernel=luffy.use_kernels,
+            reuse_from=reuse, plan_template=plan_template)
         aux = jax.tree.map(lambda a: _pmean_all(a, all_axes), aux)
         if s_next is None:
             s_next = jnp.zeros((1,), jnp.float32)    # placeholder
@@ -351,7 +373,16 @@ def _moe_apply_dist(p_moe, x, sideband, s_prev, threshold, cfg, luffy,
             ng = x_l.shape[1] // luffy.condense_group
             s_next = s_next.reshape(x_l.shape[0], ng, luffy.condense_group,
                                     luffy.condense_group)
-        return y, sb2["labels"], sb2["seq_len"], s_next, aux
+        if has_pc:
+            # carried signature: replicated within a model row by
+            # construction (all-gathered planner inputs), but specced
+            # per-device varying to stay version-robust — mark it so
+            sig = plan.signature
+            pcc = rcomm.pvary_all(sig.counts, all_axes)
+            pcl = rcomm.pvary_all(sig.lens, all_axes)
+            pcv = sig.valid
+        return (y, sb2["labels"], sb2["seq_len"], s_next, aux,
+                pcc, pcl, pcv)
 
     ma = dist.model_axis              # "model" or ("node", "local")
     moe_specs = jax.tree.map(lambda _: P(), p_moe)
@@ -363,21 +394,32 @@ def _moe_apply_dist(p_moe, x, sideband, s_prev, threshold, cfg, luffy,
     sp_arg = s_prev if has_sp else jnp.zeros((1,), jnp.float32)
     s_out_spec = sp_spec if (luffy.enable_condensation and mode != "decode") \
         else P()
+    zp = jnp.zeros((1,), jnp.float32)
+    pc_counts_spec = P(bax, None) if has_pc else P()
+    pc_lens_spec = P(bax) if has_pc else P()
+    pc_args = ((plan_carry["counts"], plan_carry["lens"],
+                plan_carry["valid"]) if has_pc else (zp, zp, zp))
     fn = rcomm.shard_map(
         inner, mesh=mesh,
-        in_specs=(moe_specs, x_spec, lbl_spec, len_spec, sp_in, P()),
+        in_specs=(moe_specs, x_spec, lbl_spec, len_spec, sp_in, P(),
+                  pc_counts_spec, pc_lens_spec, P()),
         out_specs=(x_spec, lbl_spec, len_spec, s_out_spec,
                    jax.tree.map(lambda _: P(),
-                                moe.MoEAux(*([0.0] * moe.N_AUX)))))
-    y, lbl2, slen2, s_next, aux = fn(p_moe, x, sideband["labels"],
-                                     sideband["seq_len"], sp_arg, threshold)
+                                moe.MoEAux(*([0.0] * moe.N_AUX))),
+                   pc_counts_spec, pc_lens_spec, P()))
+    y, lbl2, slen2, s_next, aux, pcc2, pcl2, pcv2 = fn(
+        p_moe, x, sideband["labels"], sideband["seq_len"], sp_arg,
+        threshold, *pc_args)
     if not (luffy.enable_condensation and mode != "decode"):
         s_next = None
-    return y, {"labels": lbl2, "seq_len": slen2}, s_next, aux
+    carry_out = ({"counts": pcc2, "lens": pcl2, "valid": pcv2}
+                 if has_pc else None)
+    return y, {"labels": lbl2, "seq_len": slen2}, s_next, aux, carry_out
 
 
 def _layer_full(p, cfg, luffy, dist, x, sideband, s_prev, threshold,
-                j, *, causal, enc_out, enc_pos, moe_mode, capacity):
+                j, *, causal, enc_out, enc_pos, moe_mode, capacity,
+                plan_carry=None):
     # NOTE: the window pattern repeats with the scan period, so the static
     # pattern position ``j`` fully determines this layer's window — no
     # traced layer index may reach ``window_for_layer``.
@@ -393,9 +435,9 @@ def _layer_full(p, cfg, luffy, dist, x, sideband, s_prev, threshold,
     x = dist.constrain(x, dist.act_spec())
     kind = cfg.ffn_kind(j)
     if kind == "moe":
-        x, sideband, s_prev, aux = _moe_apply_dist(
+        x, sideband, s_prev, aux, plan_carry = _moe_apply_dist(
             p["moe"], x, sideband, s_prev, threshold, cfg, luffy, dist,
-            moe_mode, capacity)
+            moe_mode, capacity, plan_carry=plan_carry)
         x = dist.constrain(x, dist.act_spec())
     else:
         xn = bk.norm_apply(p["ffn_norm"], x, cfg.norm)
@@ -404,7 +446,7 @@ def _layer_full(p, cfg, luffy, dist, x, sideband, s_prev, threshold,
         else:
             x = x + bk.ffn_apply(p["ffn"], cfg, xn)
         aux = moe.MoEAux(*([jnp.float32(0.0)] * moe.N_AUX))
-    return x, sideband, s_prev, aux
+    return x, sideband, s_prev, aux, plan_carry
 
 
 # ---------------------------------------------------------------------------
@@ -528,21 +570,45 @@ def forward_train(params, cfg: ModelConfig, luffy: LuffyConfig,
     eff_luffy = luffy if use_cond else \
         dataclasses.replace(luffy, enable_condensation=False)
 
+    # Plan-lifecycle carry (DESIGN.md §9): the migration plan's routing
+    # signature threads through the layer scan so stable-routing stacks
+    # plan once and execute N times. The carry (and the revalidation
+    # cond) is threaded for EVERY plan_reuse mode including "off" —
+    # "off" pins the carried valid flag to 0 so it always replans — so
+    # the compiled graphs of "off" and "signature" are structurally
+    # identical and their forwards bit-comparable (the greedy planner
+    # has float near-ties; two different compilations may legitimately
+    # pick different equally-good plans). Global layout: per-batch-
+    # device slot rows stacked data-major — [M·B, M] counts, [M·B] lens
+    # (tiny; specced per-device varying for jax-version robustness).
+    use_reuse = moe_mode == "migrate" and cfg.uses_moe
+    B = x.shape[0]
+    if use_reuse:
+        M_model = dist.model_size if dist.enabled else 1
+        pc0 = {"counts": jnp.zeros((M_model * B, M_model), jnp.float32),
+               "lens": jnp.zeros((M_model * B,), jnp.float32),
+               "valid": jnp.float32(0.0)}
+    else:
+        pc0 = {"counts": jnp.zeros((1,), jnp.float32),
+               "lens": jnp.zeros((1,), jnp.float32),
+               "valid": jnp.float32(0.0)}
+
     def group_body(carry, p_group):
-        x, sb, sp, aux_sum = carry
+        x, sb, sp, pc, aux_sum = carry
         for j in range(period):
 
-            def apply_j(x, sb, sp, pj=p_group[j], jj=j):
+            def apply_j(x, sb, sp, pc, pj=p_group[j], jj=j):
                 return _layer_full(
                     pj, cfg, eff_luffy, dist, x, sb, sp, threshold,
                     jj, causal=cfg.causal, enc_out=enc_out,
-                    enc_pos=enc_pos, moe_mode=moe_mode, capacity=capacity)
+                    enc_pos=enc_pos, moe_mode=moe_mode, capacity=capacity,
+                    plan_carry=pc)
 
             if cfg.remat:
                 apply_j = jax.checkpoint(apply_j)
-            x, sb, sp, aux = apply_j(x, sb, sp)
+            x, sb, sp, aux, pc = apply_j(x, sb, sp, pc)
             aux_sum = jax.tree.map(lambda a, b: a + b, aux_sum, aux)
-        return (x, sb, sp, aux_sum), None
+        return (x, sb, sp, pc, aux_sum), None
 
     aux0 = moe.MoEAux(*([jnp.float32(0.0)] * moe.N_AUX))
     n_groups = cfg.num_layers // period
@@ -552,16 +618,19 @@ def forward_train(params, cfg: ModelConfig, luffy: LuffyConfig,
         s_prev0 = jnp.zeros((1,), jnp.float32)  # dummy carried value
 
     def scan_body(carry, xs):
-        (x, sb, sp, aux_sum) = carry
+        (x, sb, sp, pc, aux_sum) = carry
         sp_real = sp if use_cond else None
-        (x, sb, sp_new, aux_sum), _ = group_body(
-            (x, sb, sp_real, aux_sum), xs)
+        pc_real = pc if use_reuse else None
+        (x, sb, sp_new, pc_new, aux_sum), _ = group_body(
+            (x, sb, sp_real, pc_real, aux_sum), xs)
         if not use_cond:
             sp_new = sp
-        return (x, sb, sp_new, aux_sum), None
+        if not use_reuse:
+            pc_new = pc
+        return (x, sb, sp_new, pc_new, aux_sum), None
 
-    (x, sideband, s_prev, aux_sum), _ = jax.lax.scan(
-        scan_body, (x, sideband, s_prev0, aux0), stacked)
+    (x, sideband, s_prev, _pc, aux_sum), _ = jax.lax.scan(
+        scan_body, (x, sideband, s_prev0, pc0, aux0), stacked)
 
     sl, sc = chunked_xent(params, cfg, x, sideband["labels"])
     if dist.enabled:
@@ -584,6 +653,12 @@ def forward_train(params, cfg: ModelConfig, luffy: LuffyConfig,
         "traffic_after": aux_mean.traffic_after,
         "inter_bytes_flat": aux_mean.inter_bytes_flat,
         "inter_bytes_dedup": aux_mean.inter_bytes_dedup,
+        # plan-reuse ledger (DESIGN.md §9): per-forward COUNTS (sums over
+        # MoE sublayers, device-mean), not per-sublayer means — so
+        # "plans_built == 1.0" reads as "one full replan this forward"
+        "plans_built": aux_sum.plans_built,
+        "plans_reused": aux_sum.plans_reused,
+        "plan_reuse_mismatch": aux_sum.reuse_mismatch,
     }
     return total, metrics
 

@@ -13,17 +13,34 @@ link-cost-weighted planner exactly, ``"overlap"`` minimizes modeled
 exposed time); :mod:`repro.plan.estimate` is the single analytic pricing
 source the dry-run ledger and ``commsim`` report from.
 """
-from repro.plan.estimate import PlanEstimate, estimate_exchange
+from repro.plan.cache import (PlanCache, build_plan_template, plan_key,
+                              precompute_prefill_plans, prefill_plan_key,
+                              topology_fingerprint)
+from repro.plan.estimate import (PlanEstimate, estimate_exchange,
+                                 estimate_planning_ms,
+                                 estimate_revalidate_ms)
 from repro.plan.exchange import (ExchangeAux, ExchangePlan, MoEAux, N_AUX,
-                                 build_exchange_plan, execute_plan)
+                                 PlanSignature, build_exchange_plan,
+                                 execute_plan, instantiate_plan,
+                                 invalid_signature, next_signature,
+                                 plan_static_schedule,
+                                 routing_signature_matches)
 from repro.plan.objectives import (ObjectiveContext, available_objectives,
                                    get_objective,
                                    plan_migration_with_objective,
                                    register_objective)
+from repro.plan.serial import (FORMAT_VERSION, PlanFormatError, from_bytes,
+                               to_bytes)
 
 __all__ = [
-    "ExchangeAux", "ExchangePlan", "MoEAux", "N_AUX", "ObjectiveContext",
-    "PlanEstimate", "available_objectives", "build_exchange_plan",
-    "estimate_exchange", "execute_plan", "get_objective",
-    "plan_migration_with_objective", "register_objective",
+    "ExchangeAux", "ExchangePlan", "FORMAT_VERSION", "MoEAux", "N_AUX",
+    "ObjectiveContext", "PlanCache", "PlanEstimate", "PlanFormatError",
+    "PlanSignature", "available_objectives", "build_exchange_plan",
+    "build_plan_template", "estimate_exchange", "estimate_planning_ms",
+    "estimate_revalidate_ms", "execute_plan", "from_bytes",
+    "get_objective", "instantiate_plan", "invalid_signature",
+    "next_signature", "plan_key", "plan_migration_with_objective",
+    "plan_static_schedule", "precompute_prefill_plans",
+    "prefill_plan_key", "register_objective", "routing_signature_matches",
+    "to_bytes", "topology_fingerprint",
 ]

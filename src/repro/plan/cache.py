@@ -1,0 +1,238 @@
+"""Keyed :class:`PlanCache` with disk spill + ahead-of-time templates.
+
+The serving half of the plan lifecycle (DESIGN.md §9): for *known* batch
+shapes every static decision of an exchange — capacity partition, chunk
+schedule, pipelined flag, analytic estimate — is a pure function of the
+shape key, so it can be decided once, serialized
+(:mod:`repro.plan.serial`) and looked up on the request path.
+``serve_lib.prefill`` resolves a template at trace time and routes the
+MoE sublayer through :func:`repro.plan.exchange.instantiate_plan`, which
+binds fresh routing onto the template without calling
+``build_exchange_plan`` at all (the zero-planning request path;
+``launch/serve.py --plan-cache DIR --precompute-plans``).
+
+Keys are filesystem-safe slugs over batch shape × seq len × planner
+objective × topology fingerprint (plus the execution knobs that select
+the schedule), so a cache directory can be shared across processes and
+restarts; entries whose serialized format version drifts are treated as
+misses and rebuilt, never misread.
+"""
+from __future__ import annotations
+
+from collections import OrderedDict
+from pathlib import Path
+from typing import Optional, Tuple, Union
+
+import numpy as np
+
+import jax.numpy as jnp
+
+from repro.comm import CommContext
+from repro.comm.topology import Topology
+from repro.config import LuffyConfig, ModelConfig
+from repro.plan import serial
+from repro.plan.exchange import ExchangePlan, plan_static_schedule
+
+
+def topology_fingerprint(topo: Optional[Topology], M: int) -> str:
+    """Short stable id of the fabric a plan was priced on. Absolute
+    per-tier bandwidths and latencies are part of the id (not just the
+    ratio): with a planned chunk count (``pipeline_chunks <= 0``) the
+    estimate search depends on them, and two fabrics with equal shape
+    but different link speeds must not share a cached schedule."""
+    if topo is None:
+        return f"flat{M}"
+    return (f"{topo.num_nodes}x{topo.devices_per_node}"
+            f"i{topo.intra_bw:.4g}e{topo.inter_bw:.4g}"
+            f"l{topo.intra_lat:.3g}-{topo.inter_lat:.3g}")
+
+
+def plan_key(*, n_seq: int, seq_len: int, d_model: int, capacity: int,
+             top_k: int, num_experts: int, mode: str, objective: str,
+             exec_mode: str, pipeline_chunks: int, comm_mode: str,
+             topo: Optional[Topology], M: int,
+             compute_dtype: str = "bfloat16",
+             gpu_speed: float = 1.0e13, d_ff: int = 0) -> str:
+    """The cache key: batch shape × seq len × objective × topology
+    fingerprint, plus every knob that selects the static schedule
+    (``gpu_speed``/``d_ff`` price the FFN stage the chunk search
+    overlaps against). ``n_seq``/``seq_len`` are the PER-DEVICE sequence
+    slots and (possibly sequence-sharded) token count the MoE sublayer
+    sees."""
+    return (f"b{n_seq}_s{seq_len}_d{d_model}_f{d_ff}_c{capacity}"
+            f"_k{top_k}_e{num_experts}_{mode}_{objective}"
+            f"_{exec_mode}{pipeline_chunks}_p{gpu_speed:.4g}"
+            f"_{comm_mode}_{topology_fingerprint(topo, M)}"
+            f"_{compute_dtype}")
+
+
+class PlanCache:
+    """In-memory LRU of ExchangePlans keyed by :func:`plan_key`, with
+    optional disk spill (one ``<key>.plan`` file per entry, the
+    :mod:`repro.plan.serial` byte format).
+
+    ``get`` falls back to disk on a memory miss; unreadable or
+    version-mismatched files count as misses (and are rebuilt by the
+    caller) — a stale cache can cost a replan, never a wrong plan.
+    """
+
+    def __init__(self, path: Optional[Union[str, Path]] = None,
+                 mem_capacity: int = 64):
+        self.path = None if path is None else Path(path)
+        if self.path is not None:
+            self.path.mkdir(parents=True, exist_ok=True)
+        self.mem_capacity = int(mem_capacity)
+        self._mem: "OrderedDict[str, ExchangePlan]" = OrderedDict()
+        self.hits = 0
+        self.misses = 0
+        self.disk_loads = 0
+        self.puts = 0
+
+    def __len__(self) -> int:
+        return len(self._mem)
+
+    def _file(self, key: str) -> Optional[Path]:
+        return None if self.path is None else self.path / f"{key}.plan"
+
+    def get(self, key: str) -> Optional[ExchangePlan]:
+        plan = self._mem.get(key)
+        if plan is not None:
+            self._mem.move_to_end(key)
+            self.hits += 1
+            return plan
+        f = self._file(key)
+        if f is not None and f.exists():
+            try:
+                plan = serial.from_bytes(f.read_bytes())
+            except Exception:        # stale/corrupt/foreign file: a
+                plan = None          # miss (and a replan), never a
+                                     # crash or a wrong plan
+            if plan is not None:
+                self._insert(key, plan)
+                self.hits += 1
+                self.disk_loads += 1
+                return plan
+        self.misses += 1
+        return None
+
+    def put(self, key: str, plan: ExchangePlan, *,
+            spill: bool = True) -> None:
+        self._insert(key, plan)
+        self.puts += 1
+        f = self._file(key)
+        if spill and f is not None:
+            f.write_bytes(serial.to_bytes(plan))
+
+    def _insert(self, key: str, plan: ExchangePlan) -> None:
+        self._mem[key] = plan
+        self._mem.move_to_end(key)
+        while len(self._mem) > self.mem_capacity:
+            self._mem.popitem(last=False)   # evict LRU (disk copy stays)
+
+    def stats(self) -> dict:
+        return {"entries": len(self._mem), "hits": self.hits,
+                "misses": self.misses, "disk_loads": self.disk_loads,
+                "puts": self.puts}
+
+
+# ---------------------------------------------------------------------------
+# ahead-of-time templates
+# ---------------------------------------------------------------------------
+
+def build_plan_template(cfg: ModelConfig, luffy: LuffyConfig, *,
+                        n_seq: int, seq_len: int, capacity: int,
+                        comm_mode: str = "local",
+                        axes: Tuple[str, ...] = (),
+                        topo: Optional[Topology] = None,
+                        M: int = 1) -> ExchangePlan:
+    """Decide every static part of a vanilla exchange for one shape key
+    — host-side, no tracing, no routing. The schedule comes from the
+    SAME :func:`plan_static_schedule` the live builder uses, so a
+    template's chunk plan / pipelined flag / estimate are identical to
+    what ``build_exchange_plan`` would decide; the traced fields are
+    zero placeholders that ``instantiate_plan`` replaces per request.
+    """
+    m = cfg.moe
+    d = cfg.d_model
+    T = n_seq * seq_len
+    from repro.models.blocks import _dtype
+    bytes_per_el = jnp.dtype(_dtype(cfg.compute_dtype)).itemsize
+    pipelined, chunks, est = plan_static_schedule(
+        cfg, luffy, topo, M, T, d, capacity, bytes_per_el=bytes_per_el)
+    z = np.float32(0.0)
+    zi = np.zeros((0,), np.int32)
+    return ExchangePlan(
+        mode="vanilla", migrate=False, condense=False,
+        pipelined=pipelined, capacity=capacity, chunks=chunks,
+        comm=CommContext(comm_mode, tuple(axes), topo),
+        objective=luffy.plan_objective, group_size=luffy.condense_group,
+        combine_slack=luffy.combine_slack, use_kernel=luffy.use_kernels,
+        estimate=est,
+        # placeholder routing — instantiate_plan never reads these
+        expert_idx=zi.reshape(0, 1), gate_weights=zi.astype(np.float32)
+        .reshape(0, 1), positions=zi.reshape(0, 1),
+        valid=zi.reshape(0, 1).astype(bool), aux_loss=z,
+        dispatch_drop=z, rep_idx=zi, s_next=None, condense_rate=z,
+        dest_global=zi, traffic_before=z, traffic_after=z,
+        inter_bytes_flat=z, inter_bytes_dedup=z, signature=None,
+        plans_built=z, plans_reused=z, reuse_mismatch=z)
+
+
+def _prefill_locals(dist, batch: int, seq_len: int):
+    """Per-device (n_seq, seq_len, M, topo) split of one prefill shape —
+    exactly what the prefill shard_map sees."""
+    M = dist.model_size if dist.enabled else 1
+    div = dist.batch_size_divisor if dist.enabled else 1
+    n_seq_l = max(1, batch // max(1, div))
+    s_l = seq_len
+    if dist.enabled and dist.seq_axis is not None:
+        s_l = seq_len // dist.axis_size(dist.seq_axis)
+    topo = dist.topology if dist.enabled else None
+    return n_seq_l, s_l, M, topo
+
+
+def prefill_plan_key(cfg: ModelConfig, luffy: LuffyConfig, dist,
+                     batch: int, seq_len: int,
+                     capacity: Optional[int] = None) -> str:
+    """The key ``serve_lib.prefill`` and ``precompute_prefill_plans``
+    agree on; ``capacity`` defaults to the shared
+    ``serve_lib.prefill_capacity`` derivation."""
+    if capacity is None:
+        from repro.serve_lib import prefill_capacity
+        capacity = prefill_capacity(cfg, dist, batch, seq_len)
+    n_seq_l, s_l, M, topo = _prefill_locals(dist, batch, seq_len)
+    return plan_key(
+        n_seq=n_seq_l, seq_len=s_l, d_model=cfg.d_model,
+        capacity=capacity, top_k=cfg.moe.top_k,
+        num_experts=cfg.moe.num_experts, mode="vanilla",
+        objective=luffy.plan_objective, exec_mode=luffy.exec_mode,
+        pipeline_chunks=luffy.pipeline_chunks,
+        comm_mode=luffy.comm_mode if M > 1 else "local",
+        topo=topo if M > 1 else None, M=M,
+        compute_dtype=cfg.compute_dtype, gpu_speed=luffy.gpu_speed,
+        d_ff=cfg.moe.d_ff)
+
+
+def precompute_prefill_plans(cfg: ModelConfig, luffy: LuffyConfig, dist,
+                             batch: int, seq_len: int,
+                             cache: PlanCache,
+                             capacity: Optional[int] = None) -> str:
+    """Warm ``cache`` with the template for one (batch, seq_len) prefill
+    shape; returns the key. ``launch/serve.py --precompute-plans`` calls
+    this for the shapes it is about to serve."""
+    if capacity is None:
+        from repro.serve_lib import prefill_capacity
+        capacity = prefill_capacity(cfg, dist, batch, seq_len)
+    n_seq_l, s_l, M, topo = _prefill_locals(dist, batch, seq_len)
+    if M > 1:
+        ma = dist.model_axis
+        axes = (ma,) if isinstance(ma, str) else tuple(ma)
+        comm_mode = luffy.comm_mode
+    else:
+        axes, comm_mode, topo = (), "local", None
+    key = prefill_plan_key(cfg, luffy, dist, batch, seq_len, capacity)
+    tmpl = build_plan_template(
+        cfg, luffy, n_seq=n_seq_l, seq_len=s_l, capacity=capacity,
+        comm_mode=comm_mode, axes=axes, topo=topo, M=M)
+    cache.put(key, tmpl)
+    return key

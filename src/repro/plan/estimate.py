@@ -101,3 +101,37 @@ def estimate_exchange(tokens: int, top_k: int, d_model: int, *,
         flat_dispatch_ms=phase_ms(fi, fe),
         ffn_ms=ffn_ms, sync_ms=sched_cost.sync_ms(topo, **kw),
         overlap_ms=t_pipe, chunks=n)
+
+
+# ---------------------------------------------------------------------------
+# planning-cost model (plan lifecycle, DESIGN.md §9)
+# ---------------------------------------------------------------------------
+
+# Modeled per-slot latency of one migration-greedy iteration. The greedy
+# (core/migration.py Algorithm 1) is a SEQUENTIAL lax.scan over global
+# sequence slots — on accelerators its cost is dominated by the
+# serialized scan-step latency, not flops, so the model is linear in
+# n_slots with a small per-candidate-device term.
+PLAN_STEP_US = 2.0
+PLAN_DEVICE_US = 0.02
+# Modeled cost of one signature revalidation: an elementwise compare of
+# the [n_slots, M] counts (+ lens) against the carried expectation.
+REVALIDATE_US = 1.0
+REVALIDATE_PER_EL_US = 1e-3
+
+
+def estimate_planning_ms(n_slots: int, M: int, *, q: int = 3,
+                         step_us: float = PLAN_STEP_US) -> float:
+    """Modeled wall time (ms) of ONE full migration replan on
+    ``n_slots`` global sequence slots over ``M`` devices — what the
+    plan-reuse fast path saves per revalidated sublayer. Host-side
+    model; the dryrun ``comm_ledger.plan_reuse`` section and
+    ``benchmarks/fig_plan_reuse.py`` both report from it."""
+    return n_slots * (step_us + PLAN_DEVICE_US * M * max(1, q)) * 1e-3
+
+
+def estimate_revalidate_ms(n_slots: int, M: int) -> float:
+    """Modeled wall time (ms) of one routing-signature compare (the
+    price of reuse; orders of magnitude under a replan)."""
+    return (REVALIDATE_US + REVALIDATE_PER_EL_US * n_slots * (M + 1)) \
+        * 1e-3

@@ -18,11 +18,21 @@ chunk schedule, comm context, estimates) are fixed at trace time.
 Splitting a pure computation into two functions does not change any
 value's defining subgraph, so build + execute is bit-identical to the
 fused pre-split ``moe_core`` (tested: ``tests/test_plan.py``).
+
+Plan lifecycle (DESIGN.md §9): plans are also *reused*. Inside a layer
+scan, :func:`build_exchange_plan` takes ``reuse_from`` (a prior plan or
+its :class:`PlanSignature`) and, under ``LuffyConfig.plan_reuse``,
+revalidates the carried decision with a cheap routing-signature compare
+instead of re-running the migration greedy; on the serving path,
+:func:`instantiate_plan` binds fresh routing onto a cached static
+template (``repro.plan.cache``) without any planning at all.
 """
 from __future__ import annotations
 
 import math
-from typing import Any, Dict, NamedTuple, Optional, Tuple
+from typing import Any, Dict, NamedTuple, Optional, Tuple, Union
+
+import numpy as np
 
 import jax
 import jax.numpy as jnp
@@ -31,12 +41,22 @@ from repro.comm import CommContext
 from repro.comm import ledger as comm_ledger
 from repro.config import LuffyConfig, ModelConfig
 from repro.core import condensation as cond
+from repro.core import migration as mig
 from repro.core.gating import GateOutput, dispatch_positions
 from repro.plan import objectives
 from repro.plan.estimate import PlanEstimate, estimate_exchange
 from repro.sched import ChunkPlan, plan_chunks, run_pipeline
 
 Array = jnp.ndarray
+
+# Fallback chunk count when the objective-planned search has no topology
+# to price against (mirrors the historical --pipeline-chunks default).
+DEFAULT_PIPELINE_CHUNKS = 4
+
+# Trace-time planning-call counter: incremented once per
+# build_exchange_plan call. The serving cache's zero-planning guarantee
+# is asserted against it (a warm PlanCache prefill must not move it).
+BUILD_CALLS = 0
 
 
 class MoEAux(NamedTuple):
@@ -50,8 +70,66 @@ class MoEAux(NamedTuple):
     inter_bytes_flat: Array   # dispatch bytes a flat a2a ships across nodes
     inter_bytes_dedup: Array  # modeled bytes after per-node dedup (hier
                               # mode; the executed wire is still dense)
+    plans_built: Array        # plan-reuse ledger (DESIGN.md §9): 1 when
+    plans_reused: Array       # the full migration planner ran / when a
+    reuse_mismatch: Array     # carried plan revalidated / when a carried
+                              # plan FAILED revalidation (and was rebuilt)
 
 N_AUX = len(MoEAux._fields)
+
+
+class PlanSignature(NamedTuple):
+    """Routing signature a carried plan revalidates against.
+
+    ``counts``/``lens`` are the migration planner's inputs *expected at
+    the next exchange* — the gathered per-(global slot, device) expert
+    counts and sequence lengths, rows permuted into the post-migration
+    slot layout (``next_signature``). The greedy is deterministic in
+    these inputs, so observed == expected implies the planner would keep
+    every sequence at its current home and the greedy can be skipped
+    (``repro.core.migration.home_plan``). ``valid`` > 0.5 marks that a
+    plan was actually built (the first MoE sublayer seeds it).
+    """
+    counts: Array             # [n_slots, M] f32 expected planner counts
+    lens: Array               # [n_slots] f32 expected sequence lengths
+    valid: Array              # [] f32 — 1.0 once a plan has been built
+
+
+def routing_signature_matches(sig: PlanSignature, counts, lens):
+    """Cheap revalidation: observed planner inputs == expected. numpy in
+    -> host bool, jnp in -> traced bool (both backends share this exact
+    predicate; ``benchmarks/fig_plan_reuse.py`` drives the host side)."""
+    if (tuple(sig.counts.shape) != tuple(counts.shape)
+            or tuple(sig.lens.shape) != tuple(lens.shape)):
+        return (jnp.bool_(False) if isinstance(counts, jnp.ndarray)
+                else False)
+    xp = jnp if isinstance(counts, jnp.ndarray) else np
+    same = xp.all(sig.counts == counts) & xp.all(sig.lens == lens)
+    return (sig.valid > 0.5) & same
+
+
+def next_signature(counts, lens, perm) -> PlanSignature:
+    """Expected planner inputs after executing a plan with ``perm``:
+    the slot at ``perm[i]`` next holds the sequence whose counts/lens
+    sit in row ``i`` today. numpy/jnp agnostic."""
+    xp = jnp if isinstance(counts, jnp.ndarray) else np
+    n = counts.shape[0]
+    ar = xp.arange(n, dtype=xp.int32)
+    if xp is jnp:
+        inv = jnp.zeros((n,), jnp.int32).at[perm].set(ar)
+    else:
+        inv = np.zeros(n, np.int32)
+        inv[np.asarray(perm)] = ar
+    one = jnp.float32(1.0) if xp is jnp else np.float32(1.0)
+    return PlanSignature(counts[inv], lens[inv], one)
+
+
+def invalid_signature(n_slots: int, M: int) -> PlanSignature:
+    """Fixed-shape 'no carried plan' signature (scan carries need a
+    uniform pytree even on sublayers that plan nothing)."""
+    return PlanSignature(jnp.zeros((n_slots, M), jnp.float32),
+                         jnp.zeros((n_slots,), jnp.float32),
+                         jnp.float32(0.0))
 
 
 def _rms(x, scale, eps=1e-6):
@@ -117,6 +195,13 @@ class ExchangePlan(NamedTuple):
     # -- traced wire ledger -------------------------------------------------
     inter_bytes_flat: Array
     inter_bytes_dedup: Array
+    # -- plan lifecycle (DESIGN.md §9) --------------------------------------
+    # signature: expected NEXT-exchange planner inputs (None when reuse
+    # is off / nothing was planned); counters feed the MoEAux ledger.
+    signature: Optional[PlanSignature] = None
+    plans_built: Optional[Array] = None
+    plans_reused: Optional[Array] = None
+    reuse_mismatch: Optional[Array] = None
 
 
 class ExchangeAux(NamedTuple):
@@ -124,6 +209,54 @@ class ExchangeAux(NamedTuple):
     sideband: Dict[str, Array]    # per-sequence state at its (new) home
     s_next: Optional[Array]       # similarity history (migrated if needed)
     moe: MoEAux
+
+
+# ---------------------------------------------------------------------------
+# static schedule (shared by build_exchange_plan and the plan cache)
+# ---------------------------------------------------------------------------
+
+def plan_static_schedule(cfg: ModelConfig, luffy: LuffyConfig, topo, M: int,
+                         T: int, d: int, capacity: int, bytes_per_el: int
+                         ) -> Tuple[bool, ChunkPlan, Optional[PlanEstimate]]:
+    """All shape-keyed (token-independent) schedule decisions of one
+    exchange: pipelined?, the :class:`ChunkPlan`, and the analytic
+    :class:`PlanEstimate`. Host-side pure — ``repro.plan.cache`` builds
+    ahead-of-time templates from exactly this function, so a cached
+    template's schedule is identical to what ``build_exchange_plan``
+    would decide for the same static key.
+
+    ``luffy.pipeline_chunks <= 0`` requests the objective-planned chunk
+    count (ROADMAP item): ``estimate_exchange(chunks=None)``'s existing
+    1..16 search picks ``ChunkPlan.n_chunks`` instead of the CLI
+    constant (an explicit positive CLI value still overrides).
+    """
+    m = cfg.moe
+    pipelined = luffy.exec_mode == "pipeline" and M > 1
+    assert luffy.exec_mode in ("sync", "pipeline"), luffy.exec_mode
+    priced = topo is not None and M > 1
+    ffn_ms = 0.0
+    if priced:
+        ffn_rows = m.num_experts * capacity   # static rows (M*C*E_local)
+        # 4·d·d_ff flops/row (up+down matmuls) — the repo-wide pricing
+        # convention (commsim._expert_flops, dryrun ledger, objective
+        # sweep); gate matmuls are deliberately excluded everywhere so
+        # objective decisions stay consistent with the calibrated model
+        ffn_ms = ffn_rows * 4.0 * d * m.d_ff / luffy.gpu_speed * 1e3
+    req = luffy.pipeline_chunks if pipelined else 1
+    if pipelined and req <= 0:
+        if priced:
+            req = estimate_exchange(T, m.top_k, d, topo=topo,
+                                    bytes_per_el=bytes_per_el,
+                                    ffn_ms=ffn_ms, chunks=None).chunks
+        else:
+            req = DEFAULT_PIPELINE_CHUNKS   # nothing to price against
+    chunks = plan_chunks(capacity, req)
+    est = None
+    if priced:
+        est = estimate_exchange(T, m.top_k, d, topo=topo,
+                                bytes_per_el=bytes_per_el, ffn_ms=ffn_ms,
+                                chunks=chunks.n_chunks)
+    return pipelined, chunks, est
 
 
 # ---------------------------------------------------------------------------
@@ -136,7 +269,10 @@ def build_exchange_plan(gate: GateOutput, xn: Array, cfg: ModelConfig,
                         sideband: Dict[str, Array],
                         threshold=None, s_prev: Optional[Array] = None,
                         group_size: int = 128, combine_slack: float = 1.0,
-                        use_kernel: bool = False) -> ExchangePlan:
+                        use_kernel: bool = False,
+                        reuse_from: Optional[Union["ExchangePlan",
+                                                   PlanSignature]] = None
+                        ) -> ExchangePlan:
     """Decide one exchange: condensation map, dispatch slots/drops, the
     migration assignment (via the ``luffy.plan_objective`` registry
     entry), the chunk schedule, and the analytic phase estimates.
@@ -144,7 +280,20 @@ def build_exchange_plan(gate: GateOutput, xn: Array, cfg: ModelConfig,
     gate: router output over ``xn`` [T, d] (normed tokens, T = n_seq*S);
     sideband must hold ``seq_len`` [n_seq]. Pure function of the routing
     — no payload bytes move here.
+
+    reuse_from (DESIGN.md §9): a prior :class:`ExchangePlan` (or its
+    :class:`PlanSignature`) from an earlier sublayer of the same
+    forward. Under ``luffy.plan_reuse="signature"`` the carried decision
+    is revalidated with the routing-signature compare and, on a match,
+    the migration greedy is skipped — the sequences already sit where a
+    replan would put them, so the emitted plan (``home_plan``) is
+    bit-identical to what the full planner would return. On a mismatch
+    the stale plan is discarded and a full replan runs (counted in
+    ``reuse_mismatch``). ``"always"`` skips revalidation entirely
+    (trusted reuse; forward outputs may then differ from ``"off"``).
     """
+    global BUILD_CALLS
+    BUILD_CALLS += 1
     m = cfg.moe
     T, d = xn.shape
     n_seq = sideband["seq_len"].shape[0]
@@ -186,22 +335,10 @@ def build_exchange_plan(gate: GateOutput, xn: Array, cfg: ModelConfig,
     # ---- execution schedule + phase estimates ----------------------------
     from repro.models.blocks import _dtype
     cdt = _dtype(cfg.compute_dtype)
-    pipelined = luffy.exec_mode == "pipeline" and M > 1
-    assert luffy.exec_mode in ("sync", "pipeline"), luffy.exec_mode
-    chunks = plan_chunks(C, luffy.pipeline_chunks if pipelined else 1)
     topo = comm.topology
-    est = None
-    if topo is not None and M > 1:
-        ffn_rows = E * C        # static per-device FFN rows (M*C*E_local)
-        # 4·d·d_ff flops/row (up+down matmuls) — the repo-wide pricing
-        # convention (commsim._expert_flops, dryrun ledger, objective
-        # sweep); gate matmuls are deliberately excluded everywhere so
-        # objective decisions stay consistent with the calibrated model
-        ffn_ms = ffn_rows * 4.0 * d * m.d_ff / luffy.gpu_speed * 1e3
-        est = estimate_exchange(
-            T, m.top_k, d, topo=topo,
-            bytes_per_el=jnp.dtype(cdt).itemsize, ffn_ms=ffn_ms,
-            chunks=chunks.n_chunks)
+    pipelined, chunks, est = plan_static_schedule(
+        cfg, luffy, topo, M, T, d, C,
+        bytes_per_el=jnp.dtype(cdt).itemsize)
 
     # ---- inter-node traffic ledger (DESIGN.md §5) ------------------------
     if topo is not None and topo.hierarchical and M > 1:
@@ -217,7 +354,13 @@ def build_exchange_plan(gate: GateOutput, xn: Array, cfg: ModelConfig,
     # ---- migration plan (§IV) — BEFORE dispatch so combine can be
     # re-addressed. Replicated within the model row. -----------------------
     migrate = (mode == "migrate") and luffy.enable_migration and M > 1
+    reuse_mode = luffy.plan_reuse
+    reuse_enabled = reuse_mode != "off"
+    z = jnp.float32(0.0)
+    built = reused = mismatch = z
+    sig_out: Optional[PlanSignature] = None
     if migrate:
+        n_slots = M * n_seq
         dev_of_e = expert_idx // E_local                      # [T,k]
         oh = jax.nn.one_hot(dev_of_e, M, dtype=jnp.float32) \
             * valid[..., None].astype(jnp.float32)
@@ -226,6 +369,7 @@ def build_exchange_plan(gate: GateOutput, xn: Array, cfg: ModelConfig,
                                       tiled=True)             # [M*n_seq, M]
         lens_g = jax.lax.all_gather(sideband["seq_len"], comm.axis_name,
                                     axis=0, tiled=True)       # [M*n_seq]
+        lens_f = lens_g.astype(jnp.float32)
         octx = objectives.ObjectiveContext(topo=topo)
         if est is not None:
             octx = objectives.ObjectiveContext(
@@ -236,16 +380,73 @@ def build_exchange_plan(gate: GateOutput, xn: Array, cfg: ModelConfig,
                 / topo.inter_bw * 1e3,
                 chunks=chunks.n_chunks,
                 row_bytes=float(d * jnp.dtype(cdt).itemsize))
-        mplan = objectives.plan_migration_with_objective(
-            counts_g, lens_g.astype(jnp.float32), n_seq,
-            objective=luffy.plan_objective, ctx=octx, q=luffy.q,
-            d_model=d, speed=luffy.gpu_speed)
+
+        def _replan(cg, lf):
+            return tuple(objectives.plan_migration_with_objective(
+                cg, lf, n_seq, objective=luffy.plan_objective, ctx=octx,
+                q=luffy.q, d_model=d, speed=luffy.gpu_speed))
+
+        sig_in = None
+        if reuse_from is not None:
+            sig_in = (reuse_from.signature
+                      if isinstance(reuse_from, ExchangePlan)
+                      else reuse_from)
+        # Reuse is sound only under the "traffic" objective: its greedy
+        # re-derives the executed placement from a matching signature.
+        # The "overlap" portfolio may execute the exposure candidate,
+        # which the next frame's greedy would NOT re-derive — so other
+        # objectives emit carries that never validate (below), and the
+        # cond machinery is still built for them, keeping the compiled
+        # graph identical across objectives and plan_reuse modes.
+        reuse_capable = luffy.plan_objective == "traffic"
+        if sig_in is not None:
+            # The cond machinery is built whenever a carry is threaded —
+            # for plan_reuse="off" too, with the carried ``valid`` pinned
+            # to 0.0 so revalidation never fires at runtime. Rationale:
+            # the greedy has float near-ties, so two *structurally
+            # different* compiled graphs may pick different (equally
+            # valid) plans; keeping "off" and "signature" graphs
+            # identical makes their forwards bit-comparable, which is
+            # the reuse correctness guarantee the tests assert.
+            have = sig_in.valid > 0.5
+            if reuse_mode == "always":
+                match = have
+            else:                                   # "off" | "signature"
+                same = routing_signature_matches(sig_in, counts_g, lens_f)
+                match = have & same
+                mismatch = (have & ~same).astype(jnp.float32)
+            lc_np = objectives.traffic_link_cost(topo)
+            lc = None if lc_np is None else jnp.asarray(lc_np, jnp.float32)
+
+            def _reuse(cg, lf):
+                # signature matched: the (deterministic) greedy would
+                # re-derive the current placement, so skip it and emit
+                # the home plan with the exact same traffic ledger
+                return tuple(mig.home_plan(cg, n_seq, link_cost=lc))
+
+            mplan = mig.MigrationPlan(*jax.lax.cond(
+                match, _reuse, _replan, counts_g, lens_f))
+            mf = match.astype(jnp.float32)
+            built, reused = 1.0 - mf, mf
+        else:
+            mplan = mig.MigrationPlan(*_replan(counts_g, lens_f))
+            built = jnp.float32(1.0)
         my_slots = my * n_seq + jnp.arange(n_seq, dtype=jnp.int32)
         dest_global = mplan.perm[my_slots]                    # [n_seq]
         t_before, t_after = mplan.traffic_before, mplan.traffic_after
+        if reuse_enabled or sig_in is not None:
+            sig_out = next_signature(counts_g, lens_f, mplan.perm)
+            if not (reuse_enabled and reuse_capable):
+                # "off", or an objective that cannot soundly reuse:
+                # the carry never revalidates (always replans)
+                sig_out = sig_out._replace(valid=jnp.float32(0.0))
     else:
         dest_global = my * n_seq + jnp.arange(n_seq, dtype=jnp.int32)
         t_before = t_after = jnp.float32(0.0)
+    if sig_out is None and (reuse_enabled or reuse_from is not None):
+        # fixed-shape carry even when nothing was planned (vanilla mode,
+        # single device): an invalid signature that never revalidates
+        sig_out = invalid_signature(M * n_seq, M)
 
     return ExchangePlan(
         mode=mode, migrate=migrate, condense=do_condense,
@@ -257,7 +458,8 @@ def build_exchange_plan(gate: GateOutput, xn: Array, cfg: ModelConfig,
         rep_idx=rep_idx, s_next=s_next, condense_rate=c_rate,
         dest_global=dest_global, traffic_before=t_before,
         traffic_after=t_after, inter_bytes_flat=ib_flat,
-        inter_bytes_dedup=ib_dedup)
+        inter_bytes_dedup=ib_dedup, signature=sig_out,
+        plans_built=built, plans_reused=reused, reuse_mismatch=mismatch)
 
 
 # ---------------------------------------------------------------------------
@@ -497,11 +699,88 @@ def execute_plan(params, x: Array, sideband: Dict[str, Array],
                                  params["norm"]["scale"]).astype(cdt))
         y_out = y_out + sh.astype(y_out.dtype)
 
+    zc = jnp.float32(0.0)
     aux = MoEAux(plan.aux_loss, plan.dispatch_drop, c_drop,
                  plan.condense_rate, local_frac, plan.traffic_before,
                  plan.traffic_after, plan.inter_bytes_flat,
-                 plan.inter_bytes_dedup)
+                 plan.inter_bytes_dedup,
+                 zc if plan.plans_built is None else plan.plans_built,
+                 zc if plan.plans_reused is None else plan.plans_reused,
+                 zc if plan.reuse_mismatch is None else plan.reuse_mismatch)
     return y_out, ExchangeAux(sideband=new_sideband, s_next=s_next, moe=aux)
+
+
+def instantiate_plan(template: ExchangePlan, gate: GateOutput, xn: Array,
+                     cfg: ModelConfig, comm: CommContext, *,
+                     capacity: int, sideband: Dict[str, Array],
+                     use_kernel: bool = False) -> ExchangePlan:
+    """Bind fresh routing onto a cached static plan template — the
+    zero-planning serving path (DESIGN.md §9).
+
+    ``template`` is a shape-keyed :class:`ExchangePlan` from a
+    :class:`~repro.plan.cache.PlanCache` (built ahead of time by
+    ``build_plan_template`` — its traced fields are placeholders). This
+    reuses every *static* decision (chunk schedule, pipelined flag,
+    estimate) and fills only the per-request routing, exactly the traced
+    arithmetic ``build_exchange_plan`` performs in vanilla mode — so the
+    executed forward is bit-identical to the uncached path while no
+    planning (chunk search, pricing, objectives) runs per request.
+    Templates are vanilla-mode only: serving prompts are never re-homed
+    and never condensed.
+    """
+    m = cfg.moe
+    T, d = xn.shape
+    n_seq = sideband["seq_len"].shape[0]
+    S = T // n_seq
+    E = m.num_experts
+    M = comm.size()
+    E_local = E // M
+    my = comm.index()
+    C = capacity
+    assert template.mode == "vanilla" and not template.migrate \
+        and not template.condense, (template.mode, template.migrate,
+                                    template.condense)
+    assert template.capacity == C and template.chunks.capacity == C, \
+        (template.capacity, template.chunks, C)
+    expert_idx, gate_w = gate.expert_idx, gate.gate_weights
+
+    pos_in_seq = jnp.tile(jnp.arange(S, dtype=jnp.int32)[None], (n_seq, 1))
+    token_valid = (pos_in_seq < sideband["seq_len"][:, None]).reshape(T)
+    keep = jnp.tile(token_valid[:, None], (1, m.top_k))
+    pos = dispatch_positions(expert_idx, keep, E)
+    valid = keep & (pos < C)
+    kept = jnp.sum(keep.astype(jnp.float32))
+    d_drop = 1.0 - jnp.sum(valid.astype(jnp.float32)) / jnp.maximum(kept, 1.0)
+
+    from repro.models.blocks import _dtype
+    cdt = _dtype(cfg.compute_dtype)
+    topo = comm.topology
+    if topo is not None and topo.hierarchical and M > 1:
+        row_bytes = float((d + 2) * jnp.dtype(cdt).itemsize)
+        ib_flat, ib_dedup = comm_ledger.dispatch_node_ledger(
+            expert_idx, valid, my, e_local=E_local, topo=topo,
+            row_bytes=row_bytes)
+        if comm.mode != "hier":
+            ib_dedup = ib_flat
+    else:
+        ib_flat = ib_dedup = jnp.float32(0.0)
+
+    z = jnp.float32(0.0)
+    return ExchangePlan(
+        mode="vanilla", migrate=False, condense=False,
+        pipelined=template.pipelined, capacity=C, chunks=template.chunks,
+        comm=comm, objective=template.objective,
+        group_size=template.group_size,
+        combine_slack=template.combine_slack, use_kernel=use_kernel,
+        estimate=template.estimate,
+        expert_idx=expert_idx, gate_weights=gate_w, positions=pos,
+        valid=valid, aux_loss=gate.aux_loss, dispatch_drop=d_drop,
+        rep_idx=jnp.arange(T, dtype=jnp.int32), s_next=None,
+        condense_rate=z,
+        dest_global=my * n_seq + jnp.arange(n_seq, dtype=jnp.int32),
+        traffic_before=z, traffic_after=z, inter_bytes_flat=ib_flat,
+        inter_bytes_dedup=ib_dedup, signature=None, plans_built=z,
+        plans_reused=jnp.float32(1.0), reuse_mismatch=z)
 
 
 def _exchange_sideband(sb: Dict[str, Array], dest_global: Array,

@@ -1,0 +1,185 @@
+"""Versioned byte format for :class:`~repro.plan.ExchangePlan` (§9).
+
+``to_bytes`` / ``from_bytes`` give a plan a stable, shape-keyed wire
+format so serving can precompute plans for known batch shapes and spill
+them to disk (:mod:`repro.plan.cache`). Design constraints:
+
+* **No pickle.** The container is ``MAGIC | version | header | payload``:
+  a JSON header describing every static field plus a manifest of the
+  array fields (dtype name, shape, byte offset), followed by the raw
+  little-endian array bytes. Nothing executable is ever deserialized.
+* **numpy-backed.** Arrays round-trip through contiguous buffers
+  (``ml_dtypes``-backed dtypes like bfloat16 included — dtype names are
+  resolved via ``jnp.dtype``). Traced arrays cannot be serialized; plans
+  must be concrete (templates, or plans captured outside a trace).
+* **Versioned.** ``FORMAT_VERSION`` gates the whole layout; a mismatch
+  raises :class:`PlanFormatError` instead of guessing — stale disk
+  caches are rebuilt, never misread.
+"""
+from __future__ import annotations
+
+import json
+import struct
+from typing import Any, Dict, Optional, Tuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.comm import CommContext
+from repro.comm.topology import Topology
+from repro.plan.estimate import PlanEstimate
+from repro.plan.exchange import ExchangePlan, PlanSignature
+from repro.sched import ChunkPlan
+
+MAGIC = b"LFPL"
+FORMAT_VERSION = 1
+
+# ExchangePlan array fields in serialization order. Optional array
+# fields (may be None on a given plan) are marked in the header.
+_ARRAY_FIELDS = (
+    "expert_idx", "gate_weights", "positions", "valid", "aux_loss",
+    "dispatch_drop", "rep_idx", "s_next", "condense_rate", "dest_global",
+    "traffic_before", "traffic_after", "inter_bytes_flat",
+    "inter_bytes_dedup", "plans_built", "plans_reused", "reuse_mismatch",
+)
+_SIG_FIELDS = ("counts", "lens", "valid")
+
+
+class PlanFormatError(ValueError):
+    """Raised when bytes are not a compatible serialized ExchangePlan."""
+
+
+def _np(a) -> np.ndarray:
+    if isinstance(a, jax.core.Tracer):
+        raise TypeError(
+            "cannot serialize a traced ExchangePlan — plans must hold "
+            "concrete arrays (build them outside jit, or serialize a "
+            "cache template)")
+    return np.ascontiguousarray(np.asarray(a))
+
+
+def _estimate_to_dict(est: Optional[PlanEstimate]) -> Optional[Dict]:
+    if est is None:
+        return None
+    d = est._asdict()
+    return {k: (int(v) if k == "chunks" else float(v))
+            for k, v in d.items()}
+
+
+def _comm_to_dict(comm: CommContext) -> Dict[str, Any]:
+    topo = comm.topology
+    return {
+        "mode": comm.mode,
+        "axes": list(comm.axes),
+        "topology": None if topo is None else {
+            "num_nodes": topo.num_nodes,
+            "devices_per_node": topo.devices_per_node,
+            "intra_bw": topo.intra_bw, "inter_bw": topo.inter_bw,
+            "intra_lat": topo.intra_lat, "inter_lat": topo.inter_lat,
+        },
+    }
+
+
+def _comm_from_dict(d: Dict[str, Any]) -> CommContext:
+    t = d.get("topology")
+    topo = None if t is None else Topology(**t)
+    return CommContext(d["mode"], tuple(d["axes"]), topo)
+
+
+def to_bytes(plan: ExchangePlan) -> bytes:
+    """Serialize a concrete plan: MAGIC, u16 version, u32 header length,
+    JSON header, raw array payload."""
+    payloads: list[bytes] = []
+    manifest = []
+    offset = 0
+
+    def add(name: str, a) -> None:
+        nonlocal offset
+        na = _np(a)
+        raw = na.tobytes()
+        manifest.append({"field": name, "dtype": na.dtype.name,
+                         "shape": list(na.shape), "offset": offset,
+                         "nbytes": len(raw)})
+        payloads.append(raw)
+        offset += len(raw)
+
+    none_fields = []
+    for f in _ARRAY_FIELDS:
+        v = getattr(plan, f)
+        if v is None:
+            none_fields.append(f)
+        else:
+            add(f, v)
+    sig = plan.signature
+    if sig is None:
+        none_fields.append("signature")
+    else:
+        for f in _SIG_FIELDS:
+            add(f"signature.{f}", getattr(sig, f))
+
+    header = {
+        "mode": plan.mode, "migrate": bool(plan.migrate),
+        "condense": bool(plan.condense), "pipelined": bool(plan.pipelined),
+        "capacity": int(plan.capacity),
+        "chunks": {"capacity": int(plan.chunks.capacity),
+                   "sizes": [int(s) for s in plan.chunks.sizes]},
+        "comm": _comm_to_dict(plan.comm),
+        "objective": plan.objective,
+        "group_size": int(plan.group_size),
+        "combine_slack": float(plan.combine_slack),
+        "use_kernel": bool(plan.use_kernel),
+        "estimate": _estimate_to_dict(plan.estimate),
+        "arrays": manifest,
+        "none_fields": none_fields,
+    }
+    hj = json.dumps(header, sort_keys=True).encode("utf-8")
+    return b"".join([MAGIC, struct.pack("<HI", FORMAT_VERSION, len(hj)),
+                     hj] + payloads)
+
+
+def from_bytes(data: bytes) -> ExchangePlan:
+    """Parse :func:`to_bytes` output back into an ExchangePlan (arrays as
+    jnp values). Rejects foreign magic and any other format version."""
+    if len(data) < 10 or data[:4] != MAGIC:
+        raise PlanFormatError("not a serialized ExchangePlan (bad magic)")
+    version, hlen = struct.unpack("<HI", data[4:10])
+    if version != FORMAT_VERSION:
+        raise PlanFormatError(
+            f"plan format version {version} != supported "
+            f"{FORMAT_VERSION}; rebuild the cache")
+    try:
+        header = json.loads(data[10:10 + hlen].decode("utf-8"))
+    except Exception as e:
+        raise PlanFormatError(f"corrupt plan header: {e}") from None
+    payload = data[10 + hlen:]
+
+    vals: Dict[str, Any] = {}
+    for rec in header["arrays"]:
+        dt = jnp.dtype(rec["dtype"])
+        raw = payload[rec["offset"]:rec["offset"] + rec["nbytes"]]
+        if len(raw) != rec["nbytes"]:
+            raise PlanFormatError("truncated plan payload")
+        na = np.frombuffer(raw, dtype=dt).reshape(rec["shape"])
+        vals[rec["field"]] = jnp.asarray(na)
+
+    none = set(header["none_fields"])
+    arr = {f: (None if f in none else vals[f]) for f in _ARRAY_FIELDS}
+    sig = None
+    if "signature" not in none:
+        sig = PlanSignature(*(vals[f"signature.{f}"] for f in _SIG_FIELDS))
+    est = None
+    if header["estimate"] is not None:
+        est = PlanEstimate(**header["estimate"])
+    return ExchangePlan(
+        mode=header["mode"], migrate=header["migrate"],
+        condense=header["condense"], pipelined=header["pipelined"],
+        capacity=header["capacity"],
+        chunks=ChunkPlan(header["chunks"]["capacity"],
+                         tuple(header["chunks"]["sizes"])),
+        comm=_comm_from_dict(header["comm"]),
+        objective=header["objective"], group_size=header["group_size"],
+        combine_slack=header["combine_slack"],
+        use_kernel=header["use_kernel"], estimate=est,
+        signature=sig, **arr)

@@ -264,7 +264,7 @@ def decode_step(params, cfg: ModelConfig, luffy: LuffyConfig,
                     cfg.moe,
                     max(1, B // max(1, dist.batch_size_divisor)),
                     cfg.moe.num_experts, slack=2.0)
-                y, _, _, _ = _moe_apply_dist(
+                y, _, _, _, _ = _moe_apply_dist(
                     p["moe"], x, dummy_sb, None, jnp.float32(1.0),
                     cfg, luffy, dist, "decode", cap)
                 x = y
@@ -291,15 +291,37 @@ def decode_step(params, cfg: ModelConfig, luffy: LuffyConfig,
 # prefill
 # ---------------------------------------------------------------------------
 
+def prefill_capacity(cfg: ModelConfig, dist: DistContext, batch: int,
+                     seq_len: int) -> int:
+    """The MoE dispatch capacity prefill uses for one (batch, seq_len)
+    shape — the single derivation shared by :func:`prefill`, the plan
+    cache key, and ``launch/serve.py --precompute-plans`` (drift here
+    would silently miss the cache)."""
+    div = dist.batch_size_divisor
+    if dist.seq_axis is not None:
+        div *= dist.axis_size(dist.seq_axis)
+    return moe.capacity_for(cfg.moe, max(1, batch * seq_len // div),
+                            cfg.moe.num_experts)
+
+
 def prefill(params, cfg: ModelConfig, luffy: LuffyConfig, dist: DistContext,
-            tokens, s_max: int, *, prefix=None, enc_input=None):
+            tokens, s_max: int, *, prefix=None, enc_input=None,
+            plan_cache=None):
     """Full forward over the prompt; builds the decode cache.
     Returns (last-token logits [B,V], cache).
 
     MoE sublayers run through the shared ``repro.plan`` build/execute
     core (DESIGN.md §7), so ``luffy.exec_mode="pipeline"`` chunks the
     prefill dispatch capacity exactly like the train forward (migration/
-    condensation are forced off — serving prompts are not re-homed)."""
+    condensation are forced off — serving prompts are not re-homed).
+
+    plan_cache (DESIGN.md §9): a :class:`repro.plan.cache.PlanCache`.
+    When the (batch shape × seq len × objective × topology) key hits —
+    e.g. after ``--precompute-plans`` — every MoE sublayer runs through
+    ``instantiate_plan`` on the cached static template instead of
+    ``build_exchange_plan``: zero planning on the request path, with
+    the executed forward bit-identical to the uncached one (the
+    template's schedule comes from the same ``plan_static_schedule``)."""
     import dataclasses as _dc
     period = pattern_period(cfg)
     x = embed_tokens(params, cfg, tokens, prefix, dist=dist)
@@ -353,14 +375,15 @@ def prefill(params, cfg: ModelConfig, luffy: LuffyConfig, dist: DistContext,
                 ckv = None
             kind = cfg.ffn_kind(j)
             if kind == "moe":
-                div = dist.batch_size_divisor
-                if dist.seq_axis is not None:
-                    div *= dist.axis_size(dist.seq_axis)
-                cap = moe.capacity_for(cfg.moe, max(1, B * S // div),
-                                       cfg.moe.num_experts)
-                y, _, _, _ = _moe_apply_dist(
+                cap = prefill_capacity(cfg, dist, B, S)
+                tmpl = None
+                if plan_cache is not None:
+                    from repro.plan.cache import prefill_plan_key
+                    tmpl = plan_cache.get(
+                        prefill_plan_key(cfg, nl, dist, B, S, cap))
+                y, _, _, _, _ = _moe_apply_dist(
                     p["moe"], x, sb, None, jnp.float32(1.0), cfg, nl,
-                    dist, "vanilla", cap)
+                    dist, "vanilla", cap, plan_template=tmpl)
                 x = y
             else:
                 xn = bk.norm_apply(p["ffn_norm"], x, cfg.norm)
