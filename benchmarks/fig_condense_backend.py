@@ -1,0 +1,144 @@
+"""Beyond-paper deliverable (DESIGN.md §10): similarity-backend sweep —
+group size × backend through the real ``repro.condense`` path.
+
+For each group size ``G`` the sweep condenses (a) a random token batch
+and (b) a duplicate-heavy batch (4 exact clones per unique token)
+through both registered backends and records the measured-pair count
+(the O(G²·d) Gram work §V-A actually performs), the fraction of
+[128,128] kernel tiles the mask leaves live (the Pallas early-out win),
+the condense rate, and the modeled build time
+(``repro.plan.estimate_similarity_ms``).
+
+CI smoke-checks the backend contracts (ISSUE 5): the LSH backend's
+measured-pair count is strictly below exact for every ``G ≥ 256`` on
+random tokens, and its condense rate is *identical* to exact on the
+duplicate-heavy batches (identical tokens always share a bucket).
+Emits CSV rows and ``artifacts/fig_condense_backend.json``.
+"""
+from __future__ import annotations
+
+import json
+
+import numpy as np
+
+from benchmarks.common import ARTIFACTS, emit
+
+GROUPS_FAST = (64, 128, 256)
+GROUPS_SLOW = (64, 128, 256, 512)
+D_MODEL = 64
+N_EXPERTS = 4
+LSH_BITS = 8
+THRESHOLD = 0.9
+BACKENDS = ("exact", "lsh")
+
+
+def _random_batch(rng, G: int):
+    x = rng.standard_normal((G, D_MODEL)).astype(np.float32)
+    e = rng.integers(0, N_EXPERTS, G).astype(np.int32)
+    return x, e
+
+
+def _duplicate_batch(rng, G: int, clones: int = 4):
+    """Random uniques, each repeated ``clones`` times — every clone pair
+    has similarity 1.0; random cross pairs sit near 0.5 in the
+    normalized [0,1] scale, far under the threshold (random d=64
+    gaussians never reach cosine 0.8; works for any G, unlike an
+    identity basis which runs out of orthogonal rows past d)."""
+    n_uniq = G // clones
+    uniq = rng.standard_normal((n_uniq, D_MODEL)).astype(np.float32)
+    x = np.repeat(uniq, clones, axis=0)
+    e = np.repeat(rng.integers(0, N_EXPERTS, n_uniq), clones).astype(
+        np.int32)
+    return x, e
+
+
+def _condense(x, e, backend: str):
+    import jax.numpy as jnp
+    from repro.condense import condense_tokens, fast_similarity
+    from repro.kernels.similarity import mask_tile_fraction
+    G = x.shape[0]
+    out = condense_tokens(jnp.asarray(x), jnp.asarray(e), THRESHOLD,
+                          group_size=G, backend=backend,
+                          lsh_bits=LSH_BITS)
+    # the live tile fraction the kernel's early-out sees (mask only)
+    _, measured_frac = fast_similarity(
+        jnp.asarray(x), jnp.asarray(e), None, 0.8, 0.2, backend=backend,
+        lsh_bits=LSH_BITS)
+    same = e[:, None] == e[None, :]
+    if backend == "lsh":
+        from repro.condense import lsh_codes
+        code = np.asarray(lsh_codes(jnp.asarray(x), bits=LSH_BITS))
+        mask = same & (code[:, None] == code[None, :])
+    else:
+        mask = same
+    return {
+        "measured_pairs": float(out.measured_pairs),
+        "measured_frac": float(measured_frac),
+        "tile_frac": mask_tile_fraction(mask),
+        "rate": float(out.rate),
+    }
+
+
+def sweep(groups):
+    from repro.condense import expected_measured_pairs
+    from repro.plan import estimate_similarity_ms
+    rng = np.random.default_rng(0)
+    out = {"d_model": D_MODEL, "num_experts": N_EXPERTS,
+           "lsh_bits": LSH_BITS, "threshold": THRESHOLD, "cells": {}}
+    for G in groups:
+        xr, er = _random_batch(rng, G)
+        xd, ed = _duplicate_batch(rng, G)
+        cell = {"G": G}
+        for b in BACKENDS:
+            r = _condense(xr, er, b)
+            d = _condense(xd, ed, b)
+            cell[b] = {
+                "random": r, "duplicate": d,
+                "modeled_pairs": expected_measured_pairs(
+                    G, G, N_EXPERTS, backend=b, lsh_bits=LSH_BITS),
+                "modeled_build_ms": estimate_similarity_ms(
+                    r["measured_pairs"], D_MODEL),
+            }
+        out["cells"][f"G{G}"] = cell
+    return out
+
+
+def run(fast: bool = True) -> None:
+    out = sweep(GROUPS_FAST if fast else GROUPS_SLOW)
+    ARTIFACTS.mkdir(parents=True, exist_ok=True)
+    path = ARTIFACTS / "fig_condense_backend.json"
+    path.write_text(json.dumps(out, indent=1))
+
+    rows = []
+    ok_fewer = True
+    ok_rate = True
+    for name, c in out["cells"].items():
+        ex, ls = c["exact"], c["lsh"]
+        cut = ex["random"]["measured_pairs"] / max(
+            ls["random"]["measured_pairs"], 1.0)
+        rows.append((f"condense_backend/{name}/measured_pairs", 0.0,
+                     f"exact={ex['random']['measured_pairs']:.0f} "
+                     f"lsh={ls['random']['measured_pairs']:.0f} "
+                     f"({cut:.1f}x fewer)"))
+        rows.append((f"condense_backend/{name}/dup_rate", 0.0,
+                     f"exact={ex['duplicate']['rate']:.3f} "
+                     f"lsh={ls['duplicate']['rate']:.3f}"))
+        # the CI contracts (ISSUE 5 satellite)
+        if c["G"] >= 256:
+            ok_fewer &= (ls["random"]["measured_pairs"]
+                         < ex["random"]["measured_pairs"])
+        ok_rate &= ls["duplicate"]["rate"] == ex["duplicate"]["rate"]
+    rows.append(("condense_backend/lsh_fewer_pairs_ge256", 0.0,
+                 str(ok_fewer)))
+    rows.append(("condense_backend/dup_rate_identical", 0.0,
+                 str(ok_rate)))
+    rows.append(("condense_backend/json", 0.0, str(path)))
+    emit(rows)
+    if not (ok_fewer and ok_rate):
+        raise AssertionError(
+            f"condense-backend contract violated: fewer_pairs={ok_fewer} "
+            f"dup_rate_identical={ok_rate}")
+
+
+if __name__ == "__main__":
+    run()

@@ -22,6 +22,7 @@ MODULES = [
     "fig_overlap_sweep",    # beyond-paper: pipelined-overlap sweep
     "fig_objective_sweep",  # beyond-paper: traffic vs overlap objective
     "fig_plan_reuse",       # beyond-paper: plan-lifecycle reuse sweep
+    "fig_condense_backend",  # beyond-paper: similarity-backend sweep
     "roofline",             # deliverable (g)
 ]
 

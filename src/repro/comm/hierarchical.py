@@ -11,12 +11,13 @@ change when ``comm_mode`` flips.
 What does change is the wire profile: every inter-node message now
 aggregates the contributions of all ``L`` devices of the source node
 (one large message per node pair per phase instead of ``L²`` small
-ones). The per-node *payload dedup* (HierMoE-style: condensation
-representatives crossing once per node, not once per device) is NOT
-yet applied to the wire — bit-identity means the dense buffers still
-move in full; :mod:`repro.comm.ledger` tracks what the planned
-deduplicating wire format would ship, and that number sizes the
-commsim predictions and the dry-run ledger.
+ones). The per-node *payload dedup* (HierMoE-style: a token's payload
+crossing once per node, not once per top-k copy) is a separate wire
+format: :mod:`repro.condense.wire` ships it behind
+``LuffyConfig.hier_dedup`` using the phase collectives below
+(``node_all_to_all`` / ``local_all_gather`` / ``local_psum_scatter``);
+:mod:`repro.comm.ledger` prices it, and with the dedup wire enabled the
+modeled ``inter_bytes_dedup`` equals the bytes actually shipped.
 """
 from __future__ import annotations
 
@@ -158,6 +159,25 @@ class CommContext(NamedTuple):
             return hier_combine(x, self.node_axis, self.local_axis)
         return jax.lax.all_to_all(x, self.axis_name, split_axis=0,
                                   concat_axis=0, tiled=True)
+
+    # -- single-phase collectives (the dedup wire, repro.condense.wire) ------
+    def node_all_to_all(self, x):
+        """Inter-node exchange only: dim 0 = one chunk per NODE."""
+        assert self.mode == "hier", self.mode
+        return jax.lax.all_to_all(x, self.node_axis, split_axis=0,
+                                  concat_axis=0, tiled=True)
+
+    def local_all_gather(self, x):
+        """Cheap-link fan-out: gather dim 0 across the node's devices."""
+        assert self.mode == "hier", self.mode
+        return jax.lax.all_gather(x, self.local_axis, axis=0, tiled=True)
+
+    def local_psum_scatter(self, x):
+        """Cheap-link reduction: sum across the node's devices, each
+        keeping its dim-0 slice (dim 0 must be ``L`` chunks)."""
+        assert self.mode == "hier", self.mode
+        return jax.lax.psum_scatter(x, self.local_axis,
+                                    scatter_dimension=0, tiled=True)
 
     def link_cost(self) -> Optional[jnp.ndarray]:
         """[M, M] f32 link-cost matrix for the migration planner, or

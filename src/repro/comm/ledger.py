@@ -42,10 +42,12 @@ def dispatch_node_ledger(expert_idx, valid, my_device, *, e_local: int,
     flat counts every valid row whose expert lives on another node;
     dedup counts distinct (token, remote node) pairs — the payload a
     node-deduplicating wire format ships across the expensive axis.
-    NOTE this is a *model* of the executed step's routing: the current
-    hier collectives are bit-identical relabelings that still move the
-    dense buffers (see hierarchical.py); the dedup number is the target
-    the planned compressed wire format is sized against.
+    NOTE: with ``LuffyConfig.hier_dedup="on"`` the dedup number is no
+    longer just a model — ``repro.condense.wire`` packs exactly one
+    payload row per (token, remote node), so the executor's
+    ``inter_bytes_shipped`` ledger equals this value (asserted in the
+    golden grid); with the dense wire (the default) it stays the
+    sizing target the compressed format is priced against.
     """
     L = topo.devices_per_node
     N = topo.num_nodes

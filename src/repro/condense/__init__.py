@@ -1,0 +1,46 @@
+"""Token-condensation subsystem (paper §V; DESIGN.md §10).
+
+Where :mod:`repro.plan` materializes the *exchange* decision as data,
+``repro.condense`` owns the condensation half of that decision end to
+end:
+
+* :mod:`repro.condense.backends` — a similarity-backend registry
+  (``LuffyConfig.similarity_backend``): ``"exact"`` reproduces the
+  historical masked Gram path bit-for-bit, ``"lsh"`` buckets tokens by
+  signed random projections and measures only intra-bucket pairs,
+  cutting the measured-pair count for large groups (ROADMAP item).
+* :mod:`repro.condense.plan` — the frozen :class:`CondensePlan` (rep
+  map, similarity history, measured-pair ledger, reuse signature) built
+  inside ``build_exchange_plan`` and carried in the
+  :class:`~repro.plan.ExchangePlan`; ``condense_reuse`` revalidates a
+  carried rep map across sublayers with a configurable staleness bound
+  (``condense_reuse_max_age``) guarding §V-A freshness.
+* :mod:`repro.condense.wire` — the deduplicated hierarchical wire
+  format (``LuffyConfig.hier_dedup``): unique token payloads cross the
+  inter-node links once per (token, node) with a re-expansion map, and
+  combine pre-reduces per node with a sum-order-stable schedule —
+  actually shipping the bytes the ledger's ``inter_bytes_dedup`` has
+  priced since PR 1.
+"""
+from repro.condense.backends import (available_similarity_backends,
+                                     expected_measured_pairs,
+                                     fast_similarity, get_similarity_backend,
+                                     lsh_codes, pairwise_cosine,
+                                     register_similarity_backend)
+from repro.condense.plan import (CondenseCarry, CondenseOutput, CondensePlan,
+                                 CondenseSignature, adaptive_threshold,
+                                 build_condense_plan, condense_tokens,
+                                 identity_condense_plan, pick_rate_bucket,
+                                 similarity_quantiles, uncondense)
+from repro.condense.wire import (dedup_capacity, dedup_combine,
+                                 dedup_dispatch)
+
+__all__ = [
+    "CondenseCarry", "CondenseOutput", "CondensePlan", "CondenseSignature",
+    "adaptive_threshold", "available_similarity_backends",
+    "build_condense_plan", "condense_tokens", "dedup_capacity",
+    "dedup_combine", "dedup_dispatch", "expected_measured_pairs",
+    "fast_similarity", "get_similarity_backend", "identity_condense_plan",
+    "lsh_codes", "pairwise_cosine", "pick_rate_bucket",
+    "register_similarity_backend", "similarity_quantiles", "uncondense",
+]

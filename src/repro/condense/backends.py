@@ -1,0 +1,180 @@
+"""Pluggable similarity-measurement backends (paper §V-A; DESIGN.md §10).
+
+The §V-A fast-measurement *skip rules* (cross-expert ⇒ 0, historical
+similarity > S1 ⇒ 1, < S2 ⇒ 0) leave an *uncertain* pair mask that must
+actually be measured. A **backend** decides which of those uncertain
+pairs get a real Gram measurement and returns the measured values:
+
+* ``"exact"`` — measure every uncertain pair. Bit-for-bit the
+  historical path (full ``pairwise_cosine`` off-TPU, the masked Pallas
+  Gram kernel with tile-level early-out when ``use_kernels``).
+* ``"lsh"`` — signed-random-projection bucketing: tokens hash to an
+  ``lsh_bits``-bit code (one bit per projection sign); only uncertain
+  pairs in the *same bucket* are measured, the rest are declared
+  dissimilar. Identical tokens always collide (identical projections ⇒
+  identical signs), so duplicate-heavy batches condense at exactly the
+  exact-backend rate, while random token pairs collide with probability
+  ``≈ 2^-bits`` — the O(G²·d) measured-pair count drops toward O(G·d)
+  for large groups (ROADMAP item). The projection matrix is a fixed
+  host-side constant (``lsh_seed``), so the decision is deterministic
+  and replicated across devices for free.
+
+Backends register with :func:`register_similarity_backend` (mirroring
+``repro.plan.objectives``) and are selected by
+``LuffyConfig.similarity_backend``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, Dict, Tuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+Array = jnp.ndarray
+
+# backend(x_group [G, d], uncertain [G, G], *, use_kernel, lsh_bits,
+#         lsh_seed) -> (sim_values [G, G] f32, measured_mask [G, G] bool)
+# ``sim_values`` need only be meaningful where ``measured_mask`` is True.
+SimilarityBackend = Callable[..., Tuple[Array, Array]]
+
+SIMILARITY_BACKENDS: Dict[str, SimilarityBackend] = {}
+
+
+def register_similarity_backend(name: str):
+    """Decorator: register a similarity backend under ``name``."""
+    def deco(fn: SimilarityBackend) -> SimilarityBackend:
+        SIMILARITY_BACKENDS[name] = fn
+        return fn
+    return deco
+
+
+def available_similarity_backends():
+    return sorted(SIMILARITY_BACKENDS)
+
+
+def get_similarity_backend(name: str) -> SimilarityBackend:
+    try:
+        return SIMILARITY_BACKENDS[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown similarity_backend {name!r}; registered backends: "
+            f"{available_similarity_backends()}") from None
+
+
+# ---------------------------------------------------------------------------
+# shared measurement primitives
+# ---------------------------------------------------------------------------
+
+def pairwise_cosine(x, eps: float = 1e-8):
+    """[G, d] -> [G, G] normalized cosine similarity in [0, 1]."""
+    xf = x.astype(jnp.float32)
+    n = xf * jax.lax.rsqrt(jnp.sum(xf * xf, -1, keepdims=True) + eps)
+    c = n @ n.T                      # [-1, 1]
+    return (c + 1.0) * 0.5           # paper uses normalized cosine in [0,1]
+
+
+def _measure(x, mask, use_kernel: bool):
+    if use_kernel:
+        from repro.kernels import ops as kops
+        return kops.masked_similarity(x, mask)
+    return pairwise_cosine(x)
+
+
+@functools.lru_cache(maxsize=32)
+def _lsh_projections(d: int, bits: int, seed: int) -> np.ndarray:
+    """Fixed [d, bits] signed-projection matrix — a host constant, so
+    every device (and every trace) hashes identically."""
+    r = np.random.default_rng(seed)
+    return r.standard_normal((d, bits)).astype(np.float32)
+
+
+def lsh_codes(x, *, bits: int = 8, seed: int = 0):
+    """[G, d] -> [G] int32 bucket codes (one sign bit per projection)."""
+    d = x.shape[-1]
+    bits = max(1, min(int(bits), 30))
+    proj = jnp.asarray(_lsh_projections(d, bits, seed))
+    signs = (x.astype(jnp.float32) @ proj) >= 0.0          # [G, bits]
+    weights = jnp.asarray(2 ** np.arange(bits), jnp.int32)
+    return jnp.sum(signs.astype(jnp.int32) * weights[None, :], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# the backends
+# ---------------------------------------------------------------------------
+
+@register_similarity_backend("exact")
+def exact_backend(x, uncertain, *, use_kernel: bool = False,
+                  lsh_bits: int = 8, lsh_seed: int = 0):
+    """Measure every uncertain pair — the historical path, exactly."""
+    return _measure(x, uncertain, use_kernel), uncertain
+
+
+@register_similarity_backend("lsh")
+def lsh_backend(x, uncertain, *, use_kernel: bool = False,
+                lsh_bits: int = 8, lsh_seed: int = 0):
+    """Measure only uncertain pairs whose LSH codes collide; the
+    bucket-restricted mask also feeds the Pallas kernel's tile-level
+    early-out, so fewer tiles are computed, not just fewer reported."""
+    code = lsh_codes(x, bits=lsh_bits, seed=lsh_seed)
+    same_bucket = code[:, None] == code[None, :]
+    measured = uncertain & same_bucket
+    return _measure(x, measured, use_kernel), measured
+
+
+# ---------------------------------------------------------------------------
+# §V-A fast similarity (skip rules + backend measurement)
+# ---------------------------------------------------------------------------
+
+def fast_similarity(x_group, expert_group, s_prev, s1: float, s2: float,
+                    use_kernel: bool = False, *, backend: str = "exact",
+                    lsh_bits: int = 8, lsh_seed: int = 0):
+    """§V-A fast similarity for one group.
+
+    x_group: [G, d]; expert_group: [G] primary expert ids;
+    s_prev: [G, G] similarity from the previous block (or None).
+    Returns (sim [G,G], measured_frac [] — fraction of the G² pairs the
+    backend actually measured).
+    """
+    G = x_group.shape[0]
+    same_expert = expert_group[:, None] == expert_group[None, :]
+    if s_prev is not None:
+        known_hi = s_prev > s1
+        known_lo = s_prev < s2
+        uncertain = same_expert & ~known_hi & ~known_lo
+    else:
+        known_hi = jnp.zeros((G, G), bool)
+        uncertain = same_expert
+    fn = get_similarity_backend(backend)
+    cos, measured = fn(x_group, uncertain, use_kernel=use_kernel,
+                       lsh_bits=lsh_bits, lsh_seed=lsh_seed)
+    sim = jnp.where(measured, cos, 0.0)
+    sim = jnp.where(known_hi & same_expert, 1.0, sim)
+    sim = jnp.where(~same_expert, 0.0, sim)
+    measured_frac = jnp.mean(measured.astype(jnp.float32))
+    return sim, measured_frac
+
+
+# ---------------------------------------------------------------------------
+# analytic measured-pair model (dry-run condensation ledger)
+# ---------------------------------------------------------------------------
+
+def expected_measured_pairs(tokens: int, group_size: int, num_experts: int,
+                            *, backend: str = "exact",
+                            lsh_bits: int = 8) -> float:
+    """Expected pairs a backend measures on the *first* block (no
+    similarity history yet) under uniform top-1 routing: per group,
+    ``G`` diagonal pairs plus ``G·(G−1)/E`` same-expert off-diagonal
+    pairs; the LSH backend scales the off-diagonal mass by the random
+    bucket-collision probability ``2^-bits``. Host-side float — the
+    dryrun ``comm_ledger.condensation`` section reports from it."""
+    G = group_size
+    n_groups = max(1, tokens // G)
+    offdiag = G * (G - 1) / max(1, num_experts)
+    if backend == "lsh":
+        offdiag *= 0.5 ** max(1, min(int(lsh_bits), 30))
+    elif backend != "exact":
+        get_similarity_backend(backend)   # raise on unknown names
+    return float(n_groups * (G + offdiag))

@@ -1,0 +1,162 @@
+"""The deduplicated hierarchical wire format (DESIGN.md §10).
+
+Since PR 1 the traffic ledger has *priced* a per-node-deduplicated
+payload (``inter_bytes_dedup``: a token whose top-k experts land on the
+same remote node crosses the expensive link once, not k times) while the
+executed hier collectives still moved the dense buffers. This module
+actually ships it, behind ``LuffyConfig.hier_dedup``:
+
+**Dispatch.** Each source device packs one *unique* payload row per
+(token, destination node) into a ``[N, C_u, d]`` buffer (``C_u`` =
+:func:`dedup_capacity`) and a *re-expansion map* — the ordinary dense
+``[E, C]`` dispatch layout carrying, per expert row, the unique-slot
+pointer and the per-copy gate weight instead of the d-dim payload. The
+unique buffer crosses nodes once per (token, node) pair (inter-node
+all-to-all over the node axis), then fans out to the destination node's
+devices on the cheap links (intra-node all-gather — exactly the
+phase-2 redistribution ``repro.comm.ledger.dispatch_bytes(dedup=True)``
+models). Row reconstruction through the map is exact, so expert inputs
+are **bit-identical** to the dense wire.
+
+**Combine.** Expert outputs destined to the same (source token, node)
+are pre-reduced *on the expert node* — a deterministic scatter-add in
+fixed row order, then an intra-node reduce-scatter — and one partial row
+per (token, node) crosses back. The source adds the per-node partials in
+ascending node order, so the whole reduction has a fixed, documented
+association ("sum-order-stable"): outputs are deterministic run-to-run,
+but associate differently than the flat wire's per-copy sum — dedup mode
+matches flat within float tolerance, not bitwise (tested).
+
+Scope: the vanilla (non-migrated) sync exchange — migrate-mode combine
+re-addresses rows to new homes, where the (token, node) dedup map does
+not apply; pipelined execution chunks the dense capacity. Both fall back
+to the dense wire (``ExchangePlan.wire`` records the executed format).
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax.numpy as jnp
+
+from repro.comm import CommContext, compat
+
+Array = jnp.ndarray
+
+
+def dedup_capacity(tokens: int, e_local: int, local: int,
+                   capacity: int) -> int:
+    """Static unique-row capacity per (source device, destination node).
+
+    Bounded by both the token count (each token occupies at most one
+    unique slot per node) and the node's dispatch slots (a unique row
+    exists only if ≥1 of its copies took a slot on that node:
+    ``e_local·L·C``), so the packing can never overflow — no drop path.
+    """
+    bound = min(tokens, e_local * local * capacity)
+    return max(8, ((bound + 7) // 8) * 8)
+
+
+def dedup_dispatch(xf, expert_idx, gate_w, valid, pos, *,
+                   comm: CommContext, e_local: int, capacity: int
+                   ) -> Tuple[Array, Array, Array, Dict]:
+    """Ship the deduplicated dispatch payload; reconstruct dense rows.
+
+    xf: [T, d] payload rows (compute dtype); expert_idx/gate_w/valid/
+    pos: [T, k] routing (valid already excludes condensed/dropped rows).
+    Returns ``(x_rows [E_local, M, C, d], gw [E_local, M, C],
+    rvalid [E_local, M, C] bool, state)`` — ``x_rows`` bit-identical to
+    the dense wire's payload slabs; ``state`` carries the maps
+    :func:`dedup_combine` needs plus the shipped-bytes ledger count.
+    """
+    N = compat.axis_size(comm.node_axis)
+    L = compat.axis_size(comm.local_axis)
+    M = N * L
+    T, k = expert_idx.shape
+    d = xf.shape[1]
+    C = capacity
+    E = e_local * M
+    cdt = xf.dtype
+    my_node = comm.index() // L
+
+    node_of = (expert_idx // e_local) // L                  # [T, k]
+    # distinct destination nodes per token (the dedup map)
+    hit = (node_of[..., None] == jnp.arange(N)[None, None, :]) \
+        & valid[..., None]                                  # [T, k, N]
+    headed = jnp.any(hit, axis=1)                           # [T, N]
+    h_i = headed.astype(jnp.int32)
+    urank = jnp.cumsum(h_i, axis=0) - h_i                   # [T, N]
+    C_u = dedup_capacity(T, e_local, L, C)
+    un_safe = jnp.where(headed, urank, 0)
+
+    # unique payload buffer: one row per (token, dest node)
+    n_grid = jnp.broadcast_to(jnp.arange(N)[None, :], (T, N))
+    ubuf = jnp.zeros((N, C_u, d), cdt).at[n_grid, un_safe].add(
+        xf[:, None, :] * headed[..., None].astype(cdt), mode="drop")
+
+    # re-expansion map in the dense dispatch layout: (uslot+1, gate_w)
+    u_copy = jnp.take_along_axis(urank, node_of, axis=1)    # [T, k]
+    e_f = expert_idx.reshape(-1)
+    p_f = pos.reshape(-1)
+    v_f = valid.reshape(-1)
+    e_safe = jnp.where(v_f, e_f, 0)
+    p_safe = jnp.where(v_f, p_f, 0)
+    mvals = jnp.stack([(u_copy + 1).astype(jnp.float32),
+                       gate_w.astype(jnp.float32)], -1).reshape(-1, 2)
+    mbuf = jnp.zeros((E, C, 2), jnp.float32).at[e_safe, p_safe].add(
+        mvals * v_f[:, None].astype(jnp.float32), mode="drop")
+
+    # wire: map via the ordinary dense exchange (2 scalars/row), unique
+    # payload inter-node once per (token, node), then cheap-link fan-out
+    mbuf = comm.all_to_all(mbuf)
+    ub1 = comm.node_all_to_all(ubuf)                        # [N_src, C_u, d]
+    ug = comm.local_all_gather(ub1)                         # [L*N, C_u, d]
+
+    rmeta = mbuf.reshape(M, e_local, C, 2).transpose(1, 0, 2, 3)
+    u = jnp.round(rmeta[..., 0]).astype(jnp.int32) - 1      # [E_l, M, C]
+    rvalid = u >= 0
+    u_safe = jnp.maximum(u, 0)
+    gw = (rmeta[..., 1] * rvalid.astype(jnp.float32)).astype(cdt)
+    m_ids = jnp.arange(M, dtype=jnp.int32)
+    gi = (m_ids % L) * N + (m_ids // L)                     # source row in ug
+    gi_b = jnp.broadcast_to(gi[None, :, None], u.shape)
+    x_rows = ug[gi_b, u_safe] * rvalid[..., None].astype(cdt)
+
+    occ = jnp.sum(h_i.astype(jnp.float32), axis=0)          # [N]
+    state = {"headed": headed, "un_safe": un_safe, "u_safe": u_safe,
+             "rvalid": rvalid, "N": N, "L": L, "M": M, "C_u": C_u,
+             "shipped_rows": jnp.sum(occ) - occ[my_node]}
+    return x_rows, gw, rvalid, state
+
+
+def dedup_combine(out_rows, state, *, comm: CommContext) -> Array:
+    """Return gate-weighted expert outputs to their source tokens with
+    per-node pre-reduction.
+
+    out_rows: [E_local, M, C, d] finished (gate-weighted) rows in the
+    dense layout. Partial sums per (source token, node) accumulate in
+    fixed (expert, source, slot) row order on the expert node, an
+    intra-node reduce-scatter completes the node sum, one partial row
+    per (token, node) crosses back, and the source adds node partials
+    in ascending node index — a fully deterministic association.
+    Returns delta [T, d].
+    """
+    N, L, M, C_u = state["N"], state["L"], state["M"], state["C_u"]
+    rvalid, u_safe = state["rvalid"], state["u_safe"]
+    headed, un_safe = state["headed"], state["un_safe"]
+    d = out_rows.shape[-1]
+    cdt = out_rows.dtype
+    T = headed.shape[0]
+
+    m_grid = jnp.broadcast_to(
+        jnp.arange(M, dtype=jnp.int32)[None, :, None], u_safe.shape)
+    comb = jnp.zeros((M, C_u, d), cdt).at[m_grid, u_safe].add(
+        out_rows * rvalid[..., None].astype(cdt), mode="drop")
+    # finish the node sum on the cheap links, keeping only my column's
+    # source chunk (m = n_src * L + l_src)
+    comb = comb.reshape(N, L, C_u, d).transpose(1, 0, 2, 3)
+    part = comm.local_psum_scatter(comb)                    # [1, N, C_u, d]
+    part = part.reshape(N, C_u, d)
+    pback = comm.node_all_to_all(part)                      # [N, C_u, d]
+    n_grid = jnp.broadcast_to(jnp.arange(N)[None, :], (T, N))
+    g = pback[n_grid, un_safe] * headed[..., None].astype(cdt)
+    return jnp.sum(g, axis=1)                               # node order

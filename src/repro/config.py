@@ -229,6 +229,27 @@ class LuffyConfig:
     # §V-B adaptive threshold; if adaptive=False use static_threshold.
     adaptive_threshold: bool = True
     static_threshold: float = 0.5
+    # Similarity-measurement backend (repro.condense.backends, DESIGN.md
+    # §10): "exact" measures every §V-A uncertain pair (the historical
+    # masked Gram path, bit-for-bit); "lsh" buckets tokens by lsh_bits
+    # signed random projections and measures only intra-bucket pairs —
+    # identical tokens always collide, random pairs with prob ~2^-bits,
+    # so the measured-pair count drops for large groups.
+    similarity_backend: str = "exact"
+    lsh_bits: int = 8
+    lsh_seed: int = 0
+    # Condense-plan reuse across sublayers (repro.condense.plan): "off"
+    # rebuilds the O(G²·d) similarity every MoE sublayer (historical);
+    # "signature" reuses the carried rep map while the primary-expert
+    # assignment matches what it was built on AND every sequence's age
+    # is under condense_reuse_max_age (the §V-A freshness bound —
+    # embeddings drift across layers, so a reused map trades freshness
+    # for planning time); "always" skips the expert compare (age bound
+    # still applies). The carry threads through the layer scan for every
+    # mode ("off" pins the valid flag to 0) so compiled graphs stay
+    # structurally identical across modes (DESIGN.md §9 graph parity).
+    condense_reuse: str = "off"
+    condense_reuse_max_age: int = 4
     # TPU adaptation: condensation-rate buckets. The adaptive threshold
     # picks a bucket each iteration; each bucket is a separately compiled
     # executable with capacity C' = ceil(C * (1 - rate)).
@@ -249,6 +270,19 @@ class LuffyConfig:
     # bit-compatible with "flat" but with node-aggregated inter-node
     # messages and the per-node dedup ledger active.
     comm_mode: str = "flat"
+    # Deduplicated hier wire format (repro.condense.wire, DESIGN.md
+    # §10): "on" ships each token's payload across the inter-node links
+    # once per (token, node) with a re-expansion map, and pre-reduces
+    # combine rows per node with a sum-order-stable schedule — actually
+    # moving the bytes the ledger's inter_bytes_dedup models (asserted
+    # equal via the inter_bytes_shipped metric). Requires
+    # comm_mode="hier"; applies to the vanilla sync exchange (migrate-
+    # mode combine is re-addressed to new homes and pipelined execution
+    # chunks the dense capacity — both keep the dense wire). Dispatch
+    # reconstruction is exact, but the combine reduction associates
+    # per-node, so outputs match "off" within float tolerance, not
+    # bitwise.
+    hier_dedup: str = "off"
     # Execution scheduling (DESIGN.md §6): "sync" runs gate → dispatch →
     # expert FFN → combine strictly in order; "pipeline" splits the
     # static dispatch capacity into `pipeline_chunks` 8-aligned chunks

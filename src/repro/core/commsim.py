@@ -117,7 +117,10 @@ def _hier_estimate(setup: PaperSetup, cal: Calibration, topo: Topology,
     crossing back, and the migration locality gain additionally keeps
     ``locality`` of them off the network entirely. Dispatch and combine
     come back split so the overlap model can pipeline the two directions
-    separately.
+    separately. Since ISSUE 5 the deduped payload is *executable*, not
+    just modeled: ``LuffyConfig.hier_dedup="on"`` routes the vanilla
+    exchange through ``repro.condense.wire``, which ships exactly the
+    per-(token, node) rows this estimate prices.
     """
     from repro.plan import estimate_exchange
     return estimate_exchange(

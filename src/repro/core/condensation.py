@@ -1,202 +1,30 @@
-"""Token condensation (paper §V), TPU-adapted.
+"""Token condensation (paper §V) — compatibility shim.
 
-The paper builds a DGL similarity graph over all tokens headed to the same
-expert and keeps one representative per connected component. Dynamic
-graphs don't exist on TPU, so we adapt (see DESIGN.md §3):
-
-* tokens are processed in fixed *condensation groups* of ``G`` tokens
-  (consecutive tokens of the local shard) — similarity is a blocked
-  ``[G, G]`` problem that maps onto the MXU (Pallas kernel in
-  ``repro.kernels.similarity``);
-* §V-A's skip rules become masks: (1) different primary expert ⇒ 0;
-  (2) previous-block similarity ``s_prev > S1`` ⇒ 1, ``< S2`` ⇒ 0;
-  only the uncertain remainder is actually measured (and on TPU the
-  measurement is a masked matmul — the *win* of the skip rules is the
-  smaller uncertain-tile count, which the Pallas kernel exploits with
-  tile-level early-out);
-* connected components + highest-degree representative (§V-B) become
-  ``ceil(log2(G))`` rounds of vectorized min-label propagation;
-* the adaptive threshold (Eq. 2) is computed from the running loss and
-  additionally quantized to a *rate bucket* that selects a compiled
-  executable with capacity ``C' = ceil(C·(1−rate))`` — that is how the
-  traffic reduction becomes real under XLA's static collectives.
+The condensation machinery is a first-class subsystem now:
+:mod:`repro.condense` (DESIGN.md §10) owns the similarity-backend
+registry (``repro.condense.backends``), the :class:`CondensePlan`
+lifecycle (``repro.condense.plan``) and the deduplicated hier wire
+format (``repro.condense.wire``). This module re-exports the historical
+names so existing imports (``repro.core.condensation``) keep working;
+new code should import from :mod:`repro.condense`.
 """
 from __future__ import annotations
 
-import math
-from typing import NamedTuple, Optional, Tuple
+from repro.condense.backends import (available_similarity_backends,
+                                     expected_measured_pairs,
+                                     fast_similarity, get_similarity_backend,
+                                     lsh_codes, pairwise_cosine,
+                                     register_similarity_backend)
+from repro.condense.plan import (CondenseOutput, _components_and_reps,
+                                 adaptive_threshold, condense_tokens,
+                                 pick_rate_bucket, similarity_quantiles,
+                                 uncondense)
 
-import jax
-import jax.numpy as jnp
-
-
-class CondenseOutput(NamedTuple):
-    rep_idx: jnp.ndarray      # [T] int32 — each token's representative (global)
-    is_rep: jnp.ndarray       # [T] bool — True if token represents itself
-    sim: jnp.ndarray          # [n_groups, G, G] f32 — similarity (for s_prev)
-    rate: jnp.ndarray         # [] f32 — fraction of tokens condensed
-
-
-def adaptive_threshold(l_ini, l_prev):
-    """Paper Eq. (2): h_t = 1 / (1 + exp(l_norm))."""
-    l_norm = (l_ini - l_prev) / jnp.maximum(l_ini, 1e-9)
-    return 1.0 / (1.0 + jnp.exp(l_norm))
-
-
-def pick_rate_bucket(threshold: float, sim_quantiles, buckets) -> int:
-    """Host-side: choose the largest bucket whose condensable fraction
-    (estimated from observed similarity quantiles) is supportable.
-
-    sim_quantiles: callable q -> similarity value at quantile q, or an
-    array of per-decile similarity values (len 11, deciles 0..100%).
-    """
-    import numpy as np
-    q = np.asarray(sim_quantiles, dtype=np.float64)
-    # fraction of pairs with similarity above threshold
-    frac = float(np.mean(q >= threshold))
-    best = 0
-    for i, b in enumerate(buckets):
-        if b <= frac + 1e-9:
-            best = i
-    return best
-
-
-def pairwise_cosine(x, eps: float = 1e-8):
-    """[G, d] -> [G, G] normalized cosine similarity in [0, 1]."""
-    xf = x.astype(jnp.float32)
-    n = xf * jax.lax.rsqrt(jnp.sum(xf * xf, -1, keepdims=True) + eps)
-    c = n @ n.T                      # [-1, 1]
-    return (c + 1.0) * 0.5           # paper uses normalized cosine in [0,1]
-
-
-def fast_similarity(x_group, expert_group, s_prev, s1: float, s2: float,
-                    use_kernel: bool = False):
-    """§V-A fast similarity for one group.
-
-    x_group: [G, d]; expert_group: [G] primary expert ids;
-    s_prev: [G, G] similarity from the previous block (or None).
-    Returns (sim [G,G], measured_frac []).
-    """
-    G = x_group.shape[0]
-    same_expert = expert_group[:, None] == expert_group[None, :]
-    if s_prev is not None:
-        known_hi = s_prev > s1
-        known_lo = s_prev < s2
-        uncertain = same_expert & ~known_hi & ~known_lo
-    else:
-        known_hi = jnp.zeros((G, G), bool)
-        known_lo = jnp.zeros((G, G), bool)
-        uncertain = same_expert
-    if use_kernel:
-        from repro.kernels import ops as kops
-        cos = kops.masked_similarity(x_group, uncertain)
-    else:
-        cos = pairwise_cosine(x_group)
-    sim = jnp.where(uncertain, cos, 0.0)
-    sim = jnp.where(known_hi & same_expert, 1.0, sim)
-    sim = jnp.where(~same_expert, 0.0, sim)
-    measured = jnp.mean(uncertain.astype(jnp.float32))
-    return sim, measured
-
-
-def _components_and_reps(adj):
-    """adj: [G, G] bool symmetric (no self loops needed). Returns rep [G]
-    int32 — the index each node condenses to (highest-degree node of its
-    connected component; §V-B).
-    """
-    G = adj.shape[0]
-    idx = jnp.arange(G, dtype=jnp.int32)
-    adj = adj | jnp.eye(G, dtype=bool)
-    labels = idx
-    # min-label propagation; diameter <= G but log2 rounds of
-    # squaring-style propagation converge for the clustered graphs we see.
-    n_iter = max(1, math.ceil(math.log2(G)) + 1)
-    for _ in range(n_iter):
-        neigh_min = jnp.min(jnp.where(adj, labels[None, :], G), axis=1)
-        labels = jnp.minimum(labels, neigh_min.astype(jnp.int32))
-        # propagate through current labels too (pointer jumping)
-        labels = labels[labels]
-    degree = jnp.sum(adj, axis=1).astype(jnp.int32)
-    # highest degree in component, ties -> smallest index
-    score = degree * G + (G - 1 - idx)               # larger is better
-    same = labels[:, None] == labels[None, :]
-    comp_scores = jnp.where(same, score[None, :], -1)
-    rep = jnp.argmax(comp_scores, axis=1).astype(jnp.int32)
-    return rep
-
-
-def condense_tokens(x, primary_expert, threshold, *, group_size: int,
-                    s_prev: Optional[jnp.ndarray] = None,
-                    s1: float = 0.8, s2: float = 0.2,
-                    use_kernel: bool = False) -> CondenseOutput:
-    """Condense local tokens (paper §V).
-
-    x: [T, d] token embeddings (router input); primary_expert: [T];
-    threshold: scalar in [0,1] (runtime value — Eq. 2 or static);
-    s_prev: [n_groups, G, G] similarity carried from the previous block.
-
-    Returns global rep_idx over [T].
-    """
-    T, d = x.shape
-    G = group_size
-    assert T % G == 0, (T, G)
-    n_groups = T // G
-    xg = x.reshape(n_groups, G, d)
-    eg = primary_expert.reshape(n_groups, G)
-
-    def per_group(xb, ebb, spb):
-        sim, measured = fast_similarity(xb, ebb, spb, s1, s2,
-                                        use_kernel=use_kernel)
-        adj = (sim >= threshold) & ~jnp.eye(G, dtype=bool)
-        rep = _components_and_reps(adj)
-        return sim, rep, measured
-
-    if s_prev is None:
-        sims, reps, measured = jax.vmap(
-            lambda a, b: per_group(a, b, None))(xg, eg)
-    else:
-        sims, reps, measured = jax.vmap(per_group)(
-            xg, eg, s_prev.astype(jnp.float32))
-
-    offsets = (jnp.arange(n_groups, dtype=jnp.int32) * G)[:, None]
-    rep_idx = (reps + offsets).reshape(T)
-    is_rep = rep_idx == jnp.arange(T, dtype=jnp.int32)
-    rate = 1.0 - jnp.mean(is_rep.astype(jnp.float32))
-    return CondenseOutput(rep_idx, is_rep, sims, rate)
-
-
-def uncondense(y, rep_idx):
-    """y: [T, d] MoE outputs (garbage at condensed rows); copy each
-    condensed token's value from its representative (token_to_token)."""
-    return jnp.take(y, rep_idx, axis=0)
-
-
-def similarity_quantiles(sim, expert_idx=None, same_expert_only: bool = True):
-    """Decile values of the off-diagonal similarity distribution (host
-    stats for bucket selection / Fig. 5).
-
-    sim: [..., G, G] similarity; expert_idx: [..., G] primary expert ids,
-    required when ``same_expert_only`` — only off-diagonal same-expert
-    pairs (the pairs condensation can actually merge) enter the
-    distribution, not the mostly-zero full matrix. Host-side numpy (the
-    selection size is data-dependent, so this is not traceable); returns
-    the 11 decile values ``pick_rate_bucket`` consumes.
-    """
-    import numpy as np
-    s = np.asarray(sim, np.float64)
-    G = s.shape[-1]
-    s = s.reshape(-1, s.shape[-2], G)
-    off_diag = ~np.eye(G, dtype=bool)
-    if same_expert_only:
-        if expert_idx is None:
-            raise ValueError(
-                "same_expert_only=True needs expert_idx to identify "
-                "same-expert pairs (or pass same_expert_only=False)")
-        e = np.asarray(expert_idx).reshape(-1, G)
-        mask = (e[:, :, None] == e[:, None, :]) & off_diag[None]
-    else:
-        mask = np.broadcast_to(off_diag[None], s.shape)
-    vals = s[mask]
-    if vals.size == 0:
-        vals = np.zeros((1,), np.float64)
-    return np.quantile(vals, np.linspace(0.0, 1.0, 11))
+__all__ = [
+    "CondenseOutput", "_components_and_reps", "adaptive_threshold",
+    "available_similarity_backends", "condense_tokens",
+    "expected_measured_pairs", "fast_similarity",
+    "get_similarity_backend", "lsh_codes", "pairwise_cosine",
+    "pick_rate_bucket", "register_similarity_backend",
+    "similarity_quantiles", "uncondense",
+]

@@ -182,10 +182,10 @@ def moe_decode_allreduce(params, x, cfg: ModelConfig, *, capacity: int,
         y = y + sh.astype(y.dtype)
     kept = jnp.sum(keep.astype(jnp.float32))
     d_drop = 1.0 - jnp.sum(valid.astype(jnp.float32)) / jnp.maximum(kept, 1.0)
-    aux = MoEAux(gate.aux_loss, d_drop, jnp.float32(0.0), jnp.float32(0.0),
-                 jnp.float32(1.0 / max(M, 1)), jnp.float32(0.0),
-                 jnp.float32(0.0), jnp.float32(0.0), jnp.float32(0.0),
-                 jnp.float32(0.0), jnp.float32(0.0), jnp.float32(0.0))
+    z = jnp.float32(0.0)
+    aux = MoEAux(gate.aux_loss, d_drop, z, z,
+                 jnp.float32(1.0 / max(M, 1)),
+                 *([z] * (N_AUX - 5)))
     return y, aux
 
 
@@ -200,14 +200,17 @@ def moe_core_planned(params, x, sideband: Dict[str, Array],
                      group_size: int = 128, combine_slack: float = 1.0,
                      use_kernel: bool = False,
                      comm: Optional[CommContext] = None,
-                     reuse_from=None, plan_template=None):
+                     reuse_from=None, condense_reuse_from=None,
+                     plan_template=None):
     """``moe_core`` that also returns the :class:`ExchangePlan` it built
     — the plan-lifecycle entry point (DESIGN.md §9). ``reuse_from``
     threads a prior plan/signature into ``build_exchange_plan``'s
-    revalidation fast path; ``plan_template`` (a cached static template
-    from :class:`repro.plan.cache.PlanCache`) switches the vanilla path
-    to ``instantiate_plan``, skipping planning entirely.
-    Returns (y, new_sideband, s_next, aux, plan)."""
+    revalidation fast path; ``condense_reuse_from`` (a
+    :class:`repro.condense.CondenseCarry`) does the same for the
+    condensation map (DESIGN.md §10); ``plan_template`` (a cached static
+    template from :class:`repro.plan.cache.PlanCache`) switches the
+    vanilla path to ``instantiate_plan``, skipping planning entirely.
+    Returns (y, new_sideband, s_next, aux, plan, cond_carry)."""
     from repro.models.blocks import _dtype
     from repro.plan.exchange import instantiate_plan
     comm = CommContext.ensure(comm, axis_name)
@@ -224,9 +227,10 @@ def moe_core_planned(params, x, sideband: Dict[str, Array],
             gate, xn, cfg, luffy, comm, mode=mode, capacity=capacity,
             sideband=sideband, threshold=threshold, s_prev=s_prev,
             group_size=group_size, combine_slack=combine_slack,
-            use_kernel=use_kernel, reuse_from=reuse_from)
+            use_kernel=use_kernel, reuse_from=reuse_from,
+            condense_reuse_from=condense_reuse_from)
     y, aux = execute_plan(params, x, sideband, plan, cfg)
-    return y, aux.sideband, aux.s_next, aux.moe, plan
+    return y, aux.sideband, aux.s_next, aux.moe, plan, aux.cond_carry
 
 
 def moe_core(params, x, sideband: Dict[str, Array], cfg: ModelConfig,
@@ -258,7 +262,7 @@ def moe_core(params, x, sideband: Dict[str, Array], cfg: ModelConfig,
     ``reuse_from``/``plan_template``; this historical entry point keeps
     the 4-tuple contract.)
     """
-    y, sb, s_next, aux, _ = moe_core_planned(
+    y, sb, s_next, aux, _, _ = moe_core_planned(
         params, x, sideband, cfg, luffy, mode=mode, capacity=capacity,
         axis_name=axis_name, threshold=threshold, s_prev=s_prev,
         group_size=group_size, combine_slack=combine_slack,

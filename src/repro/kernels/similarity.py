@@ -9,6 +9,12 @@ flow is poison on a systolic array; tile granularity is free).
 
 Grid: (G/bg, G/bg); each program computes one [bg, bg] tile of the Gram
 matrix by streaming d in [bd]-sized VMEM slabs.
+
+The mask arrives from a similarity *backend* (DESIGN.md §10,
+``repro.condense.backends``): the "exact" backend passes the §V-A
+uncertain mask; the "lsh" backend additionally restricts it to LSH
+bucket collisions, which empties whole tiles and lets the early-out skip
+them — :func:`mask_tile_fraction` reports exactly that win.
 """
 from __future__ import annotations
 
@@ -51,6 +57,24 @@ def _sim_kernel(mask_any_ref, x_ref, y_ref, mask_ref, out_ref, *, bd, d):
     @pl.when(mask_any_ref[0, 0] == 0)
     def skip():
         out_ref[...] = jnp.zeros_like(out_ref)
+
+
+def mask_tile_fraction(mask, bg: int = DEFAULT_BG) -> float:
+    """Host-side: fraction of [bg, bg] output tiles with ≥1 True entry —
+    the tiles the kernel must actually compute (everything else hits the
+    early-out). The condensation-backend benchmark reports this per
+    backend to show the LSH bucketing win at tile granularity."""
+    import numpy as np
+    m = np.asarray(mask)
+    G = m.shape[-1]
+    b = min(bg, G)
+    if G % b:
+        pad = b - G % b
+        m = np.pad(m, [(0, 0)] * (m.ndim - 2) + [(0, pad), (0, pad)])
+        G = m.shape[-1]
+    nt = G // b
+    tiles = m.reshape(m.shape[:-2] + (nt, b, nt, b)).any(axis=(-3, -1))
+    return float(tiles.mean())
 
 
 @functools.partial(jax.jit, static_argnames=("bg", "bd", "interpret"))

@@ -89,7 +89,11 @@ def parse_collectives(hlo_text: str):
 
 
 def comm_traffic_ledger(cfg, shape, mesh, *, nodes: int = 0,
-                        exec_chunks: int = 0, plan_reuse: str = "off"):
+                        exec_chunks: int = 0, plan_reuse: str = "off",
+                        similarity_backend: str = "exact",
+                        lsh_bits: int = 8, condense_reuse: str = "off",
+                        hier_dedup: str = "off",
+                        condense_group: int = 128):
     """Analytic per-step dispatch traffic split by link tier (DESIGN.md §5)
     plus the modeled compute/communication overlap (§6).
 
@@ -192,6 +196,50 @@ def comm_traffic_ledger(cfg, shape, mesh, *, nodes: int = 0,
         "planning_ms_saved_per_step": reused * plan_ms
         - checks * reval_ms,
     }
+
+    # ---- condensation ledger (DESIGN.md §10) -----------------------------
+    # Per-backend measured-pair model (uniform first-block routing), the
+    # dedup-wire bytes (modeled inter_bytes_dedup == shipped when the
+    # wire is on — the executor asserts the traced equality), and the
+    # condense-plan build/reuse counters under the same stable-routing
+    # model as plan_reuse above.
+    from repro.condense import expected_measured_pairs
+    from repro.plan import estimate_similarity_ms
+    G = min(condense_group, shape.seq_len)
+    tokens_l = max(1, tokens // mesh.devices.size)   # per-device groups
+    pairs = {b: expected_measured_pairs(
+        tokens_l, G, cfg.moe.num_experts, backend=b, lsh_bits=lsh_bits)
+        * mesh.devices.size
+        for b in ("exact", "lsh")}
+    # one build runs per device in parallel: price the per-device share
+    sim_ms = {b: estimate_similarity_ms(p / mesh.devices.size,
+                                        cfg.d_model)
+              for b, p in pairs.items()}
+    b0 = out["buckets"]["0.0"]
+    c_built = n_moe if condense_reuse == "off" else min(1, n_moe)
+    c_reused = n_moe - c_built
+    out["condensation"] = {
+        "backend": similarity_backend,
+        "group_size": G,
+        "lsh_bits": lsh_bits,
+        "measured_pairs_per_step": pairs,
+        "similarity_ms_per_build": sim_ms,
+        "dedup_wire": {
+            "enabled": hier_dedup == "on",
+            "modeled_inter_bytes": b0["hier"]["inter_bytes"],
+            "flat_inter_bytes": b0["flat"]["inter_bytes"],
+            "shipped_inter_bytes": (b0["hier"]["inter_bytes"]
+                                    if hier_dedup == "on" else
+                                    b0["flat"]["inter_bytes"]),
+        },
+        "condense_plan": {
+            "mode": condense_reuse,
+            "built_per_step": c_built,
+            "reused_per_step": c_reused,
+            "similarity_ms_saved_per_step":
+                c_reused * sim_ms[similarity_backend],
+        },
+    }
     return out
 
 
@@ -200,7 +248,9 @@ def run_pair(arch: str, shape_name: str, multi_pod: bool,
              bucket: int = 0, variant: str = "baseline",
              nodes: int = 0, exec_mode: str = "sync",
              pipeline_chunks: int = 4, plan_objective: str = "traffic",
-             plan_reuse: str = "off"):
+             plan_reuse: str = "off", similarity_backend: str = "exact",
+             lsh_bits: int = 8, condense_reuse: str = "off",
+             hier_dedup: str = "off"):
     import jax
     import jax.numpy as jnp
     from repro import optim, serve_lib, train_lib
@@ -246,7 +296,9 @@ def run_pair(arch: str, shape_name: str, multi_pod: bool,
         enable_migration=luffy_on and cfg.uses_moe,
         comm_mode="hier" if nodes > 1 else "flat",
         exec_mode=exec_mode, pipeline_chunks=pipeline_chunks,
-        plan_objective=plan_objective, plan_reuse=plan_reuse)
+        plan_objective=plan_objective, plan_reuse=plan_reuse,
+        similarity_backend=similarity_backend, lsh_bits=lsh_bits,
+        condense_reuse=condense_reuse, hier_dedup=hier_dedup)
 
     if shape.mode == "train":
         # 100B+ models: full f32 Adam moments cannot fit 16GB/chip even at
@@ -378,7 +430,10 @@ def run_pair(arch: str, shape_name: str, multi_pod: bool,
         "comm_ledger": (comm_traffic_ledger(
             cfg, shape, mesh, nodes=nodes,
             exec_chunks=(pipeline_chunks if exec_mode == "pipeline"
-                         else 0), plan_reuse=plan_reuse)
+                         else 0), plan_reuse=plan_reuse,
+            similarity_backend=similarity_backend, lsh_bits=lsh_bits,
+            condense_reuse=condense_reuse, hier_dedup=hier_dedup,
+            condense_group=luffy.condense_group)
                         if shape.mode == "train" else None),
     })
     out_path.parent.mkdir(parents=True, exist_ok=True)
@@ -484,6 +539,20 @@ def main():
                     help="cross-layer plan reuse; also selects the "
                          "comm_ledger plan_reuse section's modeled "
                          "mode (DESIGN.md §9)")
+    ap.add_argument("--similarity-backend", default="exact",
+                    choices=["exact", "lsh"],
+                    help="condensation similarity backend "
+                         "(repro.condense.backends, DESIGN.md §10)")
+    ap.add_argument("--lsh-bits", type=int, default=8,
+                    help="projections per LSH bucket code")
+    ap.add_argument("--condense-reuse", default="off",
+                    choices=["off", "signature", "always"],
+                    help="cross-layer condense-plan reuse; also selects "
+                         "the comm_ledger condensation section's "
+                         "modeled mode (DESIGN.md §10)")
+    ap.add_argument("--hier-dedup", default="off", choices=["off", "on"],
+                    help="deduplicated hier wire format "
+                         "(repro.condense.wire; needs --nodes > 1)")
     args = ap.parse_args()
     from repro.config import resolve_pipeline_chunks
     args.pipeline_chunks = resolve_pipeline_chunks(args.pipeline_chunks,
@@ -500,6 +569,12 @@ def main():
         mesh_tag += f"__{args.plan_objective}"
     if args.plan_reuse != "off":
         mesh_tag += f"__reuse-{args.plan_reuse}"
+    if args.similarity_backend != "exact":
+        mesh_tag += f"__{args.similarity_backend}"
+    if args.condense_reuse != "off":
+        mesh_tag += f"__creuse-{args.condense_reuse}"
+    if args.hier_dedup != "off":
+        mesh_tag += "__dedup"
     out = Path(args.out) if args.out else \
         ARTIFACTS / f"{args.arch}__{args.shape}__{mesh_tag}.json"
     out.parent.mkdir(parents=True, exist_ok=True)
@@ -510,7 +585,11 @@ def main():
                  exec_mode=args.exec_mode,
                  pipeline_chunks=args.pipeline_chunks,
                  plan_objective=args.plan_objective,
-                 plan_reuse=args.plan_reuse)
+                 plan_reuse=args.plan_reuse,
+                 similarity_backend=args.similarity_backend,
+                 lsh_bits=args.lsh_bits,
+                 condense_reuse=args.condense_reuse,
+                 hier_dedup=args.hier_dedup)
     except Exception as e:
         rec = {"arch": args.arch, "shape": args.shape, "mesh": mesh_tag,
                "variant": args.variant, "status": "error",

@@ -48,6 +48,15 @@ def main():
     ap.add_argument("--precompute-plans", action="store_true",
                     help="warm --plan-cache with this run's prefill "
                          "shape before serving (ahead-of-time planning)")
+    ap.add_argument("--hier-dedup", default="off", choices=["off", "on"],
+                    help="deduplicated hier wire format on the batched "
+                         "prefill exchange (repro.condense.wire, "
+                         "DESIGN.md §10): each prompt token's payload "
+                         "crosses the inter-node links once per (token, "
+                         "node) — serving never condenses, but the "
+                         "top-k copy dedup still applies. Needs a "
+                         "hierarchical mesh; the flat host mesh keeps "
+                         "the dense wire")
     ap.add_argument("--plan-objective", default="traffic",
                     choices=["traffic", "overlap"],
                     help="migration planner objective (DESIGN.md §7). "
@@ -85,7 +94,8 @@ def main():
     luffy = LuffyConfig(enable_condensation=False, enable_migration=False,
                         exec_mode=args.exec_mode,
                         pipeline_chunks=pipeline_chunks,
-                        plan_objective=args.plan_objective)
+                        plan_objective=args.plan_objective,
+                        hier_dedup=args.hier_dedup)
     print(f"exec_mode={args.exec_mode} chunks={pipeline_chunks} "
           f"plan_objective={args.plan_objective} "
           f"plan_cache={args.plan_cache or 'off'}")

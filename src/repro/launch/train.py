@@ -67,6 +67,28 @@ def main():
                          "§9): replan every MoE sublayer, revalidate a "
                          "carried plan by routing signature, or trust "
                          "it unconditionally")
+    ap.add_argument("--similarity-backend", default="exact",
+                    choices=["exact", "lsh"],
+                    help="condensation similarity backend (DESIGN.md "
+                         "§10): measure every §V-A uncertain pair, or "
+                         "only LSH-bucket collisions (fewer measured "
+                         "pairs for large groups)")
+    ap.add_argument("--lsh-bits", type=int, default=8,
+                    help="signed random projections per LSH bucket code")
+    ap.add_argument("--condense-reuse", default="off",
+                    choices=["off", "signature", "always"],
+                    help="cross-layer condense-plan reuse (DESIGN.md "
+                         "§10): rebuild similarity every MoE sublayer, "
+                         "revalidate the carried rep map by primary-"
+                         "expert signature, or trust it up to the age "
+                         "bound")
+    ap.add_argument("--condense-max-age", type=int, default=4,
+                    help="staleness bound (sublayers) on a reused "
+                         "condense plan (§V-A freshness)")
+    ap.add_argument("--hier-dedup", default="off", choices=["off", "on"],
+                    help="ship the per-node-deduplicated hier payload "
+                         "(repro.condense.wire; needs --comm-mode hier, "
+                         "vanilla sync exchange)")
     ap.add_argument("--no-condensation", action="store_true")
     ap.add_argument("--no-migration", action="store_true")
     ap.add_argument("--optimizer", default="adamw")
@@ -130,7 +152,12 @@ def main():
         exec_mode=args.exec_mode,
         pipeline_chunks=pipeline_chunks,
         plan_objective=args.plan_objective,
-        plan_reuse=args.plan_reuse)
+        plan_reuse=args.plan_reuse,
+        similarity_backend=args.similarity_backend,
+        lsh_bits=args.lsh_bits,
+        condense_reuse=args.condense_reuse,
+        condense_reuse_max_age=args.condense_max_age,
+        hier_dedup=args.hier_dedup)
     ocfg = OptimConfig(name=args.optimizer, lr=args.lr,
                        total_steps=args.steps,
                        warmup_steps=max(2, args.steps // 20))

@@ -255,15 +255,20 @@ def _pmean_all(v, axes):
 
 def _moe_apply_dist(p_moe, x, sideband, s_prev, threshold, cfg, luffy,
                     dist: DistContext, mode: str, capacity: int,
-                    plan_carry=None, plan_template=None):
+                    plan_carry=None, cond_carry=None, plan_template=None):
     """Wrap moe_core in shard_map when a mesh is present.
 
     plan_carry (DESIGN.md §9): the cross-sublayer plan-reuse state —
     ``{"counts", "lens", "valid"}`` global arrays threaded through the
     layer scan; None disables threading (the return slot is then None).
+    cond_carry (DESIGN.md §10): the condense-reuse state — ``{"rep"
+    [B,S], "cexp" [B,S], "age" [B], "valid" [B]}`` — threaded the same
+    way whenever condensation is on (every ``condense_reuse`` mode, for
+    graph parity).
     plan_template: a cached static :class:`ExchangePlan` template (the
     serving path) routed to ``instantiate_plan`` instead of a build.
-    Returns (y, sideband, s_next, aux, plan_carry_out)."""
+    Returns (y, sideband, s_next, aux, plan_carry_out, cond_carry_out)."""
+    from repro.condense.plan import CondenseCarry
     from repro.plan.exchange import PlanSignature
     if mode == "decode" and dist.enabled and dist.model_size > 1:
         # decode: tokens replicated over the model axis; all-reduce MoE
@@ -309,19 +314,25 @@ def _moe_apply_dist(p_moe, x, sideband, s_prev, threshold, cfg, luffy,
                        jax.tree.map(lambda _: P(),
                                     moe.MoEAux(*([0.0] * moe.N_AUX)))))
         y, aux = fn(p_moe, x)
-        return y, dict(sideband), None, aux, plan_carry
+        return y, dict(sideband), None, aux, plan_carry, cond_carry
     if not dist.enabled or dist.model_size == 1:
         sb = dict(sideband)
         reuse = None
         if plan_carry is not None:
             reuse = PlanSignature(plan_carry["counts"], plan_carry["lens"],
                                   plan_carry["valid"])
-        y, sb2, s_next, aux, plan = moe.moe_core_planned(
+        creuse = None
+        if cond_carry is not None:
+            creuse = CondenseCarry(cond_carry["rep"].reshape(-1),
+                                   cond_carry["cexp"].reshape(-1),
+                                   cond_carry["age"], cond_carry["valid"])
+        y, sb2, s_next, aux, plan, cc = moe.moe_core_planned(
             p_moe, x, sb, cfg, luffy, mode=mode, capacity=capacity,
             axis_name=None, threshold=threshold, s_prev=s_prev,
             group_size=luffy.condense_group,
             combine_slack=luffy.combine_slack, use_kernel=luffy.use_kernels,
-            reuse_from=reuse, plan_template=plan_template)
+            reuse_from=reuse, condense_reuse_from=creuse,
+            plan_template=plan_template)
         if s_next is not None:
             G = luffy.condense_group
             s_next = s_next.reshape(x.shape[0], x.shape[1] // G, G, G)
@@ -330,7 +341,10 @@ def _moe_apply_dist(p_moe, x, sideband, s_prev, threshold, cfg, luffy,
             sig = plan.signature
             carry_out = {"counts": sig.counts, "lens": sig.lens,
                          "valid": sig.valid}
-        return y, sb2, s_next, aux, carry_out
+        cond_out = None
+        if cond_carry is not None:
+            cond_out = cond_carry if cc is None else cc
+        return y, sb2, s_next, aux, carry_out, cond_out
 
     mesh = dist.mesh
     all_axes = tuple(mesh.axis_names)
@@ -346,8 +360,10 @@ def _moe_apply_dist(p_moe, x, sideband, s_prev, threshold, cfg, luffy,
     comm_ctx = rcomm.CommContext.build(luffy.comm_mode, dist.model_axis,
                                        dist.topology)
     has_pc = plan_carry is not None
+    has_cc = cond_carry is not None
 
-    def inner(p_moe_l, x_l, lbl, slen, sp, thr, pcc, pcl, pcv):
+    def inner(p_moe_l, x_l, lbl, slen, sp, thr, pcc, pcl, pcv,
+              ccr, cce, cca, ccv):
         if fsdp:
             # explicit bf16 FSDP all-gather of the expert F-dim shards;
             # leaving this to GSPMD hoists an f32 convert before the
@@ -359,13 +375,16 @@ def _moe_apply_dist(p_moe, x, sideband, s_prev, threshold, cfg, luffy,
                 for k, w in p_moe_l["experts"].items()}
         sb = {"labels": lbl, "seq_len": slen}
         reuse = PlanSignature(pcc, pcl, pcv) if has_pc else None
-        y, sb2, s_next, aux, plan = moe.moe_core_planned(
+        creuse = (CondenseCarry(ccr.reshape(-1), cce.reshape(-1), cca, ccv)
+                  if has_cc else None)
+        y, sb2, s_next, aux, plan, cc = moe.moe_core_planned(
             p_moe_l, x_l, sb, cfg, luffy, mode=mode, capacity=capacity,
             comm=comm_ctx, threshold=thr,
             s_prev=(sp if has_sp else None),
             group_size=luffy.condense_group,
             combine_slack=luffy.combine_slack, use_kernel=luffy.use_kernels,
-            reuse_from=reuse, plan_template=plan_template)
+            reuse_from=reuse, condense_reuse_from=creuse,
+            plan_template=plan_template)
         aux = jax.tree.map(lambda a: _pmean_all(a, all_axes), aux)
         if s_next is None:
             s_next = jnp.zeros((1,), jnp.float32)    # placeholder
@@ -381,8 +400,11 @@ def _moe_apply_dist(p_moe, x, sideband, s_prev, threshold, cfg, luffy,
             pcc = rcomm.pvary_all(sig.counts, all_axes)
             pcl = rcomm.pvary_all(sig.lens, all_axes)
             pcv = sig.valid
+        if has_cc and cc is not None:
+            ccr, cce = cc["rep"], cc["cexp"]
+            cca, ccv = cc["age"], cc["valid"]
         return (y, sb2["labels"], sb2["seq_len"], s_next, aux,
-                pcc, pcl, pcv)
+                pcc, pcl, pcv, ccr, cce, cca, ccv)
 
     ma = dist.model_axis              # "model" or ("node", "local")
     moe_specs = jax.tree.map(lambda _: P(), p_moe)
@@ -395,31 +417,42 @@ def _moe_apply_dist(p_moe, x, sideband, s_prev, threshold, cfg, luffy,
     s_out_spec = sp_spec if (luffy.enable_condensation and mode != "decode") \
         else P()
     zp = jnp.zeros((1,), jnp.float32)
+    zpi = jnp.zeros((1,), jnp.int32)
     pc_counts_spec = P(bax, None) if has_pc else P()
     pc_lens_spec = P(bax) if has_pc else P()
     pc_args = ((plan_carry["counts"], plan_carry["lens"],
                 plan_carry["valid"]) if has_pc else (zp, zp, zp))
+    cc_map_spec = P(bax, None) if has_cc else P()
+    cc_seq_spec = P(bax) if has_cc else P()
+    cc_args = ((cond_carry["rep"], cond_carry["cexp"], cond_carry["age"],
+                cond_carry["valid"]) if has_cc else (zpi, zpi, zp, zp))
     fn = rcomm.shard_map(
         inner, mesh=mesh,
         in_specs=(moe_specs, x_spec, lbl_spec, len_spec, sp_in, P(),
-                  pc_counts_spec, pc_lens_spec, P()),
+                  pc_counts_spec, pc_lens_spec, P(),
+                  cc_map_spec, cc_map_spec, cc_seq_spec, cc_seq_spec),
         out_specs=(x_spec, lbl_spec, len_spec, s_out_spec,
                    jax.tree.map(lambda _: P(),
                                 moe.MoEAux(*([0.0] * moe.N_AUX))),
-                   pc_counts_spec, pc_lens_spec, P()))
-    y, lbl2, slen2, s_next, aux, pcc2, pcl2, pcv2 = fn(
+                   pc_counts_spec, pc_lens_spec, P(),
+                   cc_map_spec, cc_map_spec, cc_seq_spec, cc_seq_spec))
+    (y, lbl2, slen2, s_next, aux, pcc2, pcl2, pcv2,
+     ccr2, cce2, cca2, ccv2) = fn(
         p_moe, x, sideband["labels"], sideband["seq_len"], sp_arg,
-        threshold, *pc_args)
+        threshold, *pc_args, *cc_args)
     if not (luffy.enable_condensation and mode != "decode"):
         s_next = None
     carry_out = ({"counts": pcc2, "lens": pcl2, "valid": pcv2}
                  if has_pc else None)
-    return y, {"labels": lbl2, "seq_len": slen2}, s_next, aux, carry_out
+    cond_out = ({"rep": ccr2, "cexp": cce2, "age": cca2, "valid": ccv2}
+                if has_cc else None)
+    return y, {"labels": lbl2, "seq_len": slen2}, s_next, aux, carry_out, \
+        cond_out
 
 
 def _layer_full(p, cfg, luffy, dist, x, sideband, s_prev, threshold,
                 j, *, causal, enc_out, enc_pos, moe_mode, capacity,
-                plan_carry=None):
+                plan_carry=None, cond_carry=None):
     # NOTE: the window pattern repeats with the scan period, so the static
     # pattern position ``j`` fully determines this layer's window — no
     # traced layer index may reach ``window_for_layer``.
@@ -435,9 +468,10 @@ def _layer_full(p, cfg, luffy, dist, x, sideband, s_prev, threshold,
     x = dist.constrain(x, dist.act_spec())
     kind = cfg.ffn_kind(j)
     if kind == "moe":
-        x, sideband, s_prev, aux, plan_carry = _moe_apply_dist(
+        x, sideband, s_prev, aux, plan_carry, cond_carry = _moe_apply_dist(
             p["moe"], x, sideband, s_prev, threshold, cfg, luffy, dist,
-            moe_mode, capacity, plan_carry=plan_carry)
+            moe_mode, capacity, plan_carry=plan_carry,
+            cond_carry=cond_carry)
         x = dist.constrain(x, dist.act_spec())
     else:
         xn = bk.norm_apply(p["ffn_norm"], x, cfg.norm)
@@ -446,7 +480,7 @@ def _layer_full(p, cfg, luffy, dist, x, sideband, s_prev, threshold,
         else:
             x = x + bk.ffn_apply(p["ffn"], cfg, xn)
         aux = moe.MoEAux(*([jnp.float32(0.0)] * moe.N_AUX))
-    return x, sideband, s_prev, aux, plan_carry
+    return x, sideband, s_prev, aux, plan_carry, cond_carry
 
 
 # ---------------------------------------------------------------------------
@@ -592,23 +626,39 @@ def forward_train(params, cfg: ModelConfig, luffy: LuffyConfig,
         pc0 = {"counts": jnp.zeros((1,), jnp.float32),
                "lens": jnp.zeros((1,), jnp.float32),
                "valid": jnp.float32(0.0)}
+    # Condense-reuse carry (DESIGN.md §10): the carried rep map +
+    # signature threads through the scan whenever condensation is on —
+    # for EVERY condense_reuse mode ("off" pins the valid flag to 0), so
+    # the compiled graphs stay structurally identical across modes (the
+    # same graph-parity discipline as the migration carry above).
+    use_creuse = use_cond
+    if use_creuse:
+        cc0 = {"rep": jnp.zeros((B, S), jnp.int32),
+               "cexp": jnp.zeros((B, S), jnp.int32),
+               "age": jnp.zeros((B,), jnp.float32),
+               "valid": jnp.zeros((B,), jnp.float32)}
+    else:
+        cc0 = {"rep": jnp.zeros((1,), jnp.int32),
+               "cexp": jnp.zeros((1,), jnp.int32),
+               "age": jnp.zeros((1,), jnp.float32),
+               "valid": jnp.zeros((1,), jnp.float32)}
 
     def group_body(carry, p_group):
-        x, sb, sp, pc, aux_sum = carry
+        x, sb, sp, pc, cc, aux_sum = carry
         for j in range(period):
 
-            def apply_j(x, sb, sp, pc, pj=p_group[j], jj=j):
+            def apply_j(x, sb, sp, pc, cc, pj=p_group[j], jj=j):
                 return _layer_full(
                     pj, cfg, eff_luffy, dist, x, sb, sp, threshold,
                     jj, causal=cfg.causal, enc_out=enc_out,
                     enc_pos=enc_pos, moe_mode=moe_mode, capacity=capacity,
-                    plan_carry=pc)
+                    plan_carry=pc, cond_carry=cc)
 
             if cfg.remat:
                 apply_j = jax.checkpoint(apply_j)
-            x, sb, sp, aux, pc = apply_j(x, sb, sp, pc)
+            x, sb, sp, aux, pc, cc = apply_j(x, sb, sp, pc, cc)
             aux_sum = jax.tree.map(lambda a, b: a + b, aux_sum, aux)
-        return (x, sb, sp, pc, aux_sum), None
+        return (x, sb, sp, pc, cc, aux_sum), None
 
     aux0 = moe.MoEAux(*([jnp.float32(0.0)] * moe.N_AUX))
     n_groups = cfg.num_layers // period
@@ -618,19 +668,22 @@ def forward_train(params, cfg: ModelConfig, luffy: LuffyConfig,
         s_prev0 = jnp.zeros((1,), jnp.float32)  # dummy carried value
 
     def scan_body(carry, xs):
-        (x, sb, sp, pc, aux_sum) = carry
+        (x, sb, sp, pc, cc, aux_sum) = carry
         sp_real = sp if use_cond else None
         pc_real = pc if use_reuse else None
-        (x, sb, sp_new, pc_new, aux_sum), _ = group_body(
-            (x, sb, sp_real, pc_real, aux_sum), xs)
+        cc_real = cc if use_creuse else None
+        (x, sb, sp_new, pc_new, cc_new, aux_sum), _ = group_body(
+            (x, sb, sp_real, pc_real, cc_real, aux_sum), xs)
         if not use_cond:
             sp_new = sp
         if not use_reuse:
             pc_new = pc
-        return (x, sb, sp_new, pc_new, aux_sum), None
+        if not use_creuse:
+            cc_new = cc
+        return (x, sb, sp_new, pc_new, cc_new, aux_sum), None
 
-    (x, sideband, s_prev, _pc, aux_sum), _ = jax.lax.scan(
-        scan_body, (x, sideband, s_prev0, pc0, aux0), stacked)
+    (x, sideband, s_prev, _pc, _cc, aux_sum), _ = jax.lax.scan(
+        scan_body, (x, sideband, s_prev0, pc0, cc0, aux0), stacked)
 
     sl, sc = chunked_xent(params, cfg, x, sideband["labels"])
     if dist.enabled:
@@ -653,12 +706,18 @@ def forward_train(params, cfg: ModelConfig, luffy: LuffyConfig,
         "traffic_after": aux_mean.traffic_after,
         "inter_bytes_flat": aux_mean.inter_bytes_flat,
         "inter_bytes_dedup": aux_mean.inter_bytes_dedup,
+        "inter_bytes_shipped": aux_mean.inter_bytes_shipped,
         # plan-reuse ledger (DESIGN.md §9): per-forward COUNTS (sums over
         # MoE sublayers, device-mean), not per-sublayer means — so
         # "plans_built == 1.0" reads as "one full replan this forward"
         "plans_built": aux_sum.plans_built,
         "plans_reused": aux_sum.plans_reused,
         "plan_reuse_mismatch": aux_sum.reuse_mismatch,
+        # condensation ledger (DESIGN.md §10): similarity builds per
+        # forward + pairs the backend actually measured (sums)
+        "measured_pairs": aux_sum.measured_pairs,
+        "condense_built": aux_sum.condense_built,
+        "condense_reused": aux_sum.condense_reused,
     }
     return total, metrics
 

@@ -18,7 +18,8 @@ from repro.plan.cache import (PlanCache, build_plan_template, plan_key,
                               topology_fingerprint)
 from repro.plan.estimate import (PlanEstimate, estimate_exchange,
                                  estimate_planning_ms,
-                                 estimate_revalidate_ms)
+                                 estimate_revalidate_ms,
+                                 estimate_similarity_ms)
 from repro.plan.exchange import (ExchangeAux, ExchangePlan, MoEAux, N_AUX,
                                  PlanSignature, build_exchange_plan,
                                  execute_plan, instantiate_plan,
@@ -37,7 +38,8 @@ __all__ = [
     "ObjectiveContext", "PlanCache", "PlanEstimate", "PlanFormatError",
     "PlanSignature", "available_objectives", "build_exchange_plan",
     "build_plan_template", "estimate_exchange", "estimate_planning_ms",
-    "estimate_revalidate_ms", "execute_plan", "from_bytes",
+    "estimate_revalidate_ms", "estimate_similarity_ms", "execute_plan",
+    "from_bytes",
     "get_objective", "instantiate_plan", "invalid_signature",
     "next_signature", "plan_key", "plan_migration_with_objective",
     "plan_static_schedule", "precompute_prefill_plans",

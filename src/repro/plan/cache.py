@@ -52,18 +52,28 @@ def plan_key(*, n_seq: int, seq_len: int, d_model: int, capacity: int,
              exec_mode: str, pipeline_chunks: int, comm_mode: str,
              topo: Optional[Topology], M: int,
              compute_dtype: str = "bfloat16",
-             gpu_speed: float = 1.0e13, d_ff: int = 0) -> str:
+             gpu_speed: float = 1.0e13, d_ff: int = 0,
+             hier_dedup: str = "off",
+             params_version: str = "0") -> str:
     """The cache key: batch shape × seq len × objective × topology
     fingerprint, plus every knob that selects the static schedule
     (``gpu_speed``/``d_ff`` price the FFN stage the chunk search
-    overlaps against). ``n_seq``/``seq_len`` are the PER-DEVICE sequence
-    slots and (possibly sequence-sharded) token count the MoE sublayer
-    sees."""
+    overlaps against) and the wire format (``hier_dedup`` selects the
+    executed exchange, DESIGN.md §10). ``n_seq``/``seq_len`` are the
+    PER-DEVICE sequence slots and (possibly sequence-sharded) token
+    count the MoE sublayer sees.
+
+    ``params_version`` is a router/optimizer-step fingerprint (ISSUE 5
+    satellite): vanilla serving plans hold no routing and use the
+    default "0", but a migrate-mode plan cached across training steps
+    bakes the router's decisions in — keying (and the serialized
+    header, ``repro.plan.serial``) on the fingerprint guarantees a
+    stale assignment is never trusted after an optimizer step."""
     return (f"b{n_seq}_s{seq_len}_d{d_model}_f{d_ff}_c{capacity}"
             f"_k{top_k}_e{num_experts}_{mode}_{objective}"
             f"_{exec_mode}{pipeline_chunks}_p{gpu_speed:.4g}"
             f"_{comm_mode}_{topology_fingerprint(topo, M)}"
-            f"_{compute_dtype}")
+            f"_{compute_dtype}_w{hier_dedup}_pv{params_version}")
 
 
 class PlanCache:
@@ -77,11 +87,15 @@ class PlanCache:
     """
 
     def __init__(self, path: Optional[Union[str, Path]] = None,
-                 mem_capacity: int = 64):
+                 mem_capacity: int = 64, params_version: str = "0"):
         self.path = None if path is None else Path(path)
         if self.path is not None:
             self.path.mkdir(parents=True, exist_ok=True)
         self.mem_capacity = int(mem_capacity)
+        # router/optimizer-step fingerprint stamped into every spilled
+        # plan and demanded back on load: a blob written at another
+        # params_version is a miss, never a trusted stale plan
+        self.params_version = str(params_version)
         self._mem: "OrderedDict[str, ExchangePlan]" = OrderedDict()
         self.hits = 0
         self.misses = 0
@@ -103,7 +117,9 @@ class PlanCache:
         f = self._file(key)
         if f is not None and f.exists():
             try:
-                plan = serial.from_bytes(f.read_bytes())
+                plan = serial.from_bytes(
+                    f.read_bytes(),
+                    expect_params_version=self.params_version)
             except Exception:        # stale/corrupt/foreign file: a
                 plan = None          # miss (and a replan), never a
                                      # crash or a wrong plan
@@ -121,7 +137,8 @@ class PlanCache:
         self.puts += 1
         f = self._file(key)
         if spill and f is not None:
-            f.write_bytes(serial.to_bytes(plan))
+            f.write_bytes(serial.to_bytes(
+                plan, params_version=self.params_version))
 
     def _insert(self, key: str, plan: ExchangePlan) -> None:
         self._mem[key] = plan
@@ -155,10 +172,14 @@ def build_plan_template(cfg: ModelConfig, luffy: LuffyConfig, *,
     m = cfg.moe
     d = cfg.d_model
     T = n_seq * seq_len
+    from repro.condense.plan import CondensePlan
     from repro.models.blocks import _dtype
     bytes_per_el = jnp.dtype(_dtype(cfg.compute_dtype)).itemsize
     pipelined, chunks, est = plan_static_schedule(
         cfg, luffy, topo, M, T, d, capacity, bytes_per_el=bytes_per_el)
+    # wire decision — same rule as build_exchange_plan (DESIGN.md §10)
+    wire = ("dedup" if (luffy.hier_dedup == "on" and comm_mode == "hier"
+                        and not pipelined and M > 1) else "dense")
     z = np.float32(0.0)
     zi = np.zeros((0,), np.int32)
     return ExchangePlan(
@@ -167,12 +188,16 @@ def build_plan_template(cfg: ModelConfig, luffy: LuffyConfig, *,
         comm=CommContext(comm_mode, tuple(axes), topo),
         objective=luffy.plan_objective, group_size=luffy.condense_group,
         combine_slack=luffy.combine_slack, use_kernel=luffy.use_kernels,
-        estimate=est,
+        wire=wire, estimate=est,
         # placeholder routing — instantiate_plan never reads these
         expert_idx=zi.reshape(0, 1), gate_weights=zi.astype(np.float32)
         .reshape(0, 1), positions=zi.reshape(0, 1),
         valid=zi.reshape(0, 1).astype(bool), aux_loss=z,
-        dispatch_drop=z, rep_idx=zi, s_next=None, condense_rate=z,
+        dispatch_drop=z,
+        condense_plan=CondensePlan(
+            backend=luffy.similarity_backend, rep_idx=zi,
+            is_rep=zi.astype(bool), s_next=None, rate=z,
+            measured_pairs=z),
         dest_global=zi, traffic_before=z, traffic_after=z,
         inter_bytes_flat=z, inter_bytes_dedup=z, signature=None,
         plans_built=z, plans_reused=z, reuse_mismatch=z)
@@ -210,7 +235,7 @@ def prefill_plan_key(cfg: ModelConfig, luffy: LuffyConfig, dist,
         comm_mode=luffy.comm_mode if M > 1 else "local",
         topo=topo if M > 1 else None, M=M,
         compute_dtype=cfg.compute_dtype, gpu_speed=luffy.gpu_speed,
-        d_ff=cfg.moe.d_ff)
+        d_ff=cfg.moe.d_ff, hier_dedup=luffy.hier_dedup)
 
 
 def precompute_prefill_plans(cfg: ModelConfig, luffy: LuffyConfig, dist,

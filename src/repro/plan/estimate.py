@@ -135,3 +135,14 @@ def estimate_revalidate_ms(n_slots: int, M: int) -> float:
     price of reuse; orders of magnitude under a replan)."""
     return (REVALIDATE_US + REVALIDATE_PER_EL_US * n_slots * (M + 1)) \
         * 1e-3
+
+
+def estimate_similarity_ms(measured_pairs: float, d_model: int, *,
+                           speed: float = 1e13) -> float:
+    """Modeled wall time (ms) of one condensation similarity build: the
+    masked Gram matmul costs ``2·d`` MACs per measured pair (DESIGN.md
+    §10) — the quantity a similarity backend (``repro.condense``) or a
+    reused condense plan saves. Pair counts come from the backend's
+    analytic model (``expected_measured_pairs``) or the traced
+    ``measured_pairs`` ledger."""
+    return measured_pairs * 4.0 * d_model / speed * 1e3

@@ -39,8 +39,11 @@ import jax.numpy as jnp
 
 from repro.comm import CommContext
 from repro.comm import ledger as comm_ledger
+from repro.condense import plan as cplan
+from repro.condense import wire as cwire
+from repro.condense.plan import (CondenseCarry, CondensePlan,
+                                 identity_condense_plan, uncondense)
 from repro.config import LuffyConfig, ModelConfig
-from repro.core import condensation as cond
 from repro.core import migration as mig
 from repro.core.gating import GateOutput, dispatch_positions
 from repro.plan import objectives
@@ -74,6 +77,13 @@ class MoEAux(NamedTuple):
     plans_reused: Array       # the full migration planner ran / when a
     reuse_mismatch: Array     # carried plan revalidated / when a carried
                               # plan FAILED revalidation (and was rebuilt)
+    measured_pairs: Array     # condensation ledger (DESIGN.md §10): pairs
+                              # the similarity backend actually measured
+    condense_built: Array     # 1 when the similarity build ran / when a
+    condense_reused: Array    # carried condense plan was reused instead
+    inter_bytes_shipped: Array  # bytes the dedup wire ACTUALLY shipped
+                                # across nodes (0 on the dense wire);
+                                # equals inter_bytes_dedup when active
 
 N_AUX = len(MoEAux._fields)
 
@@ -176,6 +186,7 @@ class ExchangePlan(NamedTuple):
     group_size: int               # condensation group G
     combine_slack: float          # migrate-mode combine buffer slack
     use_kernel: bool
+    wire: str                     # "dense" | "dedup" (repro.condense.wire)
     estimate: Optional[PlanEstimate]
     # -- routing (traced) ---------------------------------------------------
     expert_idx: Array             # [T, k] global expert ids
@@ -184,10 +195,8 @@ class ExchangePlan(NamedTuple):
     valid: Array                  # [T, k] row takes a dispatch slot
     aux_loss: Array               # [] router load-balance loss
     dispatch_drop: Array          # [] fraction of kept rows dropped
-    # -- condensation map ---------------------------------------------------
-    rep_idx: Array                # [T] representative per token
-    s_next: Optional[Array]       # similarity history for the next block
-    condense_rate: Array          # [] fraction condensed
+    # -- condensation (repro.condense, DESIGN.md §10) -----------------------
+    condense_plan: CondensePlan   # rep map, sim history, reuse signature
     # -- migration assignment ----------------------------------------------
     dest_global: Array            # [n_seq] new global slot per local slot
     traffic_before: Array         # [] weighted combine rows, identity plan
@@ -203,12 +212,30 @@ class ExchangePlan(NamedTuple):
     plans_reused: Optional[Array] = None
     reuse_mismatch: Optional[Array] = None
 
+    # historical accessors — the condensation map now lives in the
+    # nested CondensePlan (kept so call sites and tests read naturally)
+    @property
+    def rep_idx(self) -> Array:
+        return self.condense_plan.rep_idx
+
+    @property
+    def s_next(self) -> Optional[Array]:
+        return self.condense_plan.s_next
+
+    @property
+    def condense_rate(self) -> Array:
+        return self.condense_plan.rate
+
 
 class ExchangeAux(NamedTuple):
     """Executor outputs riding alongside ``y``."""
     sideband: Dict[str, Array]    # per-sequence state at its (new) home
     s_next: Optional[Array]       # similarity history (migrated if needed)
     moe: MoEAux
+    cond_carry: Optional[Dict[str, Array]] = None
+    # condense-reuse state for the next sublayer (DESIGN.md §10):
+    # {"rep" [n_seq,S], "cexp" [n_seq,S], "age" [n_seq], "valid" [n_seq]}
+    # — migrated to the sequences' new homes alongside the sideband
 
 
 # ---------------------------------------------------------------------------
@@ -271,7 +298,8 @@ def build_exchange_plan(gate: GateOutput, xn: Array, cfg: ModelConfig,
                         group_size: int = 128, combine_slack: float = 1.0,
                         use_kernel: bool = False,
                         reuse_from: Optional[Union["ExchangePlan",
-                                                   PlanSignature]] = None
+                                                   PlanSignature]] = None,
+                        condense_reuse_from: Optional[CondenseCarry] = None
                         ) -> ExchangePlan:
     """Decide one exchange: condensation map, dispatch slots/drops, the
     migration assignment (via the ``luffy.plan_objective`` registry
@@ -311,20 +339,21 @@ def build_exchange_plan(gate: GateOutput, xn: Array, cfg: ModelConfig,
     token_valid = (pos_in_seq < sideband["seq_len"][:, None]).reshape(T)
     keep = jnp.tile(token_valid[:, None], (1, m.top_k))
 
-    # ---- token condensation (§V) ----------------------------------------
+    # ---- token condensation (§V, repro.condense) -------------------------
     do_condense = luffy.enable_condensation and mode != "decode"
     if do_condense:
-        co = cond.condense_tokens(
+        cp = cplan.build_condense_plan(
             xn, expert_idx[:, 0], threshold, group_size=group_size,
             s_prev=(None if s_prev is None
                     else s_prev.reshape(-1, group_size, group_size)),
-            s1=luffy.s1, s2=luffy.s2, use_kernel=use_kernel)
-        keep = keep & co.is_rep[:, None]
-        rep_idx, s_next = co.rep_idx, co.sim
-        c_rate = co.rate
+            s1=luffy.s1, s2=luffy.s2, use_kernel=use_kernel,
+            backend=luffy.similarity_backend, lsh_bits=luffy.lsh_bits,
+            lsh_seed=luffy.lsh_seed, carry=condense_reuse_from,
+            reuse_mode=luffy.condense_reuse,
+            max_age=luffy.condense_reuse_max_age)
+        keep = keep & cp.is_rep[:, None]
     else:
-        rep_idx = jnp.arange(T, dtype=jnp.int32)
-        s_next, c_rate = None, jnp.float32(0.0)
+        cp = identity_condense_plan(T, backend=luffy.similarity_backend)
 
     # ---- dispatch positions & drops --------------------------------------
     pos = dispatch_positions(expert_idx, keep, E)             # [T,k]
@@ -448,14 +477,23 @@ def build_exchange_plan(gate: GateOutput, xn: Array, cfg: ModelConfig,
         # single device): an invalid signature that never revalidates
         sig_out = invalid_signature(M * n_seq, M)
 
+    # ---- wire format (DESIGN.md §10) -------------------------------------
+    # the dedup wire applies to the vanilla sync hier exchange; migrate-
+    # mode combine is re-addressed to new homes and pipelined execution
+    # chunks the dense capacity — both keep the dense wire
+    wire = ("dedup" if (luffy.hier_dedup == "on" and comm.mode == "hier"
+                        and not migrate and not pipelined and M > 1)
+            else "dense")
+
     return ExchangePlan(
         mode=mode, migrate=migrate, condense=do_condense,
         pipelined=pipelined, capacity=C, chunks=chunks, comm=comm,
         objective=luffy.plan_objective, group_size=group_size,
-        combine_slack=combine_slack, use_kernel=use_kernel, estimate=est,
+        combine_slack=combine_slack, use_kernel=use_kernel, wire=wire,
+        estimate=est,
         expert_idx=expert_idx, gate_weights=gate_w, positions=pos,
         valid=valid, aux_loss=gate.aux_loss, dispatch_drop=d_drop,
-        rep_idx=rep_idx, s_next=s_next, condense_rate=c_rate,
+        condense_plan=cp,
         dest_global=dest_global, traffic_before=t_before,
         traffic_after=t_after, inter_bytes_flat=ib_flat,
         inter_bytes_dedup=ib_dedup, signature=sig_out,
@@ -500,6 +538,98 @@ def execute_plan(params, x: Array, sideband: Dict[str, Array],
     dest_global = plan.dest_global
 
     xf = x.reshape(T, d)
+
+    def _finish(y_tok, new_sideband, s_next, c_drop, local_frac, shipped):
+        """Shared executor tail: un-condense (token_to_token, §VI), the
+        condense-reuse carry (migrated with sequences), shared experts
+        and the aux ledger."""
+        cpn = plan.condense_plan
+        carry_sig = cpn.signature if plan.condense else None
+        cexp_sb = age_sb = valid_sb = None
+        rep_carry = None
+        if carry_sig is not None:
+            cexp_sb = carry_sig.expert.reshape(n_seq, S).astype(jnp.int32)
+            age_sb, valid_sb = carry_sig.age, carry_sig.valid
+        if plan.condense:
+            if not migrate:
+                y_tok = uncondense(y_tok, rep_idx)
+                rep_carry = (rep_idx % group_size).reshape(n_seq, S)
+            else:
+                # rep map (and the condense-reuse signature) migrated as
+                # sideband: everything per-sequence rides with its owner
+                ex = {"rep": (rep_idx % S).reshape(n_seq, S)
+                      .astype(jnp.int32)}
+                if carry_sig is not None:
+                    ex.update(cexp=cexp_sb, cage=age_sb, cvalid=valid_sb)
+                mig_sb = _exchange_sideband(ex, dest_global, n_seq, M, comm)
+                rep_sb = mig_sb["rep"]
+                if carry_sig is not None:
+                    cexp_sb, age_sb, valid_sb = (
+                        mig_sb["cexp"], mig_sb["cage"], mig_sb["cvalid"])
+                yg = y_tok.reshape(n_seq, S, d)
+                y_tok = jnp.take_along_axis(yg, rep_sb[..., None], axis=1
+                                            ).reshape(T, d)
+                # within-group position survives the within-seq one
+                rep_carry = rep_sb % group_size
+            if s_next is not None and migrate:
+                ng = S // group_size
+                s_mig = s_next.reshape(n_seq, ng, group_size, group_size)
+                s_next = _exchange_sideband(
+                    {"s": s_mig.astype(jnp.bfloat16)}, dest_global, n_seq,
+                    M, comm)["s"].astype(jnp.float32)
+                s_next = s_next.reshape(-1, group_size, group_size)
+
+        y_out = y_tok.reshape(n_seq, S, d)
+
+        # ---- shared experts (always-on, llama4-style) ---------------------
+        if "shared" in params:
+            from repro.models.blocks import ffn_apply
+            sh = ffn_apply({"w_up": params["shared"]["w_up"],
+                            "w_gate": params["shared"]["w_gate"],
+                            "w_down": params["shared"]["w_down"]},
+                           cfg, _rms(y_out if migrate
+                                     else x.reshape(n_seq, S, d),
+                                     params["norm"]["scale"]).astype(cdt))
+            y_out = y_out + sh.astype(y_out.dtype)
+
+        zc = jnp.float32(0.0)
+        aux = MoEAux(
+            plan.aux_loss, plan.dispatch_drop, c_drop, plan.condense_rate,
+            local_frac, plan.traffic_before, plan.traffic_after,
+            plan.inter_bytes_flat, plan.inter_bytes_dedup,
+            zc if plan.plans_built is None else plan.plans_built,
+            zc if plan.plans_reused is None else plan.plans_reused,
+            zc if plan.reuse_mismatch is None else plan.reuse_mismatch,
+            cpn.measured_pairs,
+            zc if cpn.built is None else cpn.built,
+            zc if cpn.reused is None else cpn.reused,
+            shipped)
+        cond_carry = None
+        if carry_sig is not None:
+            cond_carry = {"rep": rep_carry.astype(jnp.int32),
+                          "cexp": cexp_sb, "age": age_sb,
+                          "valid": valid_sb}
+        return y_out, ExchangeAux(sideband=new_sideband, s_next=s_next,
+                                  moe=aux, cond_carry=cond_carry)
+
+    # ---- deduplicated hier wire (DESIGN.md §10) --------------------------
+    if plan.wire == "dedup":
+        assert not migrate and not plan.pipelined, (plan.mode, plan.wire)
+        x_rows, gw_rows, rvalid, wstate = cwire.dedup_dispatch(
+            xf.astype(cdt), expert_idx, gate_w, valid, pos,
+            comm=comm, e_local=E_local, capacity=C)
+        h = _rms(x_rows, params["norm"]["scale"]).astype(cdt)
+        y_rows = expert_ffn(params["experts"],
+                            h.reshape(E_local, M * C, d), act,
+                            cdt, use_kernel=use_kernel
+                            ).reshape(E_local, M, C, d)
+        delta = cwire.dedup_combine(y_rows * gw_rows[..., None], wstate,
+                                    comm=comm)
+        y_tok = xf + delta.astype(xf.dtype)
+        row_bytes = float((d + 2) * jnp.dtype(cdt).itemsize)
+        return _finish(y_tok, dict(sideband), s_next,
+                       jnp.float32(0.0), jnp.float32(1.0 / M),
+                       wstate["shipped_rows"] * row_bytes)
 
     # ---- build dispatch buffers ------------------------------------------
     # payload row: [x_raw(d), gate_w, is_primary]; meta: (dest_slot+1, pos)
@@ -667,47 +797,8 @@ def execute_plan(params, x: Array, sideband: Dict[str, Array],
         new_sideband = _exchange_sideband(
             sideband, dest_global, n_seq, M, comm)
 
-    # ---- un-condense (token_to_token replacement, §VI) --------------------
-    if plan.condense:
-        if not migrate:
-            y_tok = cond.uncondense(y_tok, rep_idx)
-        else:
-            # rep map migrated as sideband: [n_seq, S] local rep position
-            rep_local = (rep_idx % S).reshape(n_seq, S).astype(jnp.int32)
-            rep_sb = _exchange_sideband({"rep": rep_local}, dest_global,
-                                        n_seq, M, comm)["rep"]
-            yg = y_tok.reshape(n_seq, S, d)
-            y_tok = jnp.take_along_axis(yg, rep_sb[..., None], axis=1
-                                        ).reshape(T, d)
-        if s_next is not None and migrate:
-            ng = S // group_size
-            s_mig = s_next.reshape(n_seq, ng, group_size, group_size)
-            s_next = _exchange_sideband(
-                {"s": s_mig.astype(jnp.bfloat16)}, dest_global, n_seq, M,
-                comm)["s"].astype(jnp.float32)
-            s_next = s_next.reshape(-1, group_size, group_size)
-
-    y_out = y_tok.reshape(n_seq, S, d)
-
-    # ---- shared experts (always-on, llama4-style) -------------------------
-    if "shared" in params:
-        from repro.models.blocks import ffn_apply
-        sh = ffn_apply({"w_up": params["shared"]["w_up"],
-                        "w_gate": params["shared"]["w_gate"],
-                        "w_down": params["shared"]["w_down"]},
-                       cfg, _rms(y_out if migrate else x.reshape(n_seq, S, d),
-                                 params["norm"]["scale"]).astype(cdt))
-        y_out = y_out + sh.astype(y_out.dtype)
-
-    zc = jnp.float32(0.0)
-    aux = MoEAux(plan.aux_loss, plan.dispatch_drop, c_drop,
-                 plan.condense_rate, local_frac, plan.traffic_before,
-                 plan.traffic_after, plan.inter_bytes_flat,
-                 plan.inter_bytes_dedup,
-                 zc if plan.plans_built is None else plan.plans_built,
-                 zc if plan.plans_reused is None else plan.plans_reused,
-                 zc if plan.reuse_mismatch is None else plan.reuse_mismatch)
-    return y_out, ExchangeAux(sideband=new_sideband, s_next=s_next, moe=aux)
+    return _finish(y_tok, new_sideband, s_next, c_drop, local_frac,
+                   jnp.float32(0.0))
 
 
 def instantiate_plan(template: ExchangePlan, gate: GateOutput, xn: Array,
@@ -772,11 +863,11 @@ def instantiate_plan(template: ExchangePlan, gate: GateOutput, xn: Array,
         comm=comm, objective=template.objective,
         group_size=template.group_size,
         combine_slack=template.combine_slack, use_kernel=use_kernel,
-        estimate=template.estimate,
+        wire=template.wire, estimate=template.estimate,
         expert_idx=expert_idx, gate_weights=gate_w, positions=pos,
         valid=valid, aux_loss=gate.aux_loss, dispatch_drop=d_drop,
-        rep_idx=jnp.arange(T, dtype=jnp.int32), s_next=None,
-        condense_rate=z,
+        condense_plan=identity_condense_plan(
+            T, backend=template.condense_plan.backend),
         dest_global=my * n_seq + jnp.arange(n_seq, dtype=jnp.int32),
         traffic_before=z, traffic_after=z, inter_bytes_flat=ib_flat,
         inter_bytes_dedup=ib_dedup, signature=None, plans_built=z,

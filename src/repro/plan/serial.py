@@ -29,22 +29,33 @@ import jax.numpy as jnp
 
 from repro.comm import CommContext
 from repro.comm.topology import Topology
+from repro.condense.plan import CondensePlan, CondenseSignature
 from repro.plan.estimate import PlanEstimate
 from repro.plan.exchange import ExchangePlan, PlanSignature
 from repro.sched import ChunkPlan
 
 MAGIC = b"LFPL"
-FORMAT_VERSION = 1
+# v2 (ISSUE 5): the condensation map moved into a nested CondensePlan
+# ("condense.*" array fields), the header gained "wire",
+# "condense_backend" and "params_version" (router/optimizer-step
+# fingerprint — a cached migrate-mode plan is never trusted across a
+# router update). v1 blobs raise PlanFormatError and are rebuilt.
+FORMAT_VERSION = 2
 
 # ExchangePlan array fields in serialization order. Optional array
 # fields (may be None on a given plan) are marked in the header.
 _ARRAY_FIELDS = (
     "expert_idx", "gate_weights", "positions", "valid", "aux_loss",
-    "dispatch_drop", "rep_idx", "s_next", "condense_rate", "dest_global",
+    "dispatch_drop", "dest_global",
     "traffic_before", "traffic_after", "inter_bytes_flat",
     "inter_bytes_dedup", "plans_built", "plans_reused", "reuse_mismatch",
 )
 _SIG_FIELDS = ("counts", "lens", "valid")
+# nested CondensePlan arrays ("condense.<field>"); optionals marked in
+# none_fields like everything else
+_COND_FIELDS = ("rep_idx", "is_rep", "s_next", "rate", "measured_pairs",
+                "built", "reused")
+_CSIG_FIELDS = ("expert", "age", "valid")
 
 
 class PlanFormatError(ValueError):
@@ -88,9 +99,11 @@ def _comm_from_dict(d: Dict[str, Any]) -> CommContext:
     return CommContext(d["mode"], tuple(d["axes"]), topo)
 
 
-def to_bytes(plan: ExchangePlan) -> bytes:
+def to_bytes(plan: ExchangePlan, *, params_version: str = "0") -> bytes:
     """Serialize a concrete plan: MAGIC, u16 version, u32 header length,
-    JSON header, raw array payload."""
+    JSON header, raw array payload. ``params_version`` is the router/
+    optimizer-step fingerprint the plan was built against ("0" for
+    routing-free vanilla templates); readers may demand a match."""
     payloads: list[bytes] = []
     manifest = []
     offset = 0
@@ -118,6 +131,18 @@ def to_bytes(plan: ExchangePlan) -> bytes:
     else:
         for f in _SIG_FIELDS:
             add(f"signature.{f}", getattr(sig, f))
+    cp = plan.condense_plan
+    for f in _COND_FIELDS:
+        v = getattr(cp, f)
+        if v is None:
+            none_fields.append(f"condense.{f}")
+        else:
+            add(f"condense.{f}", v)
+    if cp.signature is None:
+        none_fields.append("condense.signature")
+    else:
+        for f in _CSIG_FIELDS:
+            add(f"condense.signature.{f}", getattr(cp.signature, f))
 
     header = {
         "mode": plan.mode, "migrate": bool(plan.migrate),
@@ -130,6 +155,9 @@ def to_bytes(plan: ExchangePlan) -> bytes:
         "group_size": int(plan.group_size),
         "combine_slack": float(plan.combine_slack),
         "use_kernel": bool(plan.use_kernel),
+        "wire": plan.wire,
+        "condense_backend": cp.backend,
+        "params_version": str(params_version),
         "estimate": _estimate_to_dict(plan.estimate),
         "arrays": manifest,
         "none_fields": none_fields,
@@ -139,9 +167,13 @@ def to_bytes(plan: ExchangePlan) -> bytes:
                      hj] + payloads)
 
 
-def from_bytes(data: bytes) -> ExchangePlan:
+def from_bytes(data: bytes, *,
+               expect_params_version: Optional[str] = None) -> ExchangePlan:
     """Parse :func:`to_bytes` output back into an ExchangePlan (arrays as
-    jnp values). Rejects foreign magic and any other format version."""
+    jnp values). Rejects foreign magic and any other format version;
+    with ``expect_params_version`` set, also rejects plans serialized
+    against a different router/optimizer fingerprint (a stale
+    migrate-mode plan must never be trusted after a router update)."""
     if len(data) < 10 or data[:4] != MAGIC:
         raise PlanFormatError("not a serialized ExchangePlan (bad magic)")
     version, hlen = struct.unpack("<HI", data[4:10])
@@ -153,6 +185,11 @@ def from_bytes(data: bytes) -> ExchangePlan:
         header = json.loads(data[10:10 + hlen].decode("utf-8"))
     except Exception as e:
         raise PlanFormatError(f"corrupt plan header: {e}") from None
+    if expect_params_version is not None \
+            and header.get("params_version") != str(expect_params_version):
+        raise PlanFormatError(
+            f"plan params_version {header.get('params_version')!r} != "
+            f"expected {expect_params_version!r}; rebuild the cache")
     payload = data[10 + hlen:]
 
     vals: Dict[str, Any] = {}
@@ -169,6 +206,14 @@ def from_bytes(data: bytes) -> ExchangePlan:
     sig = None
     if "signature" not in none:
         sig = PlanSignature(*(vals[f"signature.{f}"] for f in _SIG_FIELDS))
+    csig = None
+    if "condense.signature" not in none:
+        csig = CondenseSignature(*(vals[f"condense.signature.{f}"]
+                                   for f in _CSIG_FIELDS))
+    cond = CondensePlan(
+        backend=header["condense_backend"], signature=csig,
+        **{f: (None if f"condense.{f}" in none else vals[f"condense.{f}"])
+           for f in _COND_FIELDS})
     est = None
     if header["estimate"] is not None:
         est = PlanEstimate(**header["estimate"])
@@ -181,5 +226,5 @@ def from_bytes(data: bytes) -> ExchangePlan:
         comm=_comm_from_dict(header["comm"]),
         objective=header["objective"], group_size=header["group_size"],
         combine_slack=header["combine_slack"],
-        use_kernel=header["use_kernel"], estimate=est,
-        signature=sig, **arr)
+        use_kernel=header["use_kernel"], wire=header["wire"],
+        estimate=est, condense_plan=cond, signature=sig, **arr)

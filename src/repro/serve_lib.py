@@ -264,7 +264,7 @@ def decode_step(params, cfg: ModelConfig, luffy: LuffyConfig,
                     cfg.moe,
                     max(1, B // max(1, dist.batch_size_divisor)),
                     cfg.moe.num_experts, slack=2.0)
-                y, _, _, _, _ = _moe_apply_dist(
+                y, _, _, _, _, _ = _moe_apply_dist(
                     p["moe"], x, dummy_sb, None, jnp.float32(1.0),
                     cfg, luffy, dist, "decode", cap)
                 x = y
@@ -381,7 +381,7 @@ def prefill(params, cfg: ModelConfig, luffy: LuffyConfig, dist: DistContext,
                     from repro.plan.cache import prefill_plan_key
                     tmpl = plan_cache.get(
                         prefill_plan_key(cfg, nl, dist, B, S, cap))
-                y, _, _, _, _ = _moe_apply_dist(
+                y, _, _, _, _, _ = _moe_apply_dist(
                     p["moe"], x, sb, None, jnp.float32(1.0), cfg, nl,
                     dist, "vanilla", cap, plan_template=tmpl)
                 x = y
