@@ -23,6 +23,7 @@ MODULES = [
     "fig_objective_sweep",  # beyond-paper: traffic vs overlap objective
     "fig_plan_reuse",       # beyond-paper: plan-lifecycle reuse sweep
     "fig_condense_backend",  # beyond-paper: similarity-backend sweep
+    "fig_calibration",      # beyond-paper: measured-vs-predicted fit
     "roofline",             # deliverable (g)
 ]
 

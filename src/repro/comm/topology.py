@@ -21,7 +21,11 @@ import numpy as np
 
 # Default link bandwidths (bytes/s per link), TPU v5e-class: ~50 GB/s
 # ICI within a node, ~12 GB/s DCN across nodes. Single source of truth —
-# launch/mesh.py re-exports these for the roofline.
+# launch/mesh.py re-exports these for the roofline. These are HAND-SET
+# planning defaults: a measured per-backend fit from
+# ``repro.obs.calibrate`` replaces them via ``with_links`` (the
+# launchers' ``--calibrate`` path), so every consumer above prices real
+# links without knowing calibration exists.
 DEFAULT_INTRA_BW = 4.9e10
 DEFAULT_INTER_BW = 1.225e10
 
@@ -63,6 +67,22 @@ class Topology:
     def node_of(self, device):
         """Node index of a (scalar or array) global device index."""
         return device // self.devices_per_node
+
+    def with_links(self, *, intra_bw: Optional[float] = None,
+                   inter_bw: Optional[float] = None,
+                   intra_lat: Optional[float] = None,
+                   inter_lat: Optional[float] = None) -> "Topology":
+        """Same shape, different link constants — the calibration
+        hand-off (``repro.obs.calibrate.Calibration.topology``): the
+        fingerprint (``repro.plan.cache.topology_fingerprint``) changes
+        with the speeds, so calibrated and default plans never share a
+        cache entry."""
+        return dataclasses.replace(
+            self,
+            intra_bw=self.intra_bw if intra_bw is None else intra_bw,
+            inter_bw=self.inter_bw if inter_bw is None else inter_bw,
+            intra_lat=self.intra_lat if intra_lat is None else intra_lat,
+            inter_lat=self.inter_lat if inter_lat is None else inter_lat)
 
     # -- link cost ----------------------------------------------------------
     def link_cost(self) -> np.ndarray:

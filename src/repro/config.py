@@ -258,6 +258,11 @@ class LuffyConfig:
     q: int = 3
     # Attention cost model speed term P (FLOP/s), profiled.
     gpu_speed: float = 1.0e13
+    # Per-chunk pipeline issue cost (ms) for the overlap pricing. <= 0
+    # means "use the built-in constant"
+    # (repro.sched.cost.DEFAULT_CHUNK_OVERHEAD_MS); a measured value
+    # comes from repro.obs.calibrate (Calibration.apply).
+    chunk_overhead_ms: float = -1.0
     # TPU adaptation knobs: condensation group size (blocked similarity
     # tile; see DESIGN.md §3) and combine-buffer slack under migration.
     condense_group: int = 128

@@ -218,18 +218,23 @@ def moe_core_planned(params, x, sideband: Dict[str, Array],
     xf = x.reshape(n_seq * S, d)
     xn = _rms(xf, params["norm"]["scale"]).astype(_dtype(cfg.compute_dtype))
     gate = gate_apply(params["router"], xn, cfg.moe.top_k)
-    if plan_template is not None:
-        plan = instantiate_plan(
-            plan_template, gate, xn, cfg, comm, capacity=capacity,
-            sideband=sideband, use_kernel=use_kernel)
-    else:
-        plan = build_exchange_plan(
-            gate, xn, cfg, luffy, comm, mode=mode, capacity=capacity,
-            sideband=sideband, threshold=threshold, s_prev=s_prev,
-            group_size=group_size, combine_slack=combine_slack,
-            use_kernel=use_kernel, reuse_from=reuse_from,
-            condense_reuse_from=condense_reuse_from)
-    y, aux = execute_plan(params, x, sideband, plan, cfg)
+    from repro.obs import trace as obs_trace
+    with obs_trace.phase("plan_build") as _sp:
+        if plan_template is not None:
+            plan = instantiate_plan(
+                plan_template, gate, xn, cfg, comm, capacity=capacity,
+                sideband=sideband, use_kernel=use_kernel)
+        else:
+            plan = build_exchange_plan(
+                gate, xn, cfg, luffy, comm, mode=mode, capacity=capacity,
+                sideband=sideband, threshold=threshold, s_prev=s_prev,
+                group_size=group_size, combine_slack=combine_slack,
+                use_kernel=use_kernel, reuse_from=reuse_from,
+                condense_reuse_from=condense_reuse_from)
+        plan = _sp.fence(plan)
+    with obs_trace.phase("exchange") as _sp:
+        y, aux = execute_plan(params, x, sideband, plan, cfg)
+        y = _sp.fence(y)
     return y, aux.sideband, aux.s_next, aux.moe, plan, aux.cond_carry
 
 

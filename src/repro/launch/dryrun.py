@@ -93,7 +93,8 @@ def comm_traffic_ledger(cfg, shape, mesh, *, nodes: int = 0,
                         similarity_backend: str = "exact",
                         lsh_bits: int = 8, condense_reuse: str = "off",
                         hier_dedup: str = "off",
-                        condense_group: int = 128):
+                        condense_group: int = 128,
+                        calibration=None):
     """Analytic per-step dispatch traffic split by link tier (DESIGN.md §5)
     plus the modeled compute/communication overlap (§6).
 
@@ -107,7 +108,15 @@ def comm_traffic_ledger(cfg, shape, mesh, *, nodes: int = 0,
     (dispatch and combine priced on the hier bytes, expert FFN on the
     peak-FLOP roofline). On a flat mesh the ledger prices a hypothetical
     ``nodes``-way split of the model axis (default 4) — the planning
-    number for moving to a hierarchical deployment."""
+    number for moving to a hierarchical deployment.
+
+    ``calibration`` (a ``repro.obs.calibrate.Calibration``) swaps every
+    hand-set pricing constant for the measured fit: link bandwidths and
+    latencies (via ``Calibration.topology``), the per-chunk pipeline
+    overhead, the FFN roofline, and the planning/similarity step costs.
+    The returned JSON carries ``schema_version`` (see
+    ``repro.obs.metrics.COMM_LEDGER_SCHEMA_VERSION``); the golden-schema
+    test pins its key sets."""
     from repro import comm as rcomm
     from repro.core.moe_layer import capacity_for
     from repro.launch.mesh import (DCN_BW, ICI_BW, PEAK_FLOPS_BF16,
@@ -126,19 +135,29 @@ def comm_traffic_ledger(cfg, shape, mesh, *, nodes: int = 0,
                               intra_bw=ICI_BW, inter_bw=DCN_BW)
     if not topo.hierarchical or not cfg.uses_moe:
         return None
+    from repro.obs.metrics import COMM_LEDGER_SCHEMA_VERSION
+    if calibration is not None:
+        topo = calibration.topology(topo)
+    peak_flops = (calibration.ffn_speed if calibration is not None
+                  else PEAK_FLOPS_BF16)
+    est_kw = (calibration.estimate_kwargs() if calibration is not None
+              else {})
     tokens = shape.global_batch * shape.seq_len
     k = cfg.moe.top_k
-    out = {"topology": {"nodes": topo.num_nodes,
+    out = {"schema_version": COMM_LEDGER_SCHEMA_VERSION,
+           "calibration": (calibration.key if calibration is not None
+                           else None),
+           "topology": {"nodes": topo.num_nodes,
                         "devices_per_node": topo.devices_per_node,
                         "bw_ratio": topo.bw_ratio},
            "dedup_factor": rcomm.expected_dedup_factor(k, topo),
            "buckets": {}}
     for r in (0.0, 0.25, 0.5):
         # dispatch ≈ combine on the hier bytes; expert FFN at the bf16
-        # roofline spread over the expert shards
+        # roofline (or the measured fit) spread over the expert shards
         ffn_flops = (tokens * (1.0 - r) * k * 4 * cfg.d_model
                      * cfg.moe.d_ff * cfg.num_layers)
-        ffn_ms = ffn_flops / (PEAK_FLOPS_BF16 * topo.num_devices) * 1e3
+        ffn_ms = ffn_flops / (peak_flops * topo.num_devices) * 1e3
         if exec_chunks > 0:      # report the executed configuration,
             # with the executor's own capacity clipping (plan_chunks
             # caps the chunk count at this bucket's capacity / 8)
@@ -149,7 +168,7 @@ def comm_traffic_ledger(cfg, shape, mesh, *, nodes: int = 0,
             chunks = None
         est = estimate_exchange(tokens, k, cfg.d_model, topo=topo,
                                 r_cond=r, num_layers=cfg.num_layers,
-                                ffn_ms=ffn_ms, chunks=chunks)
+                                ffn_ms=ffn_ms, chunks=chunks, **est_kw)
         out["buckets"][str(r)] = {
             "flat": {"intra_bytes": est.flat_intra_dispatch_bytes,
                      "inter_bytes": est.flat_inter_dispatch_bytes,
@@ -179,7 +198,10 @@ def comm_traffic_ledger(cfg, shape, mesh, *, nodes: int = 0,
     n_slots = M * n_seq_local
     built = n_moe if plan_reuse == "off" else min(1, n_moe)
     reused = n_moe - built
-    plan_ms = estimate_planning_ms(n_slots, M)
+    plan_ms = (estimate_planning_ms(n_slots, M,
+                                    step_us=calibration.plan_step_us)
+               if calibration is not None
+               else estimate_planning_ms(n_slots, M))
     reval_ms = estimate_revalidate_ms(n_slots, M)
     # "always" trusts the carry without the signature compare, so it
     # pays no revalidation cost; "signature" checks every reused layer
@@ -212,8 +234,10 @@ def comm_traffic_ledger(cfg, shape, mesh, *, nodes: int = 0,
         * mesh.devices.size
         for b in ("exact", "lsh")}
     # one build runs per device in parallel: price the per-device share
+    sim_kw = ({"speed": calibration.sim_speed}
+              if calibration is not None else {})
     sim_ms = {b: estimate_similarity_ms(p / mesh.devices.size,
-                                        cfg.d_model)
+                                        cfg.d_model, **sim_kw)
               for b, p in pairs.items()}
     b0 = out["buckets"]["0.0"]
     c_built = n_moe if condense_reuse == "off" else min(1, n_moe)
@@ -250,7 +274,7 @@ def run_pair(arch: str, shape_name: str, multi_pod: bool,
              pipeline_chunks: int = 4, plan_objective: str = "traffic",
              plan_reuse: str = "off", similarity_backend: str = "exact",
              lsh_bits: int = 8, condense_reuse: str = "off",
-             hier_dedup: str = "off"):
+             hier_dedup: str = "off", calibration_path: str = ""):
     import jax
     import jax.numpy as jnp
     from repro import optim, serve_lib, train_lib
@@ -262,6 +286,15 @@ def run_pair(arch: str, shape_name: str, multi_pod: bool,
 
     t0 = time.time()
     cfg = get_config(arch)
+    calibration = None
+    if calibration_path:
+        from repro.obs.calibrate import Calibration
+        calibration = Calibration.from_json(
+            Path(calibration_path).read_text())
+        if calibration is None:
+            raise ValueError(
+                f"unreadable calibration artifact: {calibration_path} "
+                "(wrong magic, schema drift, or malformed)")
     shape = SHAPES[shape_name]
     mesh = make_production_mesh(multi_pod=multi_pod, nodes=nodes)
     mesh_tag = "x".join(str(d) for d in mesh.devices.shape)
@@ -433,7 +466,8 @@ def run_pair(arch: str, shape_name: str, multi_pod: bool,
                          else 0), plan_reuse=plan_reuse,
             similarity_backend=similarity_backend, lsh_bits=lsh_bits,
             condense_reuse=condense_reuse, hier_dedup=hier_dedup,
-            condense_group=luffy.condense_group)
+            condense_group=luffy.condense_group,
+            calibration=calibration)
                         if shape.mode == "train" else None),
     })
     out_path.parent.mkdir(parents=True, exist_ok=True)
@@ -553,6 +587,15 @@ def main():
     ap.add_argument("--hier-dedup", default="off", choices=["off", "on"],
                     help="deduplicated hier wire format "
                          "(repro.condense.wire; needs --nodes > 1)")
+    ap.add_argument("--calibration", default="",
+                    help="path to a repro.obs.calibrate artifact "
+                         "(*.calib.json): price the comm_ledger with "
+                         "the measured fit instead of the hand-set "
+                         "constants")
+    ap.add_argument("--metrics-json", default="",
+                    help="also append the flattened comm_ledger as one "
+                         "unified metrics record (repro.obs.metrics "
+                         "JSONL) to this path")
     args = ap.parse_args()
     from repro.config import resolve_pipeline_chunks
     args.pipeline_chunks = resolve_pipeline_chunks(args.pipeline_chunks,
@@ -579,17 +622,26 @@ def main():
         ARTIFACTS / f"{args.arch}__{args.shape}__{mesh_tag}.json"
     out.parent.mkdir(parents=True, exist_ok=True)
     try:
-        run_pair(args.arch, args.shape, args.multi_pod, out,
-                 luffy_on=not args.no_luffy, bucket=args.bucket,
-                 variant=args.variant, nodes=args.nodes,
-                 exec_mode=args.exec_mode,
-                 pipeline_chunks=args.pipeline_chunks,
-                 plan_objective=args.plan_objective,
-                 plan_reuse=args.plan_reuse,
-                 similarity_backend=args.similarity_backend,
-                 lsh_bits=args.lsh_bits,
-                 condense_reuse=args.condense_reuse,
-                 hier_dedup=args.hier_dedup)
+        rec = run_pair(args.arch, args.shape, args.multi_pod, out,
+                       luffy_on=not args.no_luffy, bucket=args.bucket,
+                       variant=args.variant, nodes=args.nodes,
+                       exec_mode=args.exec_mode,
+                       pipeline_chunks=args.pipeline_chunks,
+                       plan_objective=args.plan_objective,
+                       plan_reuse=args.plan_reuse,
+                       similarity_backend=args.similarity_backend,
+                       lsh_bits=args.lsh_bits,
+                       condense_reuse=args.condense_reuse,
+                       hier_dedup=args.hier_dedup,
+                       calibration_path=args.calibration)
+        if args.metrics_json and rec.get("comm_ledger"):
+            from repro.obs import metrics as obs_metrics
+            flat = obs_metrics.flatten("comm_ledger", rec["comm_ledger"])
+            record = {"schema_version":
+                      obs_metrics.METRICS_SCHEMA_VERSION,
+                      "arch": args.arch, "shape": args.shape,
+                      "mesh": rec["mesh"], "metrics": flat}
+            obs_metrics.write_jsonl(args.metrics_json, record)
     except Exception as e:
         rec = {"arch": args.arch, "shape": args.shape, "mesh": mesh_tag,
                "variant": args.variant, "status": "error",

@@ -66,6 +66,14 @@ def main():
                          "identical vanilla plans — the flag only "
                          "threads the config through for parity with "
                          "train/dryrun")
+    ap.add_argument("--trace", action="store_true",
+                    help="step tracing (repro.obs.trace): fenced spans "
+                         "around batched prefill, the step-wise prompt "
+                         "feed and every decode step; writes "
+                         "Chrome-trace JSON (see --trace-out)")
+    ap.add_argument("--trace-out", default="",
+                    help="trace JSON path (implies --trace; default "
+                         "trace.json)")
     args = ap.parse_args()
 
     import jax
@@ -99,6 +107,13 @@ def main():
     print(f"exec_mode={args.exec_mode} chunks={pipeline_chunks} "
           f"plan_objective={args.plan_objective} "
           f"plan_cache={args.plan_cache or 'off'}")
+
+    from repro.obs import trace as obs_trace
+    trace_out = args.trace_out or ("trace.json" if args.trace else "")
+    tracer = None
+    if trace_out:
+        tracer = obs_trace.Tracer(fence=True)
+        obs_trace.activate(tracer)
 
     r = np.random.default_rng(0)
     B, S = args.batch, args.prompt_len
@@ -134,7 +149,8 @@ def main():
         logits_pf = pf(params, prompts)
         jax.block_until_ready(logits_pf)
         t0 = time.time()
-        logits_pf = jax.block_until_ready(pf(params, prompts))
+        with obs_trace.phase("prefill_batch", cat="step") as _sp:
+            logits_pf = jax.block_until_ready(pf(params, prompts))
         dt = time.time() - t0
         print(f"batched prefill({B}x{S} tokens): {dt:.3f}s "
               f"({B * S / max(dt, 1e-9):.0f} tok/s)")
@@ -146,20 +162,28 @@ def main():
         p, cfg, luffy, dist, c, t))
     # feed the prompt token by token (cache-correct for every arch family)
     logits = None
-    for t in range(S):
-        logits, cache = dec(params, cache, prompts[:, t:t + 1])
+    with obs_trace.phase("prefill_step", cat="step", tokens=S) as _sp:
+        for t in range(S):
+            logits, cache = dec(params, cache, prompts[:, t:t + 1])
+        logits = _sp.fence(logits)
     print(f"prefill({S} tokens): {time.time()-t0:.2f}s")
     out = []
     t0 = time.time()
-    for _ in range(args.gen):
+    for i in range(args.gen):
         nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
         out.append(np.asarray(nxt[:, 0]))
-        logits, cache = dec(params, cache, nxt)
+        with obs_trace.phase("decode", cat="step", step=i) as _sp:
+            logits, cache = dec(params, cache, nxt)
+            logits = _sp.fence(logits)
     dt = time.time() - t0
     toks = int(np.asarray(out).size)
     print(f"decode: {toks} tokens in {dt:.2f}s "
           f"({toks/dt:.1f} tok/s batch={B})")
     print("sample token ids:", [int(x) for x in np.asarray(out)[:, 0][:10]])
+    if tracer is not None:
+        obs_trace.deactivate()
+        tracer.write(trace_out)
+        print(f"trace: {len(tracer.events)} events -> {trace_out}")
 
 
 if __name__ == "__main__":

@@ -96,6 +96,23 @@ def main():
     ap.add_argument("--ckpt", default="")
     ap.add_argument("--ckpt-every", type=int, default=0)
     ap.add_argument("--log-file", default="")
+    ap.add_argument("--metrics-json", default="",
+                    help="append one unified per-step metrics record "
+                         "(repro.obs.metrics JSONL) per step to this "
+                         "path")
+    ap.add_argument("--trace", action="store_true",
+                    help="step tracing (repro.obs.trace): fenced spans "
+                         "around every jitted step plus one eager "
+                         "exchange probe for the per-phase breakdown; "
+                         "writes Chrome-trace JSON (see --trace-out)")
+    ap.add_argument("--trace-out", default="",
+                    help="trace JSON path (implies --trace; default "
+                         "trace.json)")
+    ap.add_argument("--calibrate", default="",
+                    help="calibration artifact dir (repro.obs.calibrate)"
+                         ": load the fit for this topology+backend or "
+                         "measure and persist one, then price links, "
+                         "chunk overhead and the FFN roofline with it")
     args = ap.parse_args()
 
     import jax
@@ -121,14 +138,32 @@ def main():
     nodes = args.nodes
     if args.comm_mode == "hier" and nodes <= 1:
         nodes = 2                     # hier needs a (node, local) split
-    if args.mesh == "none" or len(jax.devices()) == 1:
-        dist = single_device()
-    else:
+    mesh = topo = None
+    if not (args.mesh == "none" or len(jax.devices()) == 1):
         mesh = (make_production_mesh(nodes=nodes)
                 if args.mesh == "production"
                 else make_host_mesh(model=args.model_axis, nodes=nodes))
         topo = topology_for_mesh(
             mesh, inter_bw=args.inter_bw or None)
+
+    # measured cost-model fit (DESIGN.md §11): load or measure BEFORE the
+    # dist context so migration link costs / the overlap model / the
+    # ledger all price calibrated links
+    calib = None
+    if args.calibrate:
+        from repro.obs import calibrate as obs_cal
+        calib = obs_cal.run_calibration(mesh, topo, out_dir=args.calibrate)
+        if topo is not None:
+            topo = calib.topology(topo)
+        print(f"calibration {calib.key}: "
+              f"intra_bw={calib.intra_bw:.3g}B/s "
+              f"inter_bw={calib.inter_bw:.3g}B/s "
+              f"chunk_overhead={calib.chunk_overhead_ms:.3g}ms "
+              f"ffn_speed={calib.ffn_speed:.3g}FLOP/s")
+
+    if mesh is None:
+        dist = single_device()
+    else:
         dist = make_dist(mesh, "train", gb, moe_arch=cfg.uses_moe,
                          topology=topo)
         print(f"mesh {dict(zip(mesh.axis_names, mesh.devices.shape))} "
@@ -158,6 +193,8 @@ def main():
         condense_reuse=args.condense_reuse,
         condense_reuse_max_age=args.condense_max_age,
         hier_dedup=args.hier_dedup)
+    if calib is not None:
+        luffy = calib.apply(luffy)
     ocfg = OptimConfig(name=args.optimizer, lr=args.lr,
                        total_steps=args.steps,
                        warmup_steps=max(2, args.steps // 20))
@@ -185,25 +222,46 @@ def main():
             steps_by_bucket[bucket] = jax.jit(fn)
         return steps_by_bucket[bucket]
 
+    # step tracing (DESIGN.md §11): fenced spans around the jitted step;
+    # phase spans inside the step are structural no-ops (lax.scan traces
+    # the forward), so --trace adds one eager probe_exchange at the end
+    # for the plan_build/dispatch/expert_ffn/combine breakdown
+    from repro.obs import metrics as obs_metrics
+    from repro.obs import trace as obs_trace
+    trace_out = args.trace_out or ("trace.json" if args.trace else "")
+    tracer = None
+    if trace_out:
+        tracer = obs_trace.Tracer(fence=True)
+        obs_trace.activate(tracer)
+    registry = obs_metrics.MetricsRegistry(
+        luffy=luffy, run_info={"arch": args.arch, "steps": args.steps,
+                               "comm_mode": args.comm_mode,
+                               "exec_mode": args.exec_mode,
+                               "calibrated": calib is not None})
+
     bucket = 0
     log = []
     t_start = time.time()
     observed_rate = 0.0
     for i in range(args.steps):
-        batch = {k: jnp.asarray(v) for k, v in data.batch(i).items()}
+        with obs_trace.phase("data", cat="step"):
+            batch = {k: jnp.asarray(v) for k, v in data.batch(i).items()}
         t0 = time.time()
-        params, opt_state, lstate, m = get_step(bucket)(
-            params, opt_state, lstate, batch)
+        with obs_trace.phase("step", cat="step", step=i) as _sp:
+            out = get_step(bucket)(params, opt_state, lstate, batch)
+            params, opt_state, lstate, m = _sp.fence(out)
         dt = time.time() - t0
-        m = {k: float(v) for k, v in m.items()}
+        m = train_lib.finalize_metrics(m, luffy)
         observed_rate = 0.8 * observed_rate + 0.2 * m["condense_rate"]
         if cfg.uses_moe and luffy.enable_condensation and i >= 3:
             bucket = train_lib.pick_bucket_host(luffy, 0.0, observed_rate)
-        rec = {"step": i, "time_s": round(dt, 3), "bucket": bucket, **m}
+        rec = registry.observe(i, m, time_s=round(dt, 3), bucket=bucket)
         log.append(rec)
+        if args.metrics_json:
+            obs_metrics.write_jsonl(args.metrics_json, rec)
         if i % max(1, args.steps // 20) == 0 or i == args.steps - 1:
             inter = ""
-            if m.get("inter_bytes_flat", 0.0) > 0:
+            if (m.get("inter_bytes_flat") or 0.0) > 0:
                 inter = (f" inter={m['inter_bytes_dedup']:.0f}B"
                          f"/{m['inter_bytes_flat']:.0f}B")
             print(f"step {i:5d} loss={m['loss']:.4f} "
@@ -214,11 +272,24 @@ def main():
         if args.ckpt and args.ckpt_every and (i + 1) % args.ckpt_every == 0:
             checkpoint.save(args.ckpt, params, pspecs=pspecs, step=i + 1)
     print(f"done: {args.steps} steps in {time.time()-t_start:.1f}s; "
-          f"final loss {log[-1]['loss']:.4f}")
+          f"final loss {log[-1]['metrics']['train/loss']:.4f}")
     if args.ckpt:
         checkpoint.save(args.ckpt, params, pspecs=pspecs, step=args.steps)
     if args.log_file:
         Path(args.log_file).write_text(json.dumps(log, indent=1))
+    if tracer is not None:
+        if cfg.uses_moe:
+            from repro.obs.calibrate import probe_exchange
+            with obs_trace.phase("probe", cat="probe"):
+                probe_exchange(cfg, luffy,
+                               seq_len=min(args.seq_len, 64))
+        obs_trace.deactivate()
+        tracer.write(trace_out)
+        summary = tracer.summary()
+        steps = summary.get("step", {})
+        print(f"trace: {len(tracer.events)} events -> {trace_out} "
+              f"(step total {steps.get('total_us', 0.0)/1e3:.1f}ms over "
+              f"{steps.get('count', 0)} spans)")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,34 @@
+"""repro.obs — observability (DESIGN.md §11).
+
+Three layers:
+
+* :mod:`repro.obs.trace` — host-timed spans with ``block_until_ready``
+  fencing and Chrome-trace/Perfetto JSON export (``--trace`` /
+  ``--trace-out`` on the launchers);
+* :mod:`repro.obs.metrics` — one typed registry unifying the
+  ``MoEAux``/optimizer/ledger counter names, per-step + cumulative
+  views, JSONL emission (``--metrics-json``);
+* :mod:`repro.obs.calibrate` — measured cost-model constants (link
+  bandwidths, chunk overhead, planning/similarity/FFN speeds) persisted
+  as a versioned artifact keyed by topology fingerprint + backend
+  (``--calibrate``).
+"""
+from repro.obs.calibrate import (CALIBRATION_SCHEMA_VERSION, Calibration,
+                                 calibration_key, load_calibration,
+                                 probe_exchange, run_calibration,
+                                 save_calibration)
+from repro.obs.metrics import (COMM_LEDGER_SCHEMA_VERSION,
+                               METRICS_SCHEMA_VERSION, MetricsRegistry,
+                               MetricSpec, SCHEMA, canonical_name,
+                               flatten, mask_inapplicable, write_jsonl)
+from repro.obs.trace import (NULL_SPAN, Tracer, activate, active,
+                             deactivate, phase)
+
+__all__ = [
+    "CALIBRATION_SCHEMA_VERSION", "Calibration", "calibration_key",
+    "load_calibration", "probe_exchange", "run_calibration",
+    "save_calibration", "COMM_LEDGER_SCHEMA_VERSION",
+    "METRICS_SCHEMA_VERSION", "MetricsRegistry", "MetricSpec", "SCHEMA",
+    "canonical_name", "flatten", "mask_inapplicable", "write_jsonl",
+    "NULL_SPAN", "Tracer", "activate", "active", "deactivate", "phase",
+]

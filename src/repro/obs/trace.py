@@ -1,0 +1,268 @@
+"""Step tracing: low-overhead host-side spans + Chrome-trace export
+(DESIGN.md §11).
+
+A :class:`Tracer` records **host-timed spans** — begin/end wall-clock
+pairs with nesting — as structured events, and exports them in the
+Chrome trace-event JSON format (``chrome://tracing`` / Perfetto:
+``{"traceEvents": [{"ph": "X", "ts", "dur", "name", ...}]}``).
+
+Two ways to open a span:
+
+* ``tracer.span("step", step=i)`` — explicit, used by the launchers
+  around the jitted train/serve step (the caller holds the tracer);
+* ``phase("dispatch")`` — the module-level hook the instrumented hot
+  path (``repro.plan.exchange``) calls. It is a **no-op** unless a
+  tracer has been :func:`activate`\\ d *and* the caller is running
+  outside a jax trace (inside ``jit``/``scan``/``shard_map`` bodies the
+  Python code runs at trace time, so a host timestamp there would be
+  compile-time garbage — those spans are dropped, not recorded).
+
+Fencing: jax dispatch is asynchronous, so a host timestamp right after
+an op returns measures *launch*, not completion. With
+``Tracer(fence=True)`` the ``--trace`` mode of the launchers,
+``span.fence(value)`` calls ``jax.block_until_ready`` on the value at
+the phase boundary, making the span's duration the real device time of
+the phase (single-process backends; the fence is skipped for abstract
+tracers). Untraced runs pay only a module-global ``None`` check per
+``phase()`` call — the <5% overhead budget ``benchmarks/
+fig_calibration.py`` asserts.
+
+Exclusive time: every completed span records ``self_us`` (duration
+minus the duration of its direct children), so a parent's inclusive
+time is always ≥ the sum of its children's exclusive times — the
+invariant the 8-device trace test asserts.
+"""
+from __future__ import annotations
+
+import json
+import os
+import threading
+import time
+from typing import Any, Dict, List, Optional
+
+
+def _now_us() -> float:
+    return time.perf_counter_ns() / 1e3
+
+
+def _trace_state_clean() -> bool:
+    """True when NOT inside a jax trace (jit/scan/shard_map body) — the
+    only place a host-side timestamp means anything. Falls back to True
+    when the introspection API is unavailable (or jax is not imported
+    at all: pure host spans are always fine)."""
+    import sys
+    jax = sys.modules.get("jax")
+    if jax is None:
+        return True
+    try:
+        return jax.core.trace_state_clean()
+    except Exception:
+        return True
+
+
+def _block(value):
+    """``jax.block_until_ready`` that tolerates non-array / abstract
+    leaves (fencing must never change program behavior)."""
+    import sys
+    jax = sys.modules.get("jax")
+    if jax is None:
+        return value
+    try:
+        leaves = jax.tree.leaves(value)
+        for leaf in leaves:
+            if isinstance(leaf, jax.core.Tracer):
+                continue
+            if hasattr(leaf, "block_until_ready"):
+                leaf.block_until_ready()
+    except Exception:
+        pass
+    return value
+
+
+class _Span:
+    """One open span. Context manager; records an ``"X"`` (complete)
+    event on exit."""
+    __slots__ = ("tracer", "name", "cat", "args", "t0", "child_us",
+                 "parent")
+
+    def __init__(self, tracer: "Tracer", name: str, cat: str,
+                 args: Dict[str, Any]):
+        self.tracer = tracer
+        self.name = name
+        self.cat = cat
+        self.args = args
+        self.t0 = 0.0
+        self.child_us = 0.0
+        self.parent: Optional["_Span"] = None
+
+    def set(self, **kw) -> "_Span":
+        self.args.update(kw)
+        return self
+
+    def fence(self, value):
+        """Block on ``value`` (when fencing is active) so the span's end
+        timestamp covers the device work that produced it. Returns the
+        value unchanged either way."""
+        if self.tracer.fence:
+            value = _block(value)
+        return value
+
+    def __enter__(self) -> "_Span":
+        stack = self.tracer._stack()
+        self.parent = stack[-1] if stack else None
+        stack.append(self)
+        self.t0 = _now_us()
+        return self
+
+    def __exit__(self, *exc) -> bool:
+        dur = _now_us() - self.t0
+        stack = self.tracer._stack()
+        if stack and stack[-1] is self:
+            stack.pop()
+        if self.parent is not None:
+            self.parent.child_us += dur
+        self.tracer._record({
+            "name": self.name, "cat": self.cat, "ph": "X",
+            "ts": self.t0, "dur": dur, "pid": self.tracer.pid,
+            "tid": threading.get_ident() & 0xFFFF,
+            "args": {**self.args,
+                     "self_us": max(0.0, dur - self.child_us)},
+        })
+        return False
+
+
+class _NullSpan:
+    """Inert span returned when no tracer is active (or the caller is
+    inside a jax trace). One shared instance; every method is a no-op."""
+    __slots__ = ()
+
+    def __enter__(self) -> "_NullSpan":
+        return self
+
+    def __exit__(self, *exc) -> bool:
+        return False
+
+    def set(self, **_kw) -> "_NullSpan":
+        return self
+
+    def fence(self, value):
+        return value
+
+
+NULL_SPAN = _NullSpan()
+
+
+class Tracer:
+    """Host-side span recorder with Chrome-trace export.
+
+    ``fence=True`` makes ``span.fence(x)`` block on device values at
+    phase boundaries (the ``--trace`` launcher mode); with ``fence=False``
+    spans are pure host intervals (async launch times).
+    """
+
+    def __init__(self, *, fence: bool = False):
+        self.fence = fence
+        self.pid = os.getpid()
+        self.events: List[Dict[str, Any]] = []
+        self._tls = threading.local()
+        self._lock = threading.Lock()
+
+    # -- recording -----------------------------------------------------------
+    def _stack(self) -> List[_Span]:
+        stack = getattr(self._tls, "stack", None)
+        if stack is None:
+            stack = []
+            self._tls.stack = stack
+        return stack
+
+    def _record(self, event: Dict[str, Any]) -> None:
+        with self._lock:
+            self.events.append(event)
+
+    def span(self, name: str, cat: str = "phase", **args) -> _Span:
+        return _Span(self, name, cat, args)
+
+    def instant(self, name: str, cat: str = "mark", **args) -> None:
+        self._record({"name": name, "cat": cat, "ph": "i",
+                      "ts": _now_us(), "pid": self.pid,
+                      "tid": threading.get_ident() & 0xFFFF, "s": "t",
+                      "args": args})
+
+    def counter(self, name: str, **series: float) -> None:
+        self._record({"name": name, "cat": "metric", "ph": "C",
+                      "ts": _now_us(), "pid": self.pid, "tid": 0,
+                      "args": dict(series)})
+
+    # -- views ---------------------------------------------------------------
+    def spans(self, name: Optional[str] = None) -> List[Dict[str, Any]]:
+        """Completed ``"X"`` events (optionally filtered by name), in
+        completion order."""
+        return [e for e in self.events
+                if e["ph"] == "X" and (name is None or e["name"] == name)]
+
+    def summary(self) -> Dict[str, Dict[str, float]]:
+        """Per-name aggregate: count, inclusive total, exclusive total
+        (µs). Exclusive = duration minus direct children — sums to wall
+        time without double counting."""
+        out: Dict[str, Dict[str, float]] = {}
+        for e in self.spans():
+            s = out.setdefault(e["name"],
+                               {"count": 0, "total_us": 0.0,
+                                "self_us": 0.0})
+            s["count"] += 1
+            s["total_us"] += e["dur"]
+            s["self_us"] += e["args"].get("self_us", e["dur"])
+        return out
+
+    # -- export --------------------------------------------------------------
+    def to_chrome(self) -> Dict[str, Any]:
+        """The Chrome trace-event JSON object (``traceEvents`` array of
+        events each carrying the required ``ph``/``ts``/``name`` — and
+        ``dur`` for complete events)."""
+        return {"traceEvents": list(self.events),
+                "displayTimeUnit": "ms"}
+
+    def write(self, path) -> None:
+        from pathlib import Path
+        p = Path(path)
+        p.parent.mkdir(parents=True, exist_ok=True)
+        p.write_text(json.dumps(self.to_chrome(), indent=1))
+
+
+# ---------------------------------------------------------------------------
+# module-level hook (the instrumented hot path calls this)
+# ---------------------------------------------------------------------------
+
+_ACTIVE: Optional[Tracer] = None
+
+
+def activate(tracer: Tracer) -> Tracer:
+    """Install ``tracer`` as the process-wide :func:`phase` sink."""
+    global _ACTIVE
+    _ACTIVE = tracer
+    return tracer
+
+
+def deactivate() -> None:
+    global _ACTIVE
+    _ACTIVE = None
+
+
+def active() -> Optional[Tracer]:
+    return _ACTIVE
+
+
+def phase(name: str, cat: str = "phase", **args):
+    """Span hook for instrumented library code (``repro.plan.exchange``
+    phases: plan_build / condense / dispatch / expert_ffn / combine).
+
+    Returns :data:`NULL_SPAN` (free) unless a tracer is active AND the
+    caller runs outside a jax trace — so production steps pay one
+    module-global comparison, and jitted/scanned bodies never record
+    compile-time timestamps."""
+    tracer = _ACTIVE
+    if tracer is None:
+        return NULL_SPAN
+    if not _trace_state_clean():
+        return NULL_SPAN
+    return tracer.span(name, cat, **args)

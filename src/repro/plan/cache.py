@@ -54,7 +54,8 @@ def plan_key(*, n_seq: int, seq_len: int, d_model: int, capacity: int,
              compute_dtype: str = "bfloat16",
              gpu_speed: float = 1.0e13, d_ff: int = 0,
              hier_dedup: str = "off",
-             params_version: str = "0") -> str:
+             params_version: str = "0",
+             chunk_overhead_ms: float = -1.0) -> str:
     """The cache key: batch shape × seq len × objective × topology
     fingerprint, plus every knob that selects the static schedule
     (``gpu_speed``/``d_ff`` price the FFN stage the chunk search
@@ -69,11 +70,15 @@ def plan_key(*, n_seq: int, seq_len: int, d_model: int, capacity: int,
     bakes the router's decisions in — keying (and the serialized
     header, ``repro.plan.serial``) on the fingerprint guarantees a
     stale assignment is never trusted after an optimizer step."""
+    # A calibrated per-chunk overhead changes the planned chunk count /
+    # estimate, so it is part of the key; the unset default (<= 0) adds
+    # nothing, keeping historical keys (and spilled caches) valid.
+    o_part = f"_o{chunk_overhead_ms:.3g}" if chunk_overhead_ms > 0 else ""
     return (f"b{n_seq}_s{seq_len}_d{d_model}_f{d_ff}_c{capacity}"
             f"_k{top_k}_e{num_experts}_{mode}_{objective}"
             f"_{exec_mode}{pipeline_chunks}_p{gpu_speed:.4g}"
             f"_{comm_mode}_{topology_fingerprint(topo, M)}"
-            f"_{compute_dtype}_w{hier_dedup}_pv{params_version}")
+            f"_{compute_dtype}_w{hier_dedup}_pv{params_version}{o_part}")
 
 
 class PlanCache:
@@ -235,7 +240,8 @@ def prefill_plan_key(cfg: ModelConfig, luffy: LuffyConfig, dist,
         comm_mode=luffy.comm_mode if M > 1 else "local",
         topo=topo if M > 1 else None, M=M,
         compute_dtype=cfg.compute_dtype, gpu_speed=luffy.gpu_speed,
-        d_ff=cfg.moe.d_ff, hier_dedup=luffy.hier_dedup)
+        d_ff=cfg.moe.d_ff, hier_dedup=luffy.hier_dedup,
+        chunk_overhead_ms=luffy.chunk_overhead_ms)
 
 
 def precompute_prefill_plans(cfg: ModelConfig, luffy: LuffyConfig, dist,

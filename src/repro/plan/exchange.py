@@ -46,9 +46,11 @@ from repro.condense.plan import (CondenseCarry, CondensePlan,
 from repro.config import LuffyConfig, ModelConfig
 from repro.core import migration as mig
 from repro.core.gating import GateOutput, dispatch_positions
+from repro.obs import trace as obs_trace
 from repro.plan import objectives
 from repro.plan.estimate import PlanEstimate, estimate_exchange
 from repro.sched import ChunkPlan, plan_chunks, run_pipeline
+from repro.sched.cost import resolve_chunk_overhead_ms
 
 Array = jnp.ndarray
 
@@ -269,12 +271,16 @@ def plan_static_schedule(cfg: ModelConfig, luffy: LuffyConfig, topo, M: int,
         # sweep); gate matmuls are deliberately excluded everywhere so
         # objective decisions stay consistent with the calibrated model
         ffn_ms = ffn_rows * 4.0 * d * m.d_ff / luffy.gpu_speed * 1e3
+    # per-chunk overhead: the measured fit when calibration set one
+    # (repro.obs.calibrate via LuffyConfig), the constant otherwise
+    o_ms = resolve_chunk_overhead_ms(luffy.chunk_overhead_ms)
     req = luffy.pipeline_chunks if pipelined else 1
     if pipelined and req <= 0:
         if priced:
             req = estimate_exchange(T, m.top_k, d, topo=topo,
                                     bytes_per_el=bytes_per_el,
-                                    ffn_ms=ffn_ms, chunks=None).chunks
+                                    ffn_ms=ffn_ms, chunks=None,
+                                    chunk_overhead_ms=o_ms).chunks
         else:
             req = DEFAULT_PIPELINE_CHUNKS   # nothing to price against
     chunks = plan_chunks(capacity, req)
@@ -282,7 +288,8 @@ def plan_static_schedule(cfg: ModelConfig, luffy: LuffyConfig, topo, M: int,
     if priced:
         est = estimate_exchange(T, m.top_k, d, topo=topo,
                                 bytes_per_el=bytes_per_el, ffn_ms=ffn_ms,
-                                chunks=chunks.n_chunks)
+                                chunks=chunks.n_chunks,
+                                chunk_overhead_ms=o_ms)
     return pipelined, chunks, est
 
 
@@ -342,15 +349,17 @@ def build_exchange_plan(gate: GateOutput, xn: Array, cfg: ModelConfig,
     # ---- token condensation (§V, repro.condense) -------------------------
     do_condense = luffy.enable_condensation and mode != "decode"
     if do_condense:
-        cp = cplan.build_condense_plan(
-            xn, expert_idx[:, 0], threshold, group_size=group_size,
-            s_prev=(None if s_prev is None
-                    else s_prev.reshape(-1, group_size, group_size)),
-            s1=luffy.s1, s2=luffy.s2, use_kernel=use_kernel,
-            backend=luffy.similarity_backend, lsh_bits=luffy.lsh_bits,
-            lsh_seed=luffy.lsh_seed, carry=condense_reuse_from,
-            reuse_mode=luffy.condense_reuse,
-            max_age=luffy.condense_reuse_max_age)
+        with obs_trace.phase("condense") as _sp:
+            cp = cplan.build_condense_plan(
+                xn, expert_idx[:, 0], threshold, group_size=group_size,
+                s_prev=(None if s_prev is None
+                        else s_prev.reshape(-1, group_size, group_size)),
+                s1=luffy.s1, s2=luffy.s2, use_kernel=use_kernel,
+                backend=luffy.similarity_backend, lsh_bits=luffy.lsh_bits,
+                lsh_seed=luffy.lsh_seed, carry=condense_reuse_from,
+                reuse_mode=luffy.condense_reuse,
+                max_age=luffy.condense_reuse_max_age)
+            cp = _sp.fence(cp)
         keep = keep & cp.is_rep[:, None]
     else:
         cp = identity_condense_plan(T, backend=luffy.similarity_backend)
@@ -399,7 +408,9 @@ def build_exchange_plan(gate: GateOutput, xn: Array, cfg: ModelConfig,
         lens_g = jax.lax.all_gather(sideband["seq_len"], comm.axis_name,
                                     axis=0, tiled=True)       # [M*n_seq]
         lens_f = lens_g.astype(jnp.float32)
-        octx = objectives.ObjectiveContext(topo=topo)
+        o_ms = resolve_chunk_overhead_ms(luffy.chunk_overhead_ms)
+        octx = objectives.ObjectiveContext(topo=topo,
+                                           chunk_overhead_ms=o_ms)
         if est is not None:
             octx = objectives.ObjectiveContext(
                 topo=topo, ffn_ms=est.ffn_ms,
@@ -408,7 +419,8 @@ def build_exchange_plan(gate: GateOutput, xn: Array, cfg: ModelConfig,
                 dispatch_inter_ms=est.inter_dispatch_bytes
                 / topo.inter_bw * 1e3,
                 chunks=chunks.n_chunks,
-                row_bytes=float(d * jnp.dtype(cdt).itemsize))
+                row_bytes=float(d * jnp.dtype(cdt).itemsize),
+                chunk_overhead_ms=o_ms)
 
         def _replan(cg, lf):
             return tuple(objectives.plan_migration_with_objective(
@@ -615,17 +627,23 @@ def execute_plan(params, x: Array, sideband: Dict[str, Array],
     # ---- deduplicated hier wire (DESIGN.md §10) --------------------------
     if plan.wire == "dedup":
         assert not migrate and not plan.pipelined, (plan.mode, plan.wire)
-        x_rows, gw_rows, rvalid, wstate = cwire.dedup_dispatch(
-            xf.astype(cdt), expert_idx, gate_w, valid, pos,
-            comm=comm, e_local=E_local, capacity=C)
-        h = _rms(x_rows, params["norm"]["scale"]).astype(cdt)
-        y_rows = expert_ffn(params["experts"],
-                            h.reshape(E_local, M * C, d), act,
-                            cdt, use_kernel=use_kernel
-                            ).reshape(E_local, M, C, d)
-        delta = cwire.dedup_combine(y_rows * gw_rows[..., None], wstate,
-                                    comm=comm)
-        y_tok = xf + delta.astype(xf.dtype)
+        with obs_trace.phase("dispatch") as _sp:
+            x_rows, gw_rows, rvalid, wstate = cwire.dedup_dispatch(
+                xf.astype(cdt), expert_idx, gate_w, valid, pos,
+                comm=comm, e_local=E_local, capacity=C)
+            x_rows = _sp.fence(x_rows)
+        with obs_trace.phase("expert_ffn") as _sp:
+            h = _rms(x_rows, params["norm"]["scale"]).astype(cdt)
+            y_rows = expert_ffn(params["experts"],
+                                h.reshape(E_local, M * C, d), act,
+                                cdt, use_kernel=use_kernel
+                                ).reshape(E_local, M, C, d)
+            y_rows = _sp.fence(y_rows)
+        with obs_trace.phase("combine") as _sp:
+            delta = cwire.dedup_combine(y_rows * gw_rows[..., None],
+                                        wstate, comm=comm)
+            y_tok = xf + delta.astype(xf.dtype)
+            y_tok = _sp.fence(y_tok)
         row_bytes = float((d + 2) * jnp.dtype(cdt).itemsize)
         return _finish(y_tok, dict(sideband), s_next,
                        jnp.float32(0.0), jnp.float32(1.0 / M),
@@ -650,14 +668,16 @@ def execute_plan(params, x: Array, sideband: Dict[str, Array],
     ], axis=-1).reshape(-1, d + 2)                            # [T*k, d+2]
     meta = jnp.stack([dest_of_tok + 1, tok_pos], -1).reshape(-1, 2)
 
-    buf = jnp.zeros((E, C, d + 2), cdt)
-    mbuf = jnp.zeros((E, C, 2), jnp.int32)
-    p_safe = jnp.where(v_f, p_f, 0)
-    e_safe = jnp.where(v_f, e_f, 0)
-    buf = buf.at[e_safe, p_safe].add(
-        payload * v_f[:, None].astype(cdt), mode="drop")
-    mbuf = mbuf.at[e_safe, p_safe].add(
-        meta * v_f[:, None].astype(jnp.int32), mode="drop")
+    with obs_trace.phase("dispatch_pack") as _sp:
+        buf = jnp.zeros((E, C, d + 2), cdt)
+        mbuf = jnp.zeros((E, C, 2), jnp.int32)
+        p_safe = jnp.where(v_f, p_f, 0)
+        e_safe = jnp.where(v_f, e_f, 0)
+        buf = buf.at[e_safe, p_safe].add(
+            payload * v_f[:, None].astype(cdt), mode="drop")
+        mbuf = mbuf.at[e_safe, p_safe].add(
+            meta * v_f[:, None].astype(jnp.int32), mode="drop")
+        buf = _sp.fence(buf)
 
     # ---- dispatch → expert FFN → (vanilla) combine ------------------------
     # plan.pipelined chunks the static capacity dim and runs the
@@ -706,41 +726,51 @@ def execute_plan(params, x: Array, sideband: Dict[str, Array],
             meta_k = mk.reshape(M, E_local, s, 2).transpose(1, 0, 2, 3)
             return _ffn_rows(rows_k) + (meta_k,)
 
-        if not migrate:
-            def _comb(k, res):
-                out_k = res[0]                 # [E_local, M, Ck, d]
-                back_k = out_k.transpose(1, 0, 2, 3) \
-                              .reshape(E, out_k.shape[2], d)
-                return comm.combine(back_k)
+        with obs_trace.phase("pipeline_exchange") as _psp:
+            if not migrate:
+                def _comb(k, res):
+                    out_k = res[0]             # [E_local, M, Ck, d]
+                    back_k = out_k.transpose(1, 0, 2, 3) \
+                                  .reshape(E, out_k.shape[2], d)
+                    return comm.combine(back_k)
 
-            _, backs = run_pipeline(cplan.n_chunks, dispatch=_disp,
-                                    compute=_compute, combine=_comb)
-            back = jnp.concatenate(backs, axis=1)            # [E, C, d]
-        else:
-            outs, _ = run_pipeline(cplan.n_chunks, dispatch=_disp,
-                                   compute=_compute)
-            out_rows = jnp.concatenate([o for o, _, _ in outs], axis=2) \
-                          .reshape(E_local, M * C, d)
-            prim = jnp.concatenate([p for _, p, _ in outs], axis=2) \
-                      .reshape(E_local, M * C, 1)
-            rmeta = jnp.concatenate([m for _, _, m in outs], axis=2) \
-                       .reshape(E_local, M * C, 2)
+                _, backs = run_pipeline(cplan.n_chunks, dispatch=_disp,
+                                        compute=_compute, combine=_comb)
+                back = jnp.concatenate(backs, axis=1)        # [E, C, d]
+                back = _psp.fence(back)
+            else:
+                outs, _ = run_pipeline(cplan.n_chunks, dispatch=_disp,
+                                       compute=_compute)
+                out_rows = jnp.concatenate([o for o, _, _ in outs],
+                                           axis=2) \
+                              .reshape(E_local, M * C, d)
+                prim = jnp.concatenate([p for _, p, _ in outs], axis=2) \
+                          .reshape(E_local, M * C, 1)
+                rmeta = jnp.concatenate([m for _, _, m in outs], axis=2) \
+                           .reshape(E_local, M * C, 2)
+                out_rows = _psp.fence(out_rows)
     else:
-        if M > 1:
-            buf = comm.all_to_all(buf)
-            mbuf = comm.all_to_all(mbuf)
-        # [M_src * E_local, C, .] -> [E_local, M_src, C, .]
-        rows4 = buf.reshape(M, E_local, C, d + 2).transpose(1, 0, 2, 3)
-        rmeta = mbuf.reshape(M, E_local, C, 2).transpose(1, 0, 2, 3) \
-                    .reshape(E_local, M * C, 2)
-        out4, prim4 = _ffn_rows(rows4)
+        with obs_trace.phase("dispatch") as _sp:
+            if M > 1:
+                buf = comm.all_to_all(buf)
+                mbuf = comm.all_to_all(mbuf)
+            # [M_src * E_local, C, .] -> [E_local, M_src, C, .]
+            rows4 = buf.reshape(M, E_local, C, d + 2).transpose(1, 0, 2, 3)
+            rmeta = mbuf.reshape(M, E_local, C, 2).transpose(1, 0, 2, 3) \
+                        .reshape(E_local, M * C, 2)
+            rows4 = _sp.fence(rows4)
+        with obs_trace.phase("expert_ffn") as _sp:
+            out4, prim4 = _ffn_rows(rows4)
+            out4 = _sp.fence(out4)
         out_rows = out4.reshape(E_local, M * C, d)
         prim = prim4.reshape(E_local, M * C, 1)
         if not migrate:
-            back = out_rows.reshape(E_local, M, C, d) \
-                           .transpose(1, 0, 2, 3).reshape(E, C, d)
-            if M > 1:
-                back = comm.combine(back)
+            with obs_trace.phase("combine") as _sp:
+                back = out_rows.reshape(E_local, M, C, d) \
+                               .transpose(1, 0, 2, 3).reshape(E, C, d)
+                if M > 1:
+                    back = comm.combine(back)
+                back = _sp.fence(back)
 
     # ---- combine ----------------------------------------------------------
     if not migrate:

@@ -46,7 +46,11 @@ class ObjectiveContext(NamedTuple):
     anything); ``ffn_ms`` is the expert-FFN stage the pipeline hides
     collectives under; ``chunks`` is the executed/planned pipeline depth
     (1 = sync); ``row_bytes`` converts the planner's token counts to
-    combine-payload bytes.
+    combine-payload bytes. ``chunk_overhead_ms`` (and the topology's
+    link speeds) default to hand-set constants; a measured fit from
+    ``repro.obs.calibrate`` replaces both, so the exposed-time model
+    prices real links (``build_exchange_plan`` threads
+    ``LuffyConfig.chunk_overhead_ms`` through here).
     """
     topo: Optional[Topology]
     ffn_ms: float = 0.0

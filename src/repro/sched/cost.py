@@ -29,6 +29,16 @@ from repro.comm.topology import Topology
 DEFAULT_CHUNK_OVERHEAD_MS = 0.05
 
 
+def resolve_chunk_overhead_ms(value: float = None) -> float:
+    """Normalize a configured per-chunk overhead: None or <= 0 means the
+    built-in constant; a positive value (typically a measured fit from
+    ``repro.obs.calibrate``, via ``LuffyConfig.chunk_overhead_ms``)
+    wins."""
+    if value is None or value <= 0.0:
+        return DEFAULT_CHUNK_OVERHEAD_MS
+    return float(value)
+
+
 def overlap_ms(topo: Topology, chunks: int, *, dispatch_ms: float,
                ffn_ms: float, combine_ms: float = 0.0,
                chunk_overhead_ms: float = DEFAULT_CHUNK_OVERHEAD_MS

@@ -110,6 +110,21 @@ def make_eval_step(cfg: ModelConfig, luffy: LuffyConfig, dist: DistContext,
     return step
 
 
+def finalize_metrics(metrics, luffy: LuffyConfig):
+    """Host-side view of one step's metrics dict: device scalars pulled
+    to python floats, config-inapplicable keys masked to ``None`` (an
+    ``inter_bytes_shipped`` of 0.0 from a dense-wire run means "nothing
+    measured", not "zero bytes"; see ``repro.obs.metrics``)."""
+    from repro.obs import metrics as obs_metrics
+    out = {}
+    for k, v in metrics.items():
+        try:
+            out[k] = float(v)
+        except (TypeError, ValueError):
+            out[k] = v
+    return obs_metrics.mask_inapplicable(out, luffy)
+
+
 def pick_bucket_host(luffy: LuffyConfig, threshold: float,
                      observed_rate: float) -> int:
     """Host-side bucket selection: the largest capacity-reduction bucket
