@@ -25,9 +25,17 @@ def timeit(fn, *args, warmup: int = 1, iters: int = 3):
     return ts[len(ts) // 2] * 1e6
 
 
+# Every row emit() printed this process, in order — the run.py harness
+# consolidates them into artifacts/BENCH_step_time.json after the sweep.
+EMITTED = []
+
+
 def emit(rows):
-    """Print ``name,us_per_call,derived`` CSV rows."""
+    """Print ``name,us_per_call,derived`` CSV rows (and accumulate them
+    for the consolidated harness artifact)."""
     for name, us, derived in rows:
+        EMITTED.append({"name": str(name), "us": float(us),
+                        "derived": str(derived)})
         print(f"{name},{us:.1f},{derived}")
 
 

@@ -5,6 +5,7 @@ convergence/ablation settings.
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import traceback
 
@@ -24,6 +25,7 @@ MODULES = [
     "fig_plan_reuse",       # beyond-paper: plan-lifecycle reuse sweep
     "fig_condense_backend",  # beyond-paper: similarity-backend sweep
     "fig_calibration",      # beyond-paper: measured-vs-predicted fit
+    "fig_autotune",         # beyond-paper: calibration-driven autotuning
     "roofline",             # deliverable (g)
 ]
 
@@ -48,6 +50,13 @@ def main() -> None:
             traceback.print_exc()
             failures.append(mod_name)
             print(f"{mod_name}/FAILED,0.0,{type(e).__name__}")
+    # consolidated timing artifact (written even on partial failure so
+    # CI uploads whatever completed)
+    from benchmarks.common import ARTIFACTS, EMITTED
+    ARTIFACTS.mkdir(parents=True, exist_ok=True)
+    (ARTIFACTS / "BENCH_step_time.json").write_text(json.dumps(
+        {"schema_version": 1, "failures": failures, "rows": EMITTED},
+        indent=1))
     if failures:
         print(f"# FAILURES: {failures}")
         sys.exit(1)

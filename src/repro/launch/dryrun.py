@@ -94,7 +94,8 @@ def comm_traffic_ledger(cfg, shape, mesh, *, nodes: int = 0,
                         lsh_bits: int = 8, condense_reuse: str = "off",
                         hier_dedup: str = "off",
                         condense_group: int = 128,
-                        calibration=None):
+                        calibration=None,
+                        autotune_applied: bool = False):
     """Analytic per-step dispatch traffic split by link tier (DESIGN.md §5)
     plus the modeled compute/communication overlap (§6).
 
@@ -264,25 +265,56 @@ def comm_traffic_ledger(cfg, shape, mesh, *, nodes: int = 0,
                 c_reused * sim_ms[similarity_backend],
         },
     }
+
+    # ---- autotune ledger (DESIGN.md §12) ---------------------------------
+    # The calibration-driven knob search over THIS ledger's topology and
+    # pricing constants: chosen config + modeled step time vs the repo
+    # defaults. `applied` records whether the run actually resolved a
+    # TunedConfig into its compiled LuffyConfig (--autotune) — the
+    # section itself is always modeled, so every dryrun artifact reports
+    # what tuning WOULD buy on its fabric. Defaults are always in the
+    # grid, so modeled_step_ms <= default_step_ms by construction
+    # (swept by benchmarks/fig_autotune.py).
+    from repro.obs.autotune import autotune_config
+    tuned = autotune_config(
+        topo=topo, tokens=tokens, top_k=k, d_model=cfg.d_model,
+        d_ff=cfg.moe.d_ff, num_layers=cfg.num_layers,
+        n_moe=max(1, n_moe), n_slots=n_slots,
+        num_experts=cfg.moe.num_experts,
+        mesh_devices=mesh.devices.size, group_size=G,
+        plan_reuse=plan_reuse, condense_reuse=condense_reuse,
+        calib=calibration, ffn_speed=peak_flops)
+    out["autotune"] = {
+        "applied": bool(autotune_applied),
+        "key": tuned.key,
+        "knobs": dict(tuned.knobs),
+        "modeled_step_ms": tuned.modeled_step_ms,
+        "default_step_ms": tuned.default_step_ms,
+        "modeled_savings_ms": tuned.modeled_savings_ms,
+        "candidates": tuned.candidates,
+    }
     return out
 
 
 def run_pair(arch: str, shape_name: str, multi_pod: bool,
              out_path: Path, *, luffy_on: bool = True,
              bucket: int = 0, variant: str = "baseline",
-             nodes: int = 0, exec_mode: str = "sync",
-             pipeline_chunks: int = 4, plan_objective: str = "traffic",
-             plan_reuse: str = "off", similarity_backend: str = "exact",
-             lsh_bits: int = 8, condense_reuse: str = "off",
-             hier_dedup: str = "off", calibration_path: str = ""):
+             nodes: int = 0, exec_mode: str = None,
+             pipeline_chunks: int = None, plan_objective: str = None,
+             plan_reuse: str = "off", similarity_backend: str = None,
+             lsh_bits: int = None, condense_reuse: str = "off",
+             hier_dedup: str = None, calibration_path: str = "",
+             autotune_dir: str = "", autotune_force: bool = False):
     import jax
     import jax.numpy as jnp
     from repro import optim, serve_lib, train_lib
-    from repro.config import SHAPES, LuffyConfig, OptimConfig
+    from repro.config import (SHAPES, LuffyConfig, OptimConfig,
+                              resolve_pipeline_chunks)
     from repro.configs import get_config
     from repro.dist import make_dist
-    from repro.launch.mesh import make_production_mesh
-    from repro.models.model import build_model
+    from repro.launch.mesh import (PEAK_FLOPS_BF16, make_production_mesh,
+                                   topology_for_mesh)
+    from repro.obs import autotune as obs_at
 
     t0 = time.time()
     cfg = get_config(arch)
@@ -297,10 +329,62 @@ def run_pair(arch: str, shape_name: str, multi_pod: bool,
                 "(wrong magic, schema drift, or malformed)")
     shape = SHAPES[shape_name]
     mesh = make_production_mesh(multi_pod=multi_pod, nodes=nodes)
+
+    # knob resolution (DESIGN.md §12): explicit args > tuned artifact
+    # (--autotune) > historical defaults. comm_mode stays structural —
+    # it is pinned by the mesh axes the --nodes split built.
+    cli = {"exec_mode": exec_mode, "pipeline_chunks": pipeline_chunks,
+           "plan_objective": plan_objective,
+           "similarity_backend": similarity_backend,
+           "lsh_bits": lsh_bits, "hier_dedup": hier_dedup}
+    explicit = {k for k, v in cli.items() if v is not None}
+    comm_mode = "hier" if nodes > 1 else "flat"
+    tuned = None
+    if autotune_dir and cfg.uses_moe:
+        at_topo = topology_for_mesh(mesh)
+        n_moe_l = sum(1 for i in range(cfg.num_layers)
+                      if cfg.ffn_kind(i) == "moe")
+        n_seq_l = max(1, shape.global_batch // mesh.devices.size)
+        tuned = obs_at.run_autotune(
+            topo=at_topo, out_dir=autotune_dir, force=autotune_force,
+            tokens=shape.global_batch * shape.seq_len,
+            top_k=cfg.moe.top_k, d_model=cfg.d_model,
+            d_ff=cfg.moe.d_ff, num_layers=cfg.num_layers,
+            n_moe=max(1, n_moe_l),
+            n_slots=at_topo.num_devices * n_seq_l,
+            num_experts=cfg.moe.num_experts,
+            mesh_devices=mesh.devices.size,
+            group_size=min(128, shape.seq_len), plan_reuse=plan_reuse,
+            condense_reuse=condense_reuse, calib=calibration,
+            ffn_speed=PEAK_FLOPS_BF16)
+        print(f"autotune {tuned.key}: {tuned.knobs} modeled "
+              f"{tuned.modeled_step_ms:.3f}ms vs default "
+              f"{tuned.default_step_ms:.3f}ms")
+    knobs = dict(obs_at.DEFAULT_KNOBS)
+    knobs["pipeline_chunks"] = None    # sentinel: resolve by objective
+    if tuned is not None:
+        knobs.update({k: v for k, v in tuned.knobs.items()
+                      if k not in explicit and k != "comm_mode"})
+    knobs.update({k: v for k, v in cli.items() if v is not None})
+    if "hier_dedup" not in explicit and knobs["hier_dedup"] == "on" \
+            and (comm_mode != "hier" or knobs["exec_mode"] != "sync"):
+        knobs["hier_dedup"] = "off"   # dedup wire is hier+sync scope
+    if knobs["pipeline_chunks"] is None:
+        knobs["pipeline_chunks"] = resolve_pipeline_chunks(
+            None, knobs["plan_objective"])
+    exec_mode = knobs["exec_mode"]
+    pipeline_chunks = knobs["pipeline_chunks"]
+    plan_objective = knobs["plan_objective"]
+    similarity_backend = knobs["similarity_backend"]
+    lsh_bits = knobs["lsh_bits"]
+    hier_dedup = knobs["hier_dedup"]
+
+    from repro.models.model import build_model
     mesh_tag = "x".join(str(d) for d in mesh.devices.shape)
     rec = {"arch": arch, "shape": shape_name, "mesh": mesh_tag,
            "variant": variant, "exec_mode": exec_mode,
            "plan_objective": plan_objective, "plan_reuse": plan_reuse,
+           "autotuned": tuned is not None,
            "status": "unknown"}
 
     if shape_name == "long_500k" and not cfg.supports_long_decode:
@@ -327,7 +411,7 @@ def run_pair(arch: str, shape_name: str, multi_pod: bool,
     luffy = LuffyConfig(
         enable_condensation=luffy_on and cfg.uses_moe,
         enable_migration=luffy_on and cfg.uses_moe,
-        comm_mode="hier" if nodes > 1 else "flat",
+        comm_mode=comm_mode,
         exec_mode=exec_mode, pipeline_chunks=pipeline_chunks,
         plan_objective=plan_objective, plan_reuse=plan_reuse,
         similarity_backend=similarity_backend, lsh_bits=lsh_bits,
@@ -467,7 +551,8 @@ def run_pair(arch: str, shape_name: str, multi_pod: bool,
             similarity_backend=similarity_backend, lsh_bits=lsh_bits,
             condense_reuse=condense_reuse, hier_dedup=hier_dedup,
             condense_group=luffy.condense_group,
-            calibration=calibration)
+            calibration=calibration,
+            autotune_applied=tuned is not None)
                         if shape.mode == "train" else None),
     })
     out_path.parent.mkdir(parents=True, exist_ok=True)
@@ -558,35 +643,48 @@ def main():
                     help="hierarchical mesh: split the model axis into "
                          "this many nodes (comm_mode=hier)")
     ap.add_argument("--exec-mode", choices=["sync", "pipeline"],
-                    default="sync",
+                    default=None,
                     help="MoE execution schedule: strict order or "
-                         "chunked pipeline with overlap (DESIGN.md §6)")
+                         "chunked pipeline with overlap (DESIGN.md §6; "
+                         "default sync)")
     ap.add_argument("--pipeline-chunks", type=int, default=None,
                     help="capacity chunks for --exec-mode pipeline "
                          "(default 4; under --plan-objective overlap "
                          "the estimate search picks the count)")
-    ap.add_argument("--plan-objective", default="traffic",
+    ap.add_argument("--plan-objective", default=None,
                     choices=["traffic", "overlap"],
-                    help="migration planner objective (DESIGN.md §7)")
+                    help="migration planner objective (DESIGN.md §7; "
+                         "default traffic)")
     ap.add_argument("--plan-reuse", default="off",
                     choices=["off", "signature", "always"],
                     help="cross-layer plan reuse; also selects the "
                          "comm_ledger plan_reuse section's modeled "
                          "mode (DESIGN.md §9)")
-    ap.add_argument("--similarity-backend", default="exact",
+    ap.add_argument("--similarity-backend", default=None,
                     choices=["exact", "lsh"],
                     help="condensation similarity backend "
-                         "(repro.condense.backends, DESIGN.md §10)")
-    ap.add_argument("--lsh-bits", type=int, default=8,
-                    help="projections per LSH bucket code")
+                         "(repro.condense.backends, DESIGN.md §10; "
+                         "default exact)")
+    ap.add_argument("--lsh-bits", type=int, default=None,
+                    help="projections per LSH bucket code (default 8)")
     ap.add_argument("--condense-reuse", default="off",
                     choices=["off", "signature", "always"],
                     help="cross-layer condense-plan reuse; also selects "
                          "the comm_ledger condensation section's "
                          "modeled mode (DESIGN.md §10)")
-    ap.add_argument("--hier-dedup", default="off", choices=["off", "on"],
+    ap.add_argument("--hier-dedup", default=None, choices=["off", "on"],
                     help="deduplicated hier wire format "
-                         "(repro.condense.wire; needs --nodes > 1)")
+                         "(repro.condense.wire; needs --nodes > 1; "
+                         "default off)")
+    ap.add_argument("--autotune", default="",
+                    help="TunedConfig artifact dir (repro.obs.autotune): "
+                         "fill every knob the CLI left unset from the "
+                         "tuned artifact for this mesh's topology "
+                         "(explicit flags always override; DESIGN.md "
+                         "§12)")
+    ap.add_argument("--autotune-force", action="store_true",
+                    help="re-run the autotune search even when a valid "
+                         "artifact exists")
     ap.add_argument("--calibration", default="",
                     help="path to a repro.obs.calibrate artifact "
                          "(*.calib.json): price the comm_ledger with "
@@ -598,26 +696,32 @@ def main():
                          "JSONL) to this path")
     args = ap.parse_args()
     from repro.config import resolve_pipeline_chunks
-    args.pipeline_chunks = resolve_pipeline_chunks(args.pipeline_chunks,
-                                                   args.plan_objective)
     if args.all:
         orchestrate(args.jobs)
         return
+    # knob resolution happens in run_pair (None = "not set", so
+    # --autotune can fill it); the artifact tag reflects only what the
+    # CLI pinned explicitly
     mesh_tag = "2x16x16" if args.multi_pod else "16x16"
     if args.nodes > 1:
         mesh_tag += f"__hier{args.nodes}"
     if args.exec_mode == "pipeline":
-        mesh_tag += f"__pipe{args.pipeline_chunks}"
-    if args.plan_objective != "traffic":
+        chunks = (args.pipeline_chunks if args.pipeline_chunks is not None
+                  else resolve_pipeline_chunks(
+                      None, args.plan_objective or "traffic"))
+        mesh_tag += f"__pipe{chunks}"
+    if args.plan_objective not in (None, "traffic"):
         mesh_tag += f"__{args.plan_objective}"
     if args.plan_reuse != "off":
         mesh_tag += f"__reuse-{args.plan_reuse}"
-    if args.similarity_backend != "exact":
+    if args.similarity_backend not in (None, "exact"):
         mesh_tag += f"__{args.similarity_backend}"
     if args.condense_reuse != "off":
         mesh_tag += f"__creuse-{args.condense_reuse}"
-    if args.hier_dedup != "off":
+    if args.hier_dedup == "on":
         mesh_tag += "__dedup"
+    if args.autotune:
+        mesh_tag += "__autotuned"
     out = Path(args.out) if args.out else \
         ARTIFACTS / f"{args.arch}__{args.shape}__{mesh_tag}.json"
     out.parent.mkdir(parents=True, exist_ok=True)
@@ -633,7 +737,9 @@ def main():
                        lsh_bits=args.lsh_bits,
                        condense_reuse=args.condense_reuse,
                        hier_dedup=args.hier_dedup,
-                       calibration_path=args.calibration)
+                       calibration_path=args.calibration,
+                       autotune_dir=args.autotune,
+                       autotune_force=args.autotune_force)
         if args.metrics_json and rec.get("comm_ledger"):
             from repro.obs import metrics as obs_metrics
             flat = obs_metrics.flatten("comm_ledger", rec["comm_ledger"])

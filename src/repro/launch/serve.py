@@ -31,11 +31,11 @@ def main():
                          "build/execute MoE core (times the pipelined "
                          "serving forward)")
     ap.add_argument("--exec-mode", choices=["sync", "pipeline"],
-                    default="sync",
+                    default=None,
                     help="MoE execution schedule for prefill/decode "
                          "sublayers: strict order or chunked software "
                          "pipeline with compute/comm overlap "
-                         "(bit-identical; DESIGN.md §6)")
+                         "(bit-identical; DESIGN.md §6; default sync)")
     ap.add_argument("--pipeline-chunks", type=int, default=None,
                     help="capacity chunks for --exec-mode pipeline "
                          "(default 4; under --plan-objective overlap "
@@ -48,7 +48,7 @@ def main():
     ap.add_argument("--precompute-plans", action="store_true",
                     help="warm --plan-cache with this run's prefill "
                          "shape before serving (ahead-of-time planning)")
-    ap.add_argument("--hier-dedup", default="off", choices=["off", "on"],
+    ap.add_argument("--hier-dedup", default=None, choices=["off", "on"],
                     help="deduplicated hier wire format on the batched "
                          "prefill exchange (repro.condense.wire, "
                          "DESIGN.md §10): each prompt token's payload "
@@ -57,15 +57,24 @@ def main():
                          "top-k copy dedup still applies. Needs a "
                          "hierarchical mesh; the flat host mesh keeps "
                          "the dense wire")
-    ap.add_argument("--plan-objective", default="traffic",
+    ap.add_argument("--plan-objective", default=None,
                     choices=["traffic", "overlap"],
-                    help="migration planner objective (DESIGN.md §7). "
-                         "RESERVED for a future serving migration mode: "
-                         "today serving forces migration off (prompts "
-                         "are never re-homed), so both choices build "
-                         "identical vanilla plans — the flag only "
-                         "threads the config through for parity with "
-                         "train/dryrun")
+                    help="migration planner objective (DESIGN.md §7; "
+                         "default traffic). RESERVED for a future "
+                         "serving migration mode: today serving forces "
+                         "migration off (prompts are never re-homed), "
+                         "so both choices build identical vanilla plans "
+                         "— the flag only threads the config through "
+                         "for parity with train/dryrun")
+    ap.add_argument("--autotune", default="",
+                    help="TunedConfig artifact dir (repro.obs.autotune): "
+                         "fill the execution knobs the CLI left unset "
+                         "from the tuned artifact for this mesh's "
+                         "topology (explicit flags always override; "
+                         "DESIGN.md §12)")
+    ap.add_argument("--autotune-force", action="store_true",
+                    help="re-run the autotune search even when a valid "
+                         "artifact exists")
     ap.add_argument("--trace", action="store_true",
                     help="step tracing (repro.obs.trace): fenced spans "
                          "around batched prefill, the step-wise prompt "
@@ -96,16 +105,52 @@ def main():
         dist = make_dist(mesh, "decode", args.batch, moe_arch=cfg.uses_moe)
     else:
         dist = single_device()
+    # knob resolution (DESIGN.md §12): explicit flags > tuned artifact
+    # (--autotune) > defaults. Serving never migrates or condenses, so
+    # only the execution knobs are taken from the artifact.
     from repro.config import resolve_pipeline_chunks
-    pipeline_chunks = resolve_pipeline_chunks(args.pipeline_chunks,
-                                              args.plan_objective)
+    from repro.obs import autotune as obs_at
+    serve_knobs = ("exec_mode", "pipeline_chunks", "plan_objective",
+                   "hier_dedup")
+    explicit = {k for k in serve_knobs
+                if getattr(args, k) is not None}
+    tuned = None
+    if args.autotune and cfg.uses_moe:
+        from repro.comm.topology import Topology
+        at_topo = (Topology.from_mesh(mesh) if len(jax.devices()) > 1
+                   else Topology.flat(1))
+        tuned = obs_at.run_autotune(
+            topo=at_topo, out_dir=args.autotune,
+            force=args.autotune_force,
+            tokens=args.batch * args.prompt_len,
+            top_k=cfg.moe.top_k, d_model=cfg.d_model,
+            d_ff=cfg.moe.d_ff, num_layers=cfg.num_layers,
+            n_slots=args.batch, num_experts=cfg.moe.num_experts,
+            group_size=min(128, args.prompt_len))
+        print(f"autotune {tuned.key}: {tuned.knobs} modeled "
+              f"{tuned.modeled_step_ms:.3f}ms vs default "
+              f"{tuned.default_step_ms:.3f}ms")
+    knobs = dict(obs_at.DEFAULT_KNOBS)
+    knobs["pipeline_chunks"] = None    # sentinel: resolve by objective
+    if tuned is not None:
+        knobs.update({k: v for k, v in tuned.knobs.items()
+                      if k in serve_knobs and k not in explicit})
+    for k in explicit:
+        knobs[k] = getattr(args, k)
+    if "hier_dedup" not in explicit and knobs["hier_dedup"] == "on" \
+            and knobs["exec_mode"] != "sync":
+        knobs["hier_dedup"] = "off"   # dedup wire is sync scope
+    if knobs["pipeline_chunks"] is None:
+        knobs["pipeline_chunks"] = resolve_pipeline_chunks(
+            None, knobs["plan_objective"])
+    pipeline_chunks = knobs["pipeline_chunks"]
     luffy = LuffyConfig(enable_condensation=False, enable_migration=False,
-                        exec_mode=args.exec_mode,
+                        exec_mode=knobs["exec_mode"],
                         pipeline_chunks=pipeline_chunks,
-                        plan_objective=args.plan_objective,
-                        hier_dedup=args.hier_dedup)
-    print(f"exec_mode={args.exec_mode} chunks={pipeline_chunks} "
-          f"plan_objective={args.plan_objective} "
+                        plan_objective=knobs["plan_objective"],
+                        hier_dedup=knobs["hier_dedup"])
+    print(f"exec_mode={luffy.exec_mode} chunks={pipeline_chunks} "
+          f"plan_objective={luffy.plan_objective} "
           f"plan_cache={args.plan_cache or 'off'}")
 
     from repro.obs import trace as obs_trace

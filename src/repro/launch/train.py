@@ -34,9 +34,14 @@ def main():
     ap.add_argument("--mesh", choices=["host", "production", "none"],
                     default="host")
     ap.add_argument("--model-axis", type=int, default=4)
-    ap.add_argument("--comm-mode", choices=["flat", "hier"], default="flat",
+    # Tunable knobs default to None ("not set"): --autotune may fill
+    # them, and anything the user typed explicitly always wins
+    # (DESIGN.md §12). Unset knobs without --autotune fall back to the
+    # historical defaults (flat/sync/traffic/exact/8/off).
+    ap.add_argument("--comm-mode", choices=["flat", "hier"], default=None,
                     help="expert-parallel collectives: one flat all-to-all "
-                         "or hierarchical two-phase (DESIGN.md §5)")
+                         "or hierarchical two-phase (DESIGN.md §5; "
+                         "default flat)")
     ap.add_argument("--nodes", type=int, default=0,
                     help="split the model axis into this many nodes "
                          "(builds a (node, local) mesh; required for "
@@ -45,36 +50,38 @@ def main():
                     help="override cross-node bandwidth (bytes/s) for the "
                          "topology ledger / migration link costs")
     ap.add_argument("--exec-mode", choices=["sync", "pipeline"],
-                    default="sync",
+                    default=None,
                     help="MoE execution schedule: strict dispatch→FFN→"
                          "combine order, or chunked software pipeline "
                          "overlapping collectives with expert compute "
-                         "(bit-identical; DESIGN.md §6)")
+                         "(bit-identical; DESIGN.md §6; default sync)")
     ap.add_argument("--pipeline-chunks", type=int, default=None,
                     help="capacity chunks for --exec-mode pipeline "
                          "(clipped to capacity/8). Default: 4, except "
                          "under --plan-objective overlap where the "
                          "estimate search picks the count (0 = force "
                          "the planned count; DESIGN.md §9)")
-    ap.add_argument("--plan-objective", default="traffic",
+    ap.add_argument("--plan-objective", default=None,
                     choices=["traffic", "overlap"],
                     help="migration planner objective (DESIGN.md §7): "
                          "link-cost-weighted bytes, or modeled exposed "
-                         "(un-overlappable) time under the pipeline")
+                         "(un-overlappable) time under the pipeline "
+                         "(default traffic)")
     ap.add_argument("--plan-reuse", default="off",
                     choices=["off", "signature", "always"],
                     help="cross-layer migration-plan reuse (DESIGN.md "
                          "§9): replan every MoE sublayer, revalidate a "
                          "carried plan by routing signature, or trust "
                          "it unconditionally")
-    ap.add_argument("--similarity-backend", default="exact",
+    ap.add_argument("--similarity-backend", default=None,
                     choices=["exact", "lsh"],
                     help="condensation similarity backend (DESIGN.md "
                          "§10): measure every §V-A uncertain pair, or "
                          "only LSH-bucket collisions (fewer measured "
-                         "pairs for large groups)")
-    ap.add_argument("--lsh-bits", type=int, default=8,
-                    help="signed random projections per LSH bucket code")
+                         "pairs for large groups; default exact)")
+    ap.add_argument("--lsh-bits", type=int, default=None,
+                    help="signed random projections per LSH bucket code "
+                         "(default 8)")
     ap.add_argument("--condense-reuse", default="off",
                     choices=["off", "signature", "always"],
                     help="cross-layer condense-plan reuse (DESIGN.md "
@@ -85,10 +92,10 @@ def main():
     ap.add_argument("--condense-max-age", type=int, default=4,
                     help="staleness bound (sublayers) on a reused "
                          "condense plan (§V-A freshness)")
-    ap.add_argument("--hier-dedup", default="off", choices=["off", "on"],
+    ap.add_argument("--hier-dedup", default=None, choices=["off", "on"],
                     help="ship the per-node-deduplicated hier payload "
                          "(repro.condense.wire; needs --comm-mode hier, "
-                         "vanilla sync exchange)")
+                         "vanilla sync exchange; default off)")
     ap.add_argument("--no-condensation", action="store_true")
     ap.add_argument("--no-migration", action="store_true")
     ap.add_argument("--optimizer", default="adamw")
@@ -113,6 +120,32 @@ def main():
                          ": load the fit for this topology+backend or "
                          "measure and persist one, then price links, "
                          "chunk overhead and the FFN roofline with it")
+    ap.add_argument("--autotune", default="",
+                    help="TunedConfig artifact dir (repro.obs.autotune): "
+                         "load the tuned knob set for this topology+"
+                         "backend or search and persist one, then fill "
+                         "every knob the CLI left unset (explicit flags "
+                         "always override; DESIGN.md §12)")
+    ap.add_argument("--autotune-force", action="store_true",
+                    help="re-run the autotune search even when a valid "
+                         "artifact exists (overwrites it)")
+    ap.add_argument("--autotune-refine", type=int, default=0,
+                    help="after this many measured warmup steps, re-rank "
+                         "the tuned top candidates under the measured/"
+                         "modeled step-time ratio (online refinement; "
+                         "0 = off)")
+    ap.add_argument("--recalibrate-on-drift", action="store_true",
+                    help="when the step-time drift detector fires "
+                         "(repro.obs.monitor), re-measure the "
+                         "calibration in place (force=True; needs "
+                         "--calibrate; at most once per run)")
+    ap.add_argument("--drift-tolerance", type=float, default=1.5,
+                    help="drift detector tolerance: EWMA of measured/"
+                         "expected step time outside [1/t, t] counts as "
+                         "out-of-tolerance")
+    ap.add_argument("--drift-k", type=int, default=5,
+                    help="consecutive out-of-tolerance steps before the "
+                         "drift detector fires")
     args = ap.parse_args()
 
     import jax
@@ -161,6 +194,51 @@ def main():
               f"chunk_overhead={calib.chunk_overhead_ms:.3g}ms "
               f"ffn_speed={calib.ffn_speed:.3g}FLOP/s")
 
+    # knob resolution (DESIGN.md §12): explicit CLI flags > tuned
+    # artifact (--autotune) > historical defaults
+    from repro.comm.topology import Topology
+    from repro.obs import autotune as obs_at
+    explicit = {k for k in obs_at.TUNABLE_KNOBS
+                if getattr(args, k) is not None}
+    n_moe = (sum(1 for i in range(cfg.num_layers)
+                 if cfg.ffn_kind(i) == "moe") if cfg.uses_moe else 0)
+    at_topo = topo if topo is not None else Topology.flat(1)
+    tuned = None
+    if args.autotune and cfg.uses_moe:
+        tuned = obs_at.run_autotune(
+            topo=at_topo, out_dir=args.autotune,
+            force=args.autotune_force,
+            tokens=gb * args.seq_len, top_k=cfg.moe.top_k,
+            d_model=cfg.d_model, d_ff=cfg.moe.d_ff,
+            num_layers=max(1, n_moe), n_moe=max(1, n_moe),
+            n_slots=gb, num_experts=cfg.moe.num_experts,
+            mesh_devices=mesh.devices.size if mesh is not None else 1,
+            group_size=min(128, args.seq_len),
+            plan_reuse=args.plan_reuse,
+            condense_reuse=args.condense_reuse, calib=calib)
+        print(f"autotune {tuned.key}: {tuned.knobs} "
+              f"modeled {tuned.modeled_step_ms:.3f}ms vs default "
+              f"{tuned.default_step_ms:.3f}ms "
+              f"({tuned.candidates} candidates, "
+              f"calibrated={tuned.calibrated})")
+    knobs = dict(obs_at.DEFAULT_KNOBS)
+    knobs["pipeline_chunks"] = None    # sentinel: resolve by objective
+    if tuned is not None:
+        knobs.update({k: v for k, v in tuned.knobs.items()
+                      if k not in explicit})
+    for k in explicit:
+        knobs[k] = getattr(args, k)
+    if "hier_dedup" not in explicit and knobs["hier_dedup"] == "on" \
+            and (knobs["comm_mode"] != "hier"
+                 or knobs["exec_mode"] != "sync"):
+        knobs["hier_dedup"] = "off"   # dedup wire is hier+sync scope
+    from repro.config import resolve_pipeline_chunks
+    if knobs["pipeline_chunks"] is None:
+        # objective-aware chunk count (DESIGN.md §9): under the
+        # "overlap" objective the estimate search picks n_chunks
+        knobs["pipeline_chunks"] = resolve_pipeline_chunks(
+            None, knobs["plan_objective"])
+
     if mesh is None:
         dist = single_device()
     else:
@@ -168,31 +246,27 @@ def main():
                          topology=topo)
         print(f"mesh {dict(zip(mesh.axis_names, mesh.devices.shape))} "
               f"topology {topo.num_nodes}x{topo.devices_per_node} "
-              f"bw_ratio={topo.bw_ratio:.1f} comm_mode={args.comm_mode} "
-              f"exec_mode={args.exec_mode} "
-              f"plan_objective={args.plan_objective} "
+              f"bw_ratio={topo.bw_ratio:.1f} "
+              f"comm_mode={knobs['comm_mode']} "
+              f"exec_mode={knobs['exec_mode']} "
+              f"plan_objective={knobs['plan_objective']} "
               f"plan_reuse={args.plan_reuse}")
 
-    # objective-aware chunk count (DESIGN.md §9): under the "overlap"
-    # objective the estimate search picks n_chunks unless the CLI pins it
-    from repro.config import resolve_pipeline_chunks
-    pipeline_chunks = resolve_pipeline_chunks(args.pipeline_chunks,
-                                              args.plan_objective)
     luffy = LuffyConfig(
         enable_condensation=not args.no_condensation and cfg.uses_moe,
         enable_migration=not args.no_migration and cfg.uses_moe,
         condense_group=min(128, args.seq_len),
         combine_slack=2.0,
-        comm_mode=args.comm_mode,
-        exec_mode=args.exec_mode,
-        pipeline_chunks=pipeline_chunks,
-        plan_objective=args.plan_objective,
+        comm_mode=knobs["comm_mode"],
+        exec_mode=knobs["exec_mode"],
+        pipeline_chunks=knobs["pipeline_chunks"],
+        plan_objective=knobs["plan_objective"],
         plan_reuse=args.plan_reuse,
-        similarity_backend=args.similarity_backend,
-        lsh_bits=args.lsh_bits,
+        similarity_backend=knobs["similarity_backend"],
+        lsh_bits=knobs["lsh_bits"],
         condense_reuse=args.condense_reuse,
         condense_reuse_max_age=args.condense_max_age,
-        hier_dedup=args.hier_dedup)
+        hier_dedup=knobs["hier_dedup"])
     if calib is not None:
         luffy = calib.apply(luffy)
     ocfg = OptimConfig(name=args.optimizer, lr=args.lr,
@@ -235,9 +309,21 @@ def main():
         obs_trace.activate(tracer)
     registry = obs_metrics.MetricsRegistry(
         luffy=luffy, run_info={"arch": args.arch, "steps": args.steps,
-                               "comm_mode": args.comm_mode,
-                               "exec_mode": args.exec_mode,
-                               "calibrated": calib is not None})
+                               "comm_mode": luffy.comm_mode,
+                               "exec_mode": luffy.exec_mode,
+                               "calibrated": calib is not None,
+                               "autotuned": tuned is not None})
+
+    # residual stream (DESIGN.md §12): the expected step time under the
+    # current calibration is anchored on a short measured warmup (the
+    # modeled exchange is only part of a full fwd+bwd+opt step); the
+    # EWMA detector then flags sustained departures from it
+    from repro.obs import monitor as obs_monitor
+    monitor = obs_monitor.ResidualMonitor(tolerance=args.drift_tolerance,
+                                          k=args.drift_k)
+    warmup_ms = []
+    expected_step_ms = None
+    recalibrated = False
 
     bucket = 0
     log = []
@@ -255,7 +341,53 @@ def main():
         observed_rate = 0.8 * observed_rate + 0.2 * m["condense_rate"]
         if cfg.uses_moe and luffy.enable_condensation and i >= 3:
             bucket = train_lib.pick_bucket_host(luffy, 0.0, observed_rate)
-        rec = registry.observe(i, m, time_s=round(dt, 3), bucket=bucket)
+        extra = {}
+        step_ms = dt * 1e3
+        if expected_step_ms is None:
+            if i >= 1:                 # step 0 is compile time
+                warmup_ms.append(step_ms)
+            if len(warmup_ms) >= 3:
+                expected_step_ms = sum(warmup_ms) / len(warmup_ms)
+                if tuned is not None and args.autotune_refine > 0 \
+                        and not tuned.refined:
+                    # online refinement: re-rank the top candidates
+                    # under the measured/modeled step-time ratio
+                    ratio = expected_step_ms / max(
+                        tuned.modeled_step_ms, 1e-9)
+                    refined = obs_at.rerank(
+                        tuned, {"step": ratio}, topo=at_topo,
+                        chunk_overhead_ms=luffy.chunk_overhead_ms)
+                    changed = {k: v for k, v in refined.knobs.items()
+                               if k not in explicit
+                               and v != tuned.knobs.get(k)}
+                    tuned = refined
+                    if changed:
+                        luffy = dataclasses.replace(luffy, **changed)
+                        registry.luffy = luffy
+                        steps_by_bucket.clear()
+                        expected_step_ms = None
+                        warmup_ms.clear()
+                        print(f"autotune refine @ step {i}: {changed} "
+                              f"(ratio {ratio:.2f})")
+        else:
+            extra.update(monitor.observe(
+                i, {"step": expected_step_ms}, {"step": step_ms}))
+            if args.recalibrate_on_drift and args.calibrate \
+                    and monitor.drifted and not recalibrated:
+                recalibrated = True
+                from repro.obs import calibrate as obs_cal
+                print(f"drift @ step {i} "
+                      f"(phases {monitor.drifted_phases()}): "
+                      f"recalibrating", flush=True)
+                calib = obs_cal.run_calibration(
+                    mesh, topo, out_dir=args.calibrate, force=True)
+                luffy = calib.apply(luffy)
+                steps_by_bucket.clear()
+                monitor.reset()
+                expected_step_ms = None
+                warmup_ms.clear()
+        rec = registry.observe(i, m, time_s=round(dt, 3), bucket=bucket,
+                               **extra)
         log.append(rec)
         if args.metrics_json:
             obs_metrics.write_jsonl(args.metrics_json, rec)
@@ -279,10 +411,27 @@ def main():
         Path(args.log_file).write_text(json.dumps(log, indent=1))
     if tracer is not None:
         if cfg.uses_moe:
-            from repro.obs.calibrate import probe_exchange
+            from repro.obs.calibrate import probe_exchange_per_device
+            S = min(args.seq_len, 64)
             with obs_trace.phase("probe", cat="probe"):
-                probe_exchange(cfg, luffy,
-                               seq_len=min(args.seq_len, 64))
+                per_dev = probe_exchange_per_device(cfg, luffy,
+                                                    seq_len=S)
+            # probe residuals: join the phases the cost model prices
+            # against the fenced probe spans (expert_ffn is the only
+            # phase the single-device probe predicts meaningfully —
+            # its residual is a direct ffn_speed-staleness check)
+            rows = S * cfg.moe.top_k
+            pred = {"expert_ffn": rows * 4.0 * cfg.d_model
+                    * cfg.moe.d_ff / luffy.gpu_speed * 1e3}
+            meas = obs_monitor.measured_phase_ms(tracer)
+            res = obs_monitor.ResidualMonitor().observe(
+                args.steps, pred, meas, per_device_ms=per_dev)
+            rec = registry.observe(args.steps, {}, **res)
+            if args.metrics_json:
+                obs_metrics.write_jsonl(args.metrics_json, rec)
+            disp = res.get("residual_device_dispersion", 1.0)
+            print(f"probe: {len(per_dev)} devices, "
+                  f"dispersion {disp:.2f}x")
         obs_trace.deactivate()
         tracer.write(trace_out)
         summary = tracer.summary()

@@ -1,34 +1,57 @@
-"""repro.obs — observability (DESIGN.md §11).
+"""repro.obs — observability (DESIGN.md §11–§12).
 
-Three layers:
+Five layers:
 
 * :mod:`repro.obs.trace` — host-timed spans with ``block_until_ready``
   fencing and Chrome-trace/Perfetto JSON export (``--trace`` /
   ``--trace-out`` on the launchers);
 * :mod:`repro.obs.metrics` — one typed registry unifying the
   ``MoEAux``/optimizer/ledger counter names, per-step + cumulative
-  views, JSONL emission (``--metrics-json``);
+  views, crash-safe JSONL emission (``--metrics-json``);
 * :mod:`repro.obs.calibrate` — measured cost-model constants (link
   bandwidths, chunk overhead, planning/similarity/FFN speeds) persisted
   as a versioned artifact keyed by topology fingerprint + backend
-  (``--calibrate``).
+  (``--calibrate``);
+* :mod:`repro.obs.monitor` — the per-step residual stream joining each
+  plan's ``PlanEstimate`` against traced phase timings, with EWMA drift
+  detection (``--recalibrate-on-drift``);
+* :mod:`repro.obs.autotune` — calibration-driven configuration search
+  emitting a versioned ``TunedConfig`` artifact resolved into
+  ``LuffyConfig`` by ``--autotune`` (explicit flags always win).
 """
+from repro.obs.autotune import (DEFAULT_KNOBS, TUNABLE_KNOBS,
+                                TUNED_SCHEMA_VERSION, TunedConfig,
+                                autotune_config, candidate_grid,
+                                load_tuned, modeled_step_components,
+                                rerank, run_autotune, save_tuned,
+                                tuned_key)
 from repro.obs.calibrate import (CALIBRATION_SCHEMA_VERSION, Calibration,
                                  calibration_key, load_calibration,
-                                 probe_exchange, run_calibration,
-                                 save_calibration)
+                                 probe_exchange,
+                                 probe_exchange_per_device,
+                                 run_calibration, save_calibration)
 from repro.obs.metrics import (COMM_LEDGER_SCHEMA_VERSION,
                                METRICS_SCHEMA_VERSION, MetricsRegistry,
                                MetricSpec, SCHEMA, canonical_name,
-                               flatten, mask_inapplicable, write_jsonl)
-from repro.obs.trace import (NULL_SPAN, Tracer, activate, active,
-                             deactivate, phase)
+                               flatten, mask_inapplicable, read_jsonl,
+                               write_jsonl)
+from repro.obs.monitor import (RESIDUAL_PHASES, DriftDetector,
+                               ResidualMonitor, device_dispersion,
+                               measured_phase_ms, predicted_phase_ms)
+from repro.obs.trace import (DEVICE_TID_BASE, NULL_SPAN, Tracer,
+                             activate, active, deactivate, phase)
 
 __all__ = [
     "CALIBRATION_SCHEMA_VERSION", "Calibration", "calibration_key",
-    "load_calibration", "probe_exchange", "run_calibration",
-    "save_calibration", "COMM_LEDGER_SCHEMA_VERSION",
+    "load_calibration", "probe_exchange", "probe_exchange_per_device",
+    "run_calibration", "save_calibration", "COMM_LEDGER_SCHEMA_VERSION",
     "METRICS_SCHEMA_VERSION", "MetricsRegistry", "MetricSpec", "SCHEMA",
-    "canonical_name", "flatten", "mask_inapplicable", "write_jsonl",
-    "NULL_SPAN", "Tracer", "activate", "active", "deactivate", "phase",
+    "canonical_name", "flatten", "mask_inapplicable", "read_jsonl",
+    "write_jsonl", "DEVICE_TID_BASE", "NULL_SPAN", "Tracer", "activate",
+    "active", "deactivate", "phase", "RESIDUAL_PHASES", "DriftDetector",
+    "ResidualMonitor", "device_dispersion", "measured_phase_ms",
+    "predicted_phase_ms", "DEFAULT_KNOBS", "TUNABLE_KNOBS",
+    "TUNED_SCHEMA_VERSION", "TunedConfig", "autotune_config",
+    "candidate_grid", "load_tuned", "modeled_step_components", "rerank",
+    "run_autotune", "save_tuned", "tuned_key",
 ]

@@ -364,7 +364,8 @@ def measure_ffn_speed(*, rows: int = 512, d: int = 256, d_ff: int = 1024
 # ---------------------------------------------------------------------------
 
 def run_calibration(mesh, topo: Optional[Topology], *,
-                    out_dir=None, quick: bool = True) -> Calibration:
+                    out_dir=None, quick: bool = True,
+                    force: bool = False) -> Calibration:
     """Measure everything on ``mesh``'s backend and return the fit
     (loading a previously-persisted artifact for the same key from
     ``out_dir`` instead of re-measuring, and persisting fresh fits
@@ -372,14 +373,17 @@ def run_calibration(mesh, topo: Optional[Topology], *,
 
     ``mesh=None`` (or a mesh with no expert axis) skips the collective
     fits and keeps the topology's built-in link constants; compute and
-    planning fits always run.
+    planning fits always run. ``force=True`` skips the cached-artifact
+    load and overwrites it with a fresh fit — the drift detector's
+    recalibration path (``--recalibrate-on-drift``): a fit that no
+    longer matches reality must not satisfy its own cache key.
     """
     from repro.comm.topology import model_axes_of
     M = topo.num_devices if topo is not None else 1
     axes = model_axes_of(tuple(mesh.axis_names)) if mesh is not None \
         else None
     key = calibration_key(topo, M)
-    if out_dir is not None:
+    if out_dir is not None and not force:
         cached = load_calibration(out_dir, key)
         if cached is not None:
             return cached
@@ -475,3 +479,33 @@ def probe_exchange(cfg, luffy, *, n_seq: int = 2,
         combine_slack=luffy.combine_slack, comm=CommContext.local())
     jax.block_until_ready(y)
     return y, aux
+
+
+def probe_exchange_per_device(cfg, luffy, *, n_seq: int = 1,
+                              seq_len: Optional[int] = None,
+                              seed: int = 0,
+                              max_devices: int = 8) -> Dict[int, float]:
+    """Run :func:`probe_exchange` once pinned to each local device and
+    return ``{device_index: wall_ms}`` — the straggler probe.
+
+    Each repetition runs under a ``probe_exchange`` span tagged
+    ``device=i``, which ``Tracer.to_chrome`` maps onto its own Perfetto
+    row; the returned dict feeds
+    :func:`repro.obs.monitor.device_dispersion`. On a single-device
+    backend this degenerates to one entry (dispersion 1.0) — cheap and
+    harmless."""
+    import time
+
+    import jax
+
+    from repro.obs import trace as obs_trace
+    out: Dict[int, float] = {}
+    for i, dev in enumerate(jax.local_devices()[:max_devices]):
+        with jax.default_device(dev):
+            with obs_trace.phase("probe_exchange", cat="probe",
+                                 device=i):
+                t0 = time.perf_counter()
+                probe_exchange(cfg, luffy, n_seq=n_seq, seq_len=seq_len,
+                               seed=seed)
+                out[i] = (time.perf_counter() - t0) * 1e3
+    return out

@@ -21,6 +21,7 @@ than "dense wire, nothing measured". :func:`mask_inapplicable` (and
 from __future__ import annotations
 
 import json
+import os
 from pathlib import Path
 from typing import Any, Dict, NamedTuple, Optional, Tuple
 
@@ -31,8 +32,9 @@ METRICS_SCHEMA_VERSION = 1
 # Version of the dryrun comm-traffic ledger JSON (repro.launch.dryrun
 # imports this; the golden-schema test pins both the value and the key
 # sets). v1 was the unversioned pre-obs ledger; v2 adds the
-# ``schema_version`` field itself.
-COMM_LEDGER_SCHEMA_VERSION = 2
+# ``schema_version`` field itself; v3 adds the ``autotune`` section
+# (chosen config + modeled savings vs defaults).
+COMM_LEDGER_SCHEMA_VERSION = 3
 
 
 class MetricSpec(NamedTuple):
@@ -84,6 +86,19 @@ _SPECS = (
     MetricSpec("condense/reused", "counter", ("condense_reused",)),
     MetricSpec("step/time_s", "gauge", ("time_s", "step_time_s"), "s"),
     MetricSpec("step/bucket", "gauge", ("bucket",)),
+) + tuple(
+    # Residual-stream gauges (repro.obs.monitor): one
+    # predicted/measured/ratio triple per instrumented phase.
+    MetricSpec(f"residual/{phase}/{field}", "gauge",
+               (f"residual_{phase}_{field}",), unit)
+    for phase in ("plan_build", "dispatch", "expert_ffn", "combine",
+                  "step")
+    for field, unit in (("predicted_ms", "ms"), ("measured_ms", "ms"),
+                        ("ratio", "x"))
+) + (
+    MetricSpec("residual/drift", "gauge", ("residual_drift",)),
+    MetricSpec("residual/device_dispersion", "gauge",
+               ("residual_device_dispersion",), "x"),
 )
 
 SCHEMA: Dict[str, MetricSpec] = {s.name: s for s in _SPECS}
@@ -167,11 +182,42 @@ class MetricsRegistry:
 
 
 def write_jsonl(path, record: Dict[str, Any]) -> None:
-    """Append one record as a JSON line (creating parent dirs)."""
+    """Append one record as a JSON line (creating parent dirs).
+
+    The whole line goes out in a single ``os.write`` on an
+    ``O_APPEND`` descriptor: a run killed mid-stream leaves a valid
+    JSONL *prefix* plus at most one torn final line, which
+    :func:`read_jsonl` skips — no record is ever half-applied across
+    two lines."""
     p = Path(path)
     p.parent.mkdir(parents=True, exist_ok=True)
-    with p.open("a") as f:
-        f.write(json.dumps(record) + "\n")
+    line = (json.dumps(record) + "\n").encode("utf-8")
+    fd = os.open(str(p), os.O_APPEND | os.O_CREAT | os.O_WRONLY, 0o644)
+    try:
+        os.write(fd, line)
+    finally:
+        os.close(fd)
+
+
+def read_jsonl(path) -> list:
+    """Every complete record of a (possibly truncated) JSONL file.
+
+    Parses record-by-record and stops at the first undecodable line —
+    the torn tail a killed writer leaves — so crash artifacts are
+    readable up to the last whole record."""
+    out = []
+    try:
+        data = Path(path).read_bytes()
+    except OSError:
+        return out
+    for raw in data.split(b"\n"):
+        if not raw.strip():
+            continue
+        try:
+            out.append(json.loads(raw.decode("utf-8")))
+        except (ValueError, UnicodeDecodeError):
+            break
+    return out
 
 
 def flatten(prefix: str, nested: Dict[str, Any]) -> Dict[str, Any]:

@@ -41,6 +41,11 @@ import time
 from typing import Any, Dict, List, Optional
 
 
+# Synthetic Chrome-trace thread ids for device-tagged spans: host tids
+# are masked to 16 bits, so rows at 0x10000+ can never collide.
+DEVICE_TID_BASE = 0x10000
+
+
 def _now_us() -> float:
     return time.perf_counter_ns() / 1e3
 
@@ -218,9 +223,28 @@ class Tracer:
     def to_chrome(self) -> Dict[str, Any]:
         """The Chrome trace-event JSON object (``traceEvents`` array of
         events each carrying the required ``ph``/``ts``/``name`` — and
-        ``dur`` for complete events)."""
-        return {"traceEvents": list(self.events),
-                "displayTimeUnit": "ms"}
+        ``dur`` for complete events).
+
+        Spans tagged with a ``device`` arg (the eager per-device
+        exchange probe) are remapped onto synthetic per-device ``tid``
+        rows with ``thread_name`` metadata, so Perfetto shows the
+        devices side-by-side instead of flattening them onto the host
+        thread — stragglers become visible as the one long row."""
+        events: List[Dict[str, Any]] = []
+        device_rows: Dict[int, int] = {}   # device index -> (pid, tid)
+        for e in self.events:
+            dev = e.get("args", {}).get("device")
+            if e["ph"] == "X" and isinstance(dev, int):
+                e = dict(e)
+                e["tid"] = DEVICE_TID_BASE + dev
+                device_rows[dev] = e["pid"]
+            events.append(e)
+        for dev in sorted(device_rows):
+            events.append({"name": "thread_name", "ph": "M", "ts": 0.0,
+                           "pid": device_rows[dev],
+                           "tid": DEVICE_TID_BASE + dev,
+                           "args": {"name": f"device {dev}"}})
+        return {"traceEvents": events, "displayTimeUnit": "ms"}
 
     def write(self, path) -> None:
         from pathlib import Path

@@ -1,0 +1,192 @@
+"""Calibration-driven autotuning (repro.obs.autotune, DESIGN.md §12).
+
+Pins the ISSUE-7 acceptance property — ``autotune_config`` returns the
+brute-force argmin of the calibrated model over the grid — plus the
+artifact miss discipline (the ``Calibration`` rules exactly), the
+explicit-flag precedence of :meth:`TunedConfig.apply`, the structural
+constraints of :func:`candidate_grid`, and :func:`rerank`.
+"""
+import dataclasses
+import json
+
+import pytest
+
+from repro.comm.topology import Topology
+from repro.config import LuffyConfig
+from repro.obs import autotune as at
+from repro.obs.calibrate import Calibration, calibration_key
+
+HIER = Topology(4, 2)
+WORK = dict(tokens=4096, top_k=2, d_model=512, d_ff=2048, num_layers=4,
+            n_moe=2, n_slots=64, num_experts=16, mesh_devices=8,
+            group_size=128)
+
+
+def _tune(topo=HIER, **kw):
+    return at.autotune_config(topo=topo, **{**WORK, **kw})
+
+
+# ------------------------------------------------------------------ grid
+
+def test_grid_defaults_first_and_structural_constraints():
+    grid = at.candidate_grid(HIER)
+    assert grid[0] == at.DEFAULT_KNOBS
+    assert len(grid) == len({json.dumps(g, sort_keys=True) for g in grid})
+    for g in grid:
+        assert set(g) == set(at.TUNABLE_KNOBS)
+        if g["hier_dedup"] == "on":      # dedup wire is sync-scope
+            assert g["comm_mode"] == "hier" and g["exec_mode"] == "sync"
+        if g["comm_mode"] == "hier":
+            assert HIER.hierarchical
+        # planned chunk search <=> overlap objective (launcher coupling)
+        assert (g["pipeline_chunks"] <= 0) == \
+            (g["plan_objective"] == "overlap")
+    flat_grid = at.candidate_grid(Topology.flat(8))
+    assert all(g["comm_mode"] == "flat" for g in flat_grid)
+    assert len(flat_grid) < len(grid)
+
+
+# ---------------------------------------------------------------- argmin
+
+def test_autotune_is_bruteforce_argmin_of_model():
+    grid = at.candidate_grid(HIER)
+    tuned = _tune(grid=grid)
+    costs = [at.modeled_step_components(g, topo=HIER, **WORK)["total_ms"]
+             for g in grid]
+    best = min(range(len(grid)), key=lambda i: costs[i])
+    assert tuned.modeled_step_ms == pytest.approx(costs[best])
+    assert tuned.knobs == grid[best] or \
+        costs[grid.index(tuned.knobs)] == pytest.approx(costs[best])
+    assert tuned.default_step_ms == pytest.approx(costs[0])
+    assert tuned.candidates == len(grid)
+    assert tuned.modeled_step_ms <= tuned.default_step_ms
+    assert tuned.modeled_savings_ms == pytest.approx(
+        tuned.default_step_ms - tuned.modeled_step_ms)
+
+
+def test_tie_resolves_to_earliest_candidate():
+    """Strict-improvement selection: a grid of identical candidates
+    returns the first one (the defaults)."""
+    grid = [dict(at.DEFAULT_KNOBS) for _ in range(4)]
+    tuned = _tune(grid=grid)
+    assert tuned.knobs == at.DEFAULT_KNOBS
+    assert tuned.modeled_savings_ms == pytest.approx(0.0)
+
+
+def test_calibration_changes_the_pricing():
+    calib = Calibration(
+        key=calibration_key(HIER, HIER.num_devices, backend="cpu"),
+        intra_bw=1e9, inter_bw=1e8, intra_lat=1e-5, inter_lat=1e-4,
+        chunk_overhead_ms=0.5, plan_step_us=50.0, sim_speed=1e10,
+        ffn_speed=1e12)
+    tuned = _tune(calib=calib)
+    base = _tune()
+    assert tuned.calibrated and not base.calibrated
+    # slower measured constants: every modeled time strictly grows
+    assert tuned.default_step_ms > base.default_step_ms
+    assert tuned.modeled_step_ms > base.modeled_step_ms
+
+
+# -------------------------------------------------- artifact discipline
+
+def test_artifact_roundtrip_identity(tmp_path):
+    tuned = _tune()
+    path = at.save_tuned(tmp_path, tuned)
+    assert path.name == f"{tuned.key}.tuned.json"
+    loaded = at.load_tuned(tmp_path, tuned.key)
+    assert loaded == tuned
+
+
+def test_artifact_miss_on_magic_schema_key(tmp_path):
+    tuned = _tune()
+    good = tuned.to_json()
+    assert at.TunedConfig.from_json(good, expect_key=tuned.key) == tuned
+    # wrong magic
+    bad = json.loads(good)
+    bad["magic"] = "not-a-tuned-config"
+    assert at.TunedConfig.from_json(json.dumps(bad)) is None
+    # schema drift
+    bad = json.loads(good)
+    bad["schema_version"] = at.TUNED_SCHEMA_VERSION + 1
+    assert at.TunedConfig.from_json(json.dumps(bad)) is None
+    # stale fingerprint/backend
+    assert at.TunedConfig.from_json(good, expect_key="other__cpu") is None
+    # missing field
+    bad = json.loads(good)
+    del bad["knobs"]
+    assert at.TunedConfig.from_json(json.dumps(bad)) is None
+    # garbage
+    assert at.TunedConfig.from_json("{not json") is None
+    assert at.TunedConfig.from_json("[1,2]") is None
+    # load_tuned enforces the expected key for the directory lookup
+    at.save_tuned(tmp_path, tuned)
+    assert at.load_tuned(tmp_path, "wrong__key") is None
+
+
+def test_run_autotune_load_before_search(tmp_path):
+    t1 = at.run_autotune(topo=HIER, out_dir=tmp_path, **WORK)
+    # second run hits the artifact even under a different workload
+    t2 = at.run_autotune(topo=HIER, out_dir=tmp_path,
+                         **{**WORK, "tokens": 8 * WORK["tokens"]})
+    assert t2 == t1
+    # force re-searches under the new workload
+    t3 = at.run_autotune(topo=HIER, out_dir=tmp_path, force=True,
+                         **{**WORK, "tokens": 8 * WORK["tokens"]})
+    assert t3.workload["tokens"] == 8 * WORK["tokens"]
+    assert at.load_tuned(tmp_path, t1.key) == t3
+
+
+# ------------------------------------------------------------- apply
+
+def test_apply_sets_knobs_and_respects_explicit_flags():
+    tuned = _tune()
+    luffy = LuffyConfig()
+    applied = tuned.apply(luffy)
+    for k in at.TUNABLE_KNOBS:
+        assert getattr(applied, k) == tuned.knobs[k]
+    # explicit CLI flags always win
+    pinned = dataclasses.replace(LuffyConfig(), exec_mode="sync",
+                                 pipeline_chunks=7)
+    applied = tuned.apply(pinned, explicit=("exec_mode",
+                                            "pipeline_chunks"))
+    assert applied.exec_mode == "sync"
+    assert applied.pipeline_chunks == 7
+    for k in at.TUNABLE_KNOBS:
+        if k not in ("exec_mode", "pipeline_chunks"):
+            assert getattr(applied, k) == tuned.knobs[k]
+
+
+# ------------------------------------------------------------- rerank
+
+def test_rerank_prefers_sync_when_measured_ffn_vanishes():
+    """A measured expert_ffn far below the model removes the pipelining
+    win (nothing to overlap), so refinement must not pick a pipelined
+    candidate over sync if sync re-prices cheaper."""
+    tuned = _tune(top_n=len(at.candidate_grid(HIER)))
+    refined = at.rerank(tuned, {"expert_ffn": 1e-6}, topo=HIER)
+    assert refined.refined
+    # recompute the re-priced cost of every stored candidate by hand
+    def cost(cand):
+        c = cand["components"]
+        ex = at._exchange_ms_for(
+            cand["knobs"], HIER, dispatch_ms=c["dispatch_ms"],
+            ffn_ms=c["ffn_ms"] * 1e-6, combine_ms=c["combine_ms"],
+            chunk_overhead_ms=at.sched_cost.DEFAULT_CHUNK_OVERHEAD_MS)
+        return ex + c["planning_ms"] + c["similarity_ms"]
+    best = min(tuned.top, key=cost)
+    assert refined.modeled_step_ms == pytest.approx(cost(best))
+    assert refined.knobs == best["knobs"]
+
+
+def test_rerank_step_ratio_scales_all_components():
+    tuned = _tune()
+    r1 = at.rerank(tuned, {"step": 2.0}, topo=HIER)
+    r2 = at.rerank(tuned, {"dispatch": 2.0, "expert_ffn": 2.0,
+                           "combine": 2.0}, topo=HIER)
+    assert r1.modeled_step_ms == pytest.approx(r2.modeled_step_ms)
+    assert r1.knobs == r2.knobs
+
+
+def test_rerank_without_top_is_identity():
+    tuned = dataclasses.replace(_tune(), top=[])
+    assert at.rerank(tuned, {"step": 3.0}, topo=HIER) == tuned

@@ -27,7 +27,7 @@ from repro.obs.calibrate import Calibration, calibration_key
 from repro.obs.metrics import COMM_LEDGER_SCHEMA_VERSION
 
 TOP_KEYS = {"schema_version", "calibration", "topology", "dedup_factor",
-            "buckets", "plan_reuse", "condensation"}
+            "buckets", "plan_reuse", "condensation", "autotune"}
 TOPOLOGY_KEYS = {"nodes", "devices_per_node", "bw_ratio"}
 BUCKET_KEYS = {"flat", "hier", "overlap"}
 TIER_KEYS = {"intra_bytes", "inter_bytes", "time_s"}
@@ -45,6 +45,10 @@ DEDUP_WIRE_KEYS = {"enabled", "modeled_inter_bytes", "flat_inter_bytes",
                    "shipped_inter_bytes"}
 CONDENSE_PLAN_KEYS = {"mode", "built_per_step", "reused_per_step",
                       "similarity_ms_saved_per_step"}
+AUTOTUNE_KEYS = {"applied", "key", "knobs", "modeled_step_ms",
+                 "default_step_ms", "modeled_savings_ms", "candidates"}
+KNOB_KEYS = {"comm_mode", "hier_dedup", "exec_mode", "pipeline_chunks",
+             "plan_objective", "similarity_backend", "lsh_bits"}
 
 
 def _fake_mesh(shape_by_axis):
@@ -62,7 +66,7 @@ def _ledger(**kw):
 
 def test_ledger_schema_version_and_key_sets():
     led = _ledger()
-    assert led["schema_version"] == COMM_LEDGER_SCHEMA_VERSION == 2
+    assert led["schema_version"] == COMM_LEDGER_SCHEMA_VERSION == 3
     assert set(led) == TOP_KEYS
     assert set(led["topology"]) == TOPOLOGY_KEYS
     assert set(led["buckets"]) == {"0.0", "0.25", "0.5"}
@@ -75,6 +79,15 @@ def test_ledger_schema_version_and_key_sets():
     assert set(led["condensation"]["dedup_wire"]) == DEDUP_WIRE_KEYS
     assert set(led["condensation"]["condense_plan"]) == \
         CONDENSE_PLAN_KEYS
+    assert set(led["autotune"]) == AUTOTUNE_KEYS
+    assert set(led["autotune"]["knobs"]) == KNOB_KEYS
+    assert led["autotune"]["applied"] is False   # modeled, not resolved
+    # defaults are always in the grid: tuned can never model worse
+    assert led["autotune"]["modeled_step_ms"] <= \
+        led["autotune"]["default_step_ms"]
+    assert led["autotune"]["modeled_savings_ms"] == pytest.approx(
+        led["autotune"]["default_step_ms"]
+        - led["autotune"]["modeled_step_ms"])
     assert led["calibration"] is None          # uncalibrated pricing
 
 
@@ -117,7 +130,7 @@ def test_ledger_flattens_into_metrics_record():
     from repro.obs.metrics import flatten
     led = _ledger()
     flat = flatten("comm_ledger", led)
-    assert flat["comm_ledger/schema_version"] == 2
+    assert flat["comm_ledger/schema_version"] == 3
     assert "comm_ledger/buckets/0.0/hier/inter_bytes" in flat
     assert "comm_ledger/plan_reuse/planning_ms_per_plan" in flat
     assert all(not isinstance(v, dict) for v in flat.values())

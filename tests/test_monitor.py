@@ -1,0 +1,199 @@
+"""Residual monitoring and drift detection (repro.obs.monitor,
+DESIGN.md §12).
+
+The two drift properties ISSUE 7 pins:
+
+* **no false positives** — stationary noise whose every per-step ratio
+  stays strictly within tolerance NEVER fires.  This is deterministic:
+  the EWMA is initialized at the first sample, so it is always a convex
+  combination of observed log-ratios and cannot leave an interval the
+  samples never leave.
+* **true positive latency** — an injected sustained 2× degradation
+  fires within a few steps of onset (the EWMA crossing plus the k-run
+  confirmation), and never before ``k`` post-onset steps.
+"""
+import math
+
+import pytest
+
+from repro.obs import monitor as obs_mon
+from repro.obs.monitor import (DriftDetector, ResidualMonitor,
+                               device_dispersion, measured_phase_ms,
+                               predicted_phase_ms)
+from tests._hyp import given, settings, st
+
+TOL = 1.5
+K = 5
+
+
+# ---------------------------------------------------------------- drift
+
+@settings(max_examples=200, deadline=None)
+@given(st.lists(st.floats(min_value=1.0 / TOL * 1.001,
+                          max_value=TOL * 0.999),
+                min_size=1, max_size=100))
+def test_stationary_noise_within_tolerance_never_fires(ratios):
+    det = DriftDetector(tolerance=TOL, k=K)
+    for r in ratios:
+        assert det.update(r) is False
+    assert not det.fired and not det.out_of_tolerance
+
+
+@settings(max_examples=100, deadline=None)
+@given(st.integers(min_value=0, max_value=20),
+       st.floats(min_value=2.0, max_value=4.0))
+def test_injected_degradation_fires_within_k_plus_margin(warmup, degrade):
+    """Healthy ratio=1.0 for ``warmup`` steps, then a sustained
+    ``degrade``x slowdown: with alpha=0.5 the EWMA of log(degrade>=2)
+    crosses log(1.5) within 2 steps of onset, so the detector must fire
+    within k+2 post-onset steps — and never before k of them."""
+    det = DriftDetector(tolerance=TOL, ewma_alpha=0.5, k=K)
+    for _ in range(warmup):
+        assert det.update(1.0) is False
+    fired_at = None
+    for i in range(1, K + 8):
+        if det.update(degrade):
+            fired_at = i
+            break
+    assert fired_at is not None, "sustained degradation never fired"
+    assert fired_at >= K          # needs k consecutive bad steps
+    assert fired_at <= K + 2      # EWMA crossing latency under alpha=0.5
+    # fired latches until reset, even if the ratio recovers
+    assert det.update(1.0) is True
+    det.reset()
+    assert not det.fired and det.samples == 0
+
+
+def test_stationary_noise_deterministic_never_fires():
+    """Hypothesis-free pin of the no-false-positive property: a fixed
+    oscillating within-tolerance ratio stream (worst case: alternating
+    near both edges) never fires."""
+    det = DriftDetector(tolerance=TOL, k=K)
+    ratios = [1.49, 0.68, 1.4, 0.7, 1.0, 1.45, 0.69, 1.3, 0.75, 1.2] * 10
+    for r in ratios:
+        assert det.update(r) is False
+    assert not det.fired
+
+
+def test_injected_degradation_deterministic_fires_within_k():
+    """Hypothesis-free pin of the true-positive property: healthy steps
+    then a sustained 2x slowdown fires in exactly k+1 post-onset steps
+    (one EWMA-crossing step under alpha=0.5, then the k-run)."""
+    det = DriftDetector(tolerance=TOL, ewma_alpha=0.5, k=K)
+    for _ in range(10):
+        assert det.update(1.0) is False
+    fires = [det.update(2.0) for _ in range(K + 2)]
+    assert fires == [False] * K + [True, True]
+
+
+def test_single_straggler_step_does_not_fire():
+    det = DriftDetector(tolerance=TOL, k=K)
+    det.update(1.0)
+    det.update(10.0)              # one bad step
+    for _ in range(20):
+        assert det.update(1.0) is False or det.fired is False
+    assert not det.fired
+
+
+def test_detector_is_symmetric_in_log_space():
+    """2x too slow and 2x too fast are both drift (|ewma| test)."""
+    for ratio in (2.0, 0.5):
+        det = DriftDetector(tolerance=TOL, ewma_alpha=1.0, k=3)
+        fires = [det.update(ratio) for _ in range(5)]
+        assert fires == [False, False, True, True, True]
+
+
+def test_detector_ewma_ratio_tracks_geometric_mean():
+    det = DriftDetector(tolerance=10.0, ewma_alpha=1.0, k=1)
+    det.update(4.0)
+    assert det.ewma_ratio == pytest.approx(4.0)
+    det2 = DriftDetector(tolerance=10.0, ewma_alpha=0.5, k=1)
+    det2.update(4.0)
+    det2.update(1.0)
+    assert det2.ewma_ratio == pytest.approx(2.0)   # sqrt(4*1)
+
+
+# ------------------------------------------------------ ResidualMonitor
+
+def test_monitor_emits_legacy_keys_for_joined_phases_only():
+    mon = ResidualMonitor(tolerance=TOL, k=K)
+    rec = mon.observe(0,
+                      {"dispatch": 2.0, "expert_ffn": 4.0},
+                      {"dispatch": 3.0, "step": 9.0})
+    # only the intersection produces residuals
+    assert rec["residual_dispatch_predicted_ms"] == 2.0
+    assert rec["residual_dispatch_measured_ms"] == 3.0
+    assert rec["residual_dispatch_ratio"] == pytest.approx(1.5)
+    assert "residual_expert_ffn_ratio" not in rec
+    assert "residual_step_ratio" not in rec
+    assert rec["residual_drift"] == 0.0
+
+
+def test_monitor_drift_flag_and_reset():
+    mon = ResidualMonitor(tolerance=TOL, ewma_alpha=1.0, k=2)
+    for i in range(2):
+        rec = mon.observe(i, {"step": 1.0}, {"step": 5.0})
+    assert rec["residual_drift"] == 1.0
+    assert mon.drifted and mon.drifted_phases() == ("step",)
+    mon.reset()
+    assert not mon.drifted
+    rec = mon.observe(9, {"step": 1.0}, {"step": 1.0})
+    assert rec["residual_drift"] == 0.0
+
+
+def test_monitor_device_dispersion_passthrough():
+    mon = ResidualMonitor()
+    rec = mon.observe(0, {}, {}, per_device_ms={0: 1.0, 1: 1.0, 2: 2.0})
+    assert rec["residual_device_dispersion"] == pytest.approx(2.0)
+
+
+def test_device_dispersion_edge_cases():
+    assert device_dispersion({}) == 1.0
+    assert device_dispersion({0: 3.0}) == pytest.approx(1.0)
+    assert device_dispersion({0: 1.0, 1: 3.0}) == pytest.approx(1.5)
+
+
+# ----------------------------------------- phase-name join helpers
+
+def test_predicted_phase_ms_from_estimate():
+    from repro.comm.topology import Topology
+    from repro.plan.estimate import estimate_exchange
+    est = estimate_exchange(4096, 2, 512, topo=Topology(2, 4),
+                            r_cond=0.0, num_layers=1, ffn_ms=1.0)
+    pred = predicted_phase_ms(est)
+    assert set(pred) == {"dispatch", "expert_ffn", "combine", "step"}
+    assert pred["dispatch"] == pytest.approx(est.dispatch_ms)
+    assert pred["step"] == pytest.approx(est.sync_ms)
+    piped = predicted_phase_ms(est, pipelined=True)
+    assert piped["step"] == pytest.approx(est.overlap_ms)
+    assert piped["step"] <= pred["step"]
+
+
+def test_measured_phase_ms_from_tracer():
+    from repro.obs import trace as obs_trace
+    tr = obs_trace.Tracer(fence=False)
+    obs_trace.activate(tr)
+    try:
+        for us in (1000, 3000):
+            with obs_trace.phase("dispatch", cat="exchange"):
+                pass
+            tr.events[-1]["dur"] = float(us)    # pin span duration
+        with obs_trace.phase("not_a_residual_phase", cat="x"):
+            pass
+    finally:
+        obs_trace.deactivate()
+    meas = measured_phase_ms(tr)
+    assert set(meas) == {"dispatch"}
+    assert meas["dispatch"] == pytest.approx(2.0)   # mean of 1ms, 3ms
+
+
+def test_residual_phases_cover_canonical_metric_specs():
+    """Every residual phase has canonical specs in the registry (the
+    monitor's legacy keys all map to residual/... gauges)."""
+    from repro.obs.metrics import SCHEMA
+    names = set(SCHEMA)
+    for phase in obs_mon.RESIDUAL_PHASES:
+        for field in ("predicted_ms", "measured_ms", "ratio"):
+            assert f"residual/{phase}/{field}" in names
+    assert "residual/drift" in names
+    assert "residual/device_dispersion" in names

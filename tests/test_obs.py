@@ -121,6 +121,36 @@ def test_chrome_trace_export(tmp_path):
     assert steps[0]["args"]["step"] == 0
 
 
+def test_chrome_trace_per_device_rows(tmp_path):
+    """Device-tagged spans (the per-device exchange probe) get their own
+    synthetic tid row plus a thread_name metadata event, so Perfetto
+    shows devices side-by-side instead of flattening them onto the host
+    thread."""
+    from repro.obs.trace import DEVICE_TID_BASE
+    tr = Tracer()
+    for dev in range(3):
+        with tr.span("probe_exchange", cat="probe", device=dev):
+            pass
+    with tr.span("step", cat="step"):          # untagged: host row
+        pass
+    doc = tr.to_chrome()
+    probes = [e for e in doc["traceEvents"]
+              if e["ph"] == "X" and e["name"] == "probe_exchange"]
+    assert sorted(e["tid"] for e in probes) == [
+        DEVICE_TID_BASE, DEVICE_TID_BASE + 1, DEVICE_TID_BASE + 2]
+    (step,) = [e for e in doc["traceEvents"]
+               if e["ph"] == "X" and e["name"] == "step"]
+    assert step["tid"] < DEVICE_TID_BASE       # host tids are 16-bit
+    names = [e for e in doc["traceEvents"] if e["ph"] == "M"]
+    assert {e["args"]["name"] for e in names} == \
+        {"device 0", "device 1", "device 2"}
+    # metadata events still satisfy the validity invariant above
+    for e in names:
+        assert {"name", "ph", "ts", "pid", "tid"} <= set(e)
+    # the in-memory recorder is untouched: summary() still aggregates
+    assert tr.summary()["probe_exchange"]["count"] == 3
+
+
 def test_phase_hook_noop_without_tracer():
     obs_trace.deactivate()
     assert obs_trace.phase("dispatch") is NULL_SPAN
@@ -223,6 +253,28 @@ def test_write_jsonl_appends(tmp_path):
     obs_metrics.write_jsonl(path, {"step": 1})
     recs = [json.loads(x) for x in path.read_text().splitlines()]
     assert [r["step"] for r in recs] == [0, 1]
+
+
+def test_read_jsonl_tolerates_truncation(tmp_path):
+    """A killed run leaves a valid JSONL prefix: every whole line (one
+    atomic write each) parses, and a torn final line is skipped instead
+    of poisoning the whole file."""
+    path = tmp_path / "m.jsonl"
+    for i in range(5):
+        obs_metrics.write_jsonl(path, {"step": i, "metrics": {"x": i}})
+    data = path.read_bytes()
+    assert len(obs_metrics.read_jsonl(path)) == 5
+    # chop the file mid-way through the last record (simulated kill)
+    path.write_bytes(data[:-7])
+    recs = obs_metrics.read_jsonl(path)
+    assert [r["step"] for r in recs] == [0, 1, 2, 3]
+    # record-by-record: every complete prefix parses at every cut point
+    for cut in range(len(data)):
+        path.write_bytes(data[:cut])
+        recs = obs_metrics.read_jsonl(path)
+        assert [r["step"] for r in recs] == list(range(len(recs)))
+        assert len(recs) >= data[:cut].count(b"\n") - 1
+    assert obs_metrics.read_jsonl(tmp_path / "absent.jsonl") == []
 
 
 def test_flatten_nested():
