@@ -296,7 +296,11 @@ class LuffyConfig:
     # "sync" in both comm modes (weight grads accumulate per chunk, so
     # training may drift at the last ulp like remat); single-device
     # runs and the decode all-reduce path (no all-to-all to hide)
-    # degenerate to sync.
+    # degenerate to sync. "decode_overlap" (DESIGN.md §13) targets that
+    # decode all-reduce instead: the combine psum is issued concurrently
+    # with the shared-expert FFN (moe_decode_allreduce), bit-identical
+    # to sync; on the build/execute (train/prefill) path it behaves
+    # exactly like "sync".
     exec_mode: str = "sync"
     # Capacity chunks for exec_mode="pipeline". 0 (or negative) requests
     # the objective-planned chunk count: build_exchange_plan reuses

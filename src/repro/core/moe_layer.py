@@ -127,7 +127,8 @@ def expert_ffn_2d(ew_local, h, act, cdt, fsdp_axes,
 
 def moe_decode_allreduce(params, x, cfg: ModelConfig, *, capacity: int,
                          axis_name, use_kernel: bool = False,
-                         fsdp_axes=None, batch_sharded: bool = True):
+                         fsdp_axes=None, batch_sharded: bool = True,
+                         overlap: bool = False):
     """Decode-time expert parallelism via all-reduce (no all-to-all).
 
     At decode there is ONE token per sequence — the dispatch operand would
@@ -135,6 +136,15 @@ def moe_decode_allreduce(params, x, cfg: ModelConfig, *, capacity: int,
     tokens stay replicated across the model axis; each rank runs only its
     LOCAL experts on the tokens routed to them and the partial outputs are
     psum'd. Collective = one [B,1,d] all-reduce per layer.
+
+    overlap (``LuffyConfig.exec_mode="decode_overlap"``, DESIGN.md §13):
+    issue that combine psum CONCURRENTLY with the shared-expert FFN —
+    the two are data-independent (the shared FFN reads the pre-expert
+    hidden), so ``optimization_barrier`` pins the shared FFN between
+    psum issue and psum consumption and XLA's async collectives hide
+    the wire time behind the matmuls. The value graph is unchanged
+    (same operands, same addition order), so overlap is bit-identical
+    to sync; with no shared experts or no mesh it degrades to sync.
     Returns (y, aux)."""
     from repro.models.blocks import _act, _dtype
     m = cfg.moe
@@ -172,13 +182,26 @@ def moe_decode_allreduce(params, x, cfg: ModelConfig, *, capacity: int,
     vals = y_rows[e_safe, p_safe] * v_f[:, None].astype(cdt)
     vals = vals * gate.gate_weights.reshape(-1, 1).astype(cdt)
     delta = jnp.sum(vals.reshape(T, m.top_k, d), axis=1)
-    if axis_name is not None:
+    sh = None
+    if overlap and axis_name is not None and "shared" in params:
+        from repro.models.blocks import ffn_apply
+        # barrier 1: the shared FFN may not be hoisted before the local
+        # expert partials exist; barrier 2: the psum may not be awaited
+        # before the shared FFN is done — together they bracket the
+        # shared-expert matmuls inside the collective's in-flight window
+        delta, x_b = compat.optimization_barrier((delta, x))
+        sh = ffn_apply(params["shared"], cfg,
+                       _rms(x_b, params["norm"]["scale"]).astype(cdt))
+        delta = jax.lax.psum(delta, axis_name)
+        delta, sh = compat.optimization_barrier((delta, sh))
+    elif axis_name is not None:
         delta = jax.lax.psum(delta, axis_name)
     y = (xf + delta.astype(xf.dtype)).reshape(n_seq, S, d)
     if "shared" in params:
-        from repro.models.blocks import ffn_apply
-        sh = ffn_apply(params["shared"], cfg,
-                       _rms(x, params["norm"]["scale"]).astype(cdt))
+        if sh is None:
+            from repro.models.blocks import ffn_apply
+            sh = ffn_apply(params["shared"], cfg,
+                           _rms(x, params["norm"]["scale"]).astype(cdt))
         y = y + sh.astype(y.dtype)
     kept = jnp.sum(keep.astype(jnp.float32))
     d_drop = 1.0 - jnp.sum(valid.astype(jnp.float32)) / jnp.maximum(kept, 1.0)
@@ -212,7 +235,7 @@ def moe_core_planned(params, x, sideband: Dict[str, Array],
     vanilla path to ``instantiate_plan``, skipping planning entirely.
     Returns (y, new_sideband, s_next, aux, plan, cond_carry)."""
     from repro.models.blocks import _dtype
-    from repro.plan.exchange import instantiate_plan
+    from repro.plan.exchange import instantiate_decode_plan, instantiate_plan
     comm = CommContext.ensure(comm, axis_name)
     n_seq, S, d = x.shape
     xf = x.reshape(n_seq * S, d)
@@ -221,7 +244,9 @@ def moe_core_planned(params, x, sideband: Dict[str, Array],
     from repro.obs import trace as obs_trace
     with obs_trace.phase("plan_build") as _sp:
         if plan_template is not None:
-            plan = instantiate_plan(
+            inst = (instantiate_decode_plan if plan_template.mode == "decode"
+                    else instantiate_plan)
+            plan = inst(
                 plan_template, gate, xn, cfg, comm, capacity=capacity,
                 sideband=sideband, use_kernel=use_kernel)
         else:

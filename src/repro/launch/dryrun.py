@@ -266,6 +266,35 @@ def comm_traffic_ledger(cfg, shape, mesh, *, nodes: int = 0,
         },
     }
 
+    # ---- decode ledger (DESIGN.md §13) -----------------------------------
+    # The serving decode step on this fabric: one [B, d_model] combine
+    # all-reduce per MoE sublayer (moe_decode_allreduce — no all-to-all
+    # at decode) plus the shared-expert FFN, and what the
+    # "decode_overlap" exec mode saves by issuing the psum concurrently
+    # with those matmuls. Modeled with the SAME sched.cost functions the
+    # autotune grid prices the decode_ms term with; archs without shared
+    # experts (shared_ffn_ms 0) show speedup 1.0 — there is nothing to
+    # hide the wire behind.
+    from repro.sched.cost import decode_combine_ms, decode_step_ms
+    dec_tokens = shape.global_batch          # one live token per sequence
+    dec_combine = decode_combine_ms(dec_tokens, cfg.d_model, topo)
+    dec_shared = (dec_tokens * 4.0 * cfg.d_model * cfg.moe.d_ff
+                  * cfg.moe.num_shared_experts / peak_flops * 1e3)
+    dec_sync = decode_step_ms(combine_ms=dec_combine,
+                              shared_ffn_ms=dec_shared,
+                              overlap=False) * n_moe
+    dec_ovl = decode_step_ms(combine_ms=dec_combine,
+                             shared_ffn_ms=dec_shared,
+                             overlap=True) * n_moe
+    out["decode"] = {
+        "tokens": dec_tokens,
+        "combine_ms": dec_combine,
+        "shared_ffn_ms": dec_shared,
+        "sync_ms": dec_sync,
+        "overlap_ms": dec_ovl,
+        "modeled_speedup": dec_sync / max(dec_ovl, 1e-12),
+    }
+
     # ---- autotune ledger (DESIGN.md §12) ---------------------------------
     # The calibration-driven knob search over THIS ledger's topology and
     # pricing constants: chosen config + modeled step time vs the repo
@@ -642,10 +671,13 @@ def main():
     ap.add_argument("--nodes", type=int, default=0,
                     help="hierarchical mesh: split the model axis into "
                          "this many nodes (comm_mode=hier)")
-    ap.add_argument("--exec-mode", choices=["sync", "pipeline"],
+    ap.add_argument("--exec-mode",
+                    choices=["sync", "pipeline", "decode_overlap"],
                     default=None,
-                    help="MoE execution schedule: strict order or "
-                         "chunked pipeline with overlap (DESIGN.md §6; "
+                    help="MoE execution schedule: strict order, chunked "
+                         "pipeline with overlap (DESIGN.md §6), or the "
+                         "decode combine/shared-FFN overlap (DESIGN.md "
+                         "§13 — prices like sync on the train path; "
                          "default sync)")
     ap.add_argument("--pipeline-chunks", type=int, default=None,
                     help="capacity chunks for --exec-mode pipeline "

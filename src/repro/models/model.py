@@ -41,9 +41,9 @@ class Model:
                                 threshold, capacity)
 
     def decode_step(self, params, cache, tokens, *, luffy: LuffyConfig,
-                    dist: DistContext):
+                    dist: DistContext, plan_cache=None):
         return serve_lib.decode_step(params, self.cfg, luffy, dist, cache,
-                                     tokens)
+                                     tokens, plan_cache=plan_cache)
 
     def prefill(self, params, tokens, s_max, *, luffy: LuffyConfig,
                 dist: DistContext, prefix=None, enc_input=None,

@@ -303,7 +303,8 @@ def _moe_apply_dist(p_moe, x, sideband, s_prev, threshold, cfg, luffy,
                 p_moe_l, x_l, cfg, capacity=capacity,
                 axis_name=dist.model_axis, use_kernel=luffy.use_kernels,
                 fsdp_axes=fsdp if use_2d else None,
-                batch_sharded=batch_sharded)
+                batch_sharded=batch_sharded,
+                overlap=luffy.exec_mode == "decode_overlap")
             aux = jax.tree.map(lambda a: _pmean_all(a, all_axes), aux)
             return y, aux
 

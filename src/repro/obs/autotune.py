@@ -199,6 +199,11 @@ def candidate_grid(topo: Topology, *,
     execs += [("pipeline", "traffic", int(n)) for n in fixed_chunks
               if int(n) > 0]
     execs += [("pipeline", "overlap", 0)]          # planned chunk search
+    # decode combine/shared-FFN overlap (DESIGN.md §13): prices like
+    # sync on the build/execute path, wins only through the decode_ms
+    # term — so it is only ever picked for decode workloads
+    # (decode_tokens > 0 with shared experts)
+    execs += [("decode_overlap", "traffic", 4)]
     sims = [("exact", 8)] + [("lsh", int(b)) for b in lsh_bits_options]
     out: List[Dict[str, Any]] = []
     for cm, hd in wire:
@@ -228,16 +233,25 @@ def modeled_step_components(knobs: Mapping[str, Any], *,
                             plan_reuse: str = "off",
                             condense_reuse: str = "off",
                             calib: Optional[Calibration] = None,
-                            ffn_speed: float = DEFAULT_FFN_SPEED
-                            ) -> Dict[str, float]:
+                            ffn_speed: float = DEFAULT_FFN_SPEED,
+                            decode_tokens: int = 0,
+                            d_ff_shared: int = 0) -> Dict[str, float]:
     """Price one candidate: the per-phase components and their total.
 
     Returns ``{"dispatch_ms", "combine_ms", "ffn_ms", "exchange_ms",
-    "chunks", "planning_ms", "similarity_ms", "total_ms"}`` — all
-    host-side floats under the calibrated constants when ``calib`` is
-    given. ``mesh_devices`` is the full mesh size (data × model) the
-    per-device similarity work divides over; defaults to the expert
-    devices ``topo.num_devices``.
+    "chunks", "planning_ms", "similarity_ms", "decode_ms",
+    "total_ms"}`` — all host-side floats under the calibrated constants
+    when ``calib`` is given. ``mesh_devices`` is the full mesh size
+    (data × model) the per-device similarity work divides over;
+    defaults to the expert devices ``topo.num_devices``.
+
+    ``decode_tokens`` > 0 adds the decode-step term (DESIGN.md §13):
+    per MoE sublayer, one [decode_tokens, d_model] combine all-reduce
+    plus the shared-expert FFN (``d_ff_shared`` = total shared hidden
+    width), overlapped into ``max`` of the two when the candidate's
+    ``exec_mode`` is ``"decode_overlap"`` and summed otherwise. Train
+    workloads leave it 0, so the term vanishes and the grid behaves
+    exactly as before (ties still resolve to the defaults).
     """
     from repro.condense import expected_measured_pairs
     from repro.plan.estimate import (PLAN_STEP_US, estimate_exchange,
@@ -261,7 +275,9 @@ def modeled_step_components(knobs: Mapping[str, Any], *,
     c_ms = d_ms                        # locality 0: combine == dispatch
     kw = dict(dispatch_ms=d_ms, ffn_ms=ffn_ms, combine_ms=c_ms,
               chunk_overhead_ms=overhead)
-    if knobs["exec_mode"] == "sync":
+    if knobs["exec_mode"] in ("sync", "decode_overlap"):
+        # decode_overlap chunks/prices the build/execute exchange like
+        # sync — it only reschedules the decode combine (decode_ms)
         chunks, exchange_ms = 1, sched_cost.sync_ms(topo, **kw)
     elif int(knobs["pipeline_chunks"]) > 0:
         chunks = int(knobs["pipeline_chunks"])
@@ -283,11 +299,20 @@ def modeled_step_components(knobs: Mapping[str, Any], *,
     c_built = n_moe if condense_reuse == "off" else min(1, n_moe)
     similarity_ms = c_built * estimate_similarity_ms(
         pairs_local, d_model, **sim_kw)
-    total = exchange_ms + planning_ms + similarity_ms
+    decode_ms = 0.0
+    if decode_tokens > 0:
+        dec_combine = sched_cost.decode_combine_ms(decode_tokens, d_model,
+                                                   topo)
+        shared_ffn = (decode_tokens * 4.0 * d_model * d_ff_shared
+                      / speed * 1e3)
+        decode_ms = sched_cost.decode_step_ms(
+            combine_ms=dec_combine, shared_ffn_ms=shared_ffn,
+            overlap=knobs["exec_mode"] == "decode_overlap") * n_moe
+    total = exchange_ms + planning_ms + similarity_ms + decode_ms
     return {"dispatch_ms": d_ms, "combine_ms": c_ms, "ffn_ms": ffn_ms,
             "exchange_ms": exchange_ms, "chunks": float(chunks),
             "planning_ms": planning_ms, "similarity_ms": similarity_ms,
-            "total_ms": total}
+            "decode_ms": decode_ms, "total_ms": total}
 
 
 def _exchange_ms_for(knobs: Mapping[str, Any], topo: Topology, *,
@@ -299,7 +324,7 @@ def _exchange_ms_for(knobs: Mapping[str, Any], topo: Topology, *,
     kw = dict(dispatch_ms=dispatch_ms, ffn_ms=ffn_ms,
               combine_ms=combine_ms,
               chunk_overhead_ms=chunk_overhead_ms)
-    if knobs["exec_mode"] == "sync":
+    if knobs["exec_mode"] in ("sync", "decode_overlap"):
         return sched_cost.sync_ms(topo, **kw)
     if int(knobs["pipeline_chunks"]) > 0:
         return sched_cost.overlap_ms(topo, int(knobs["pipeline_chunks"]),
@@ -322,6 +347,7 @@ def autotune_config(*, topo: Topology, tokens: int, top_k: int,
                     condense_reuse: str = "off",
                     calib: Optional[Calibration] = None,
                     ffn_speed: float = DEFAULT_FFN_SPEED,
+                    decode_tokens: int = 0, d_ff_shared: int = 0,
                     key: Optional[str] = None,
                     backend: Optional[str] = None,
                     grid: Optional[List[Dict[str, Any]]] = None,
@@ -344,7 +370,8 @@ def autotune_config(*, topo: Topology, tokens: int, top_k: int,
                     mesh_devices=mesh_devices, group_size=group_size,
                     r_cond=r_cond, plan_reuse=plan_reuse,
                     condense_reuse=condense_reuse, calib=calib,
-                    ffn_speed=ffn_speed)
+                    ffn_speed=ffn_speed, decode_tokens=decode_tokens,
+                    d_ff_shared=d_ff_shared)
     scored: List[Dict[str, Any]] = []
     for knobs in grid:
         comp = modeled_step_components(knobs, **model_kw)
@@ -359,7 +386,9 @@ def autotune_config(*, topo: Topology, tokens: int, top_k: int,
     workload = {"tokens": tokens, "top_k": top_k, "d_model": d_model,
                 "d_ff": d_ff, "num_layers": num_layers, "n_moe": n_moe,
                 "n_slots": n_slots, "num_experts": num_experts,
-                "group_size": group_size, "r_cond": r_cond}
+                "group_size": group_size, "r_cond": r_cond,
+                "decode_tokens": decode_tokens,
+                "d_ff_shared": d_ff_shared}
     return TunedConfig(
         key=key, knobs=dict(best["knobs"]),
         modeled_step_ms=best["modeled_ms"],
@@ -420,7 +449,10 @@ def rerank(tuned: TunedConfig, ratios: Mapping[str, float], *,
                               ffn_ms=comp["ffn_ms"] * r_f,
                               combine_ms=comp["combine_ms"] * r_c,
                               chunk_overhead_ms=overhead)
-        total = ex + comp["planning_ms"] + comp["similarity_ms"]
+        # decode_ms keeps its modeled value (host-side; absent on
+        # artifacts persisted before the decode term existed)
+        total = (ex + comp["planning_ms"] + comp["similarity_ms"]
+                 + comp.get("decode_ms", 0.0))
         if best_ms is None or total < best_ms - 1e-12:
             best, best_ms = cand, total
     return dataclasses.replace(

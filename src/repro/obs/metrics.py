@@ -33,8 +33,9 @@ METRICS_SCHEMA_VERSION = 1
 # imports this; the golden-schema test pins both the value and the key
 # sets). v1 was the unversioned pre-obs ledger; v2 adds the
 # ``schema_version`` field itself; v3 adds the ``autotune`` section
-# (chosen config + modeled savings vs defaults).
-COMM_LEDGER_SCHEMA_VERSION = 3
+# (chosen config + modeled savings vs defaults); v4 adds the ``decode``
+# section (combine/shared-FFN pricing + the decode_overlap speedup).
+COMM_LEDGER_SCHEMA_VERSION = 4
 
 
 class MetricSpec(NamedTuple):
@@ -99,6 +100,21 @@ _SPECS = (
     MetricSpec("residual/drift", "gauge", ("residual_drift",)),
     MetricSpec("residual/device_dispersion", "gauge",
                ("residual_device_dispersion",), "x"),
+) + (
+    # Serving SLOs + scheduler occupancy (repro.serve, DESIGN.md §13):
+    # per-step rows from launch/serve.py --continuous. The SLO gauges
+    # are means over the requests that FINISHED that step (absent keys
+    # stay inapplicable-None under the masking rule).
+    MetricSpec("serve/queue_ms", "gauge", ("queue_ms",), "ms"),
+    MetricSpec("serve/ttft_ms", "gauge", ("ttft_ms",), "ms"),
+    MetricSpec("serve/tpot_ms", "gauge", ("tpot_ms",), "ms"),
+    MetricSpec("serve/active_slots", "gauge", ("active_slots",)),
+    MetricSpec("serve/queued", "gauge", ("queued_requests",)),
+    MetricSpec("serve/admitted", "counter", ("admitted",)),
+    MetricSpec("serve/finished", "counter", ("finished",)),
+    MetricSpec("serve/generated_tokens", "counter", ("generated_tokens",),
+               "tokens"),
+    MetricSpec("serve/slot_churn", "counter", ("slot_churn",)),
 )
 
 SCHEMA: Dict[str, MetricSpec] = {s.name: s for s in _SPECS}

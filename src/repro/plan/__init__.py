@@ -13,7 +13,9 @@ link-cost-weighted planner exactly, ``"overlap"`` minimizes modeled
 exposed time); :mod:`repro.plan.estimate` is the single analytic pricing
 source the dry-run ledger and ``commsim`` report from.
 """
-from repro.plan.cache import (PlanCache, build_plan_template, plan_key,
+from repro.plan.cache import (PlanCache, build_decode_template,
+                              build_plan_template, decode_plan_key,
+                              plan_key, precompute_decode_plans,
                               precompute_prefill_plans, prefill_plan_key,
                               topology_fingerprint)
 from repro.plan.estimate import (PlanEstimate, estimate_exchange,
@@ -22,7 +24,8 @@ from repro.plan.estimate import (PlanEstimate, estimate_exchange,
                                  estimate_similarity_ms)
 from repro.plan.exchange import (ExchangeAux, ExchangePlan, MoEAux, N_AUX,
                                  PlanSignature, build_exchange_plan,
-                                 execute_plan, instantiate_plan,
+                                 execute_plan, instantiate_decode_plan,
+                                 instantiate_plan,
                                  invalid_signature, next_signature,
                                  plan_static_schedule,
                                  routing_signature_matches)
@@ -36,13 +39,17 @@ from repro.plan.serial import (FORMAT_VERSION, PlanFormatError, from_bytes,
 __all__ = [
     "ExchangeAux", "ExchangePlan", "FORMAT_VERSION", "MoEAux", "N_AUX",
     "ObjectiveContext", "PlanCache", "PlanEstimate", "PlanFormatError",
-    "PlanSignature", "available_objectives", "build_exchange_plan",
-    "build_plan_template", "estimate_exchange", "estimate_planning_ms",
+    "PlanSignature", "available_objectives", "build_decode_template",
+    "build_exchange_plan",
+    "build_plan_template", "decode_plan_key", "estimate_exchange",
+    "estimate_planning_ms",
     "estimate_revalidate_ms", "estimate_similarity_ms", "execute_plan",
     "from_bytes",
-    "get_objective", "instantiate_plan", "invalid_signature",
+    "get_objective", "instantiate_decode_plan", "instantiate_plan",
+    "invalid_signature",
     "next_signature", "plan_key", "plan_migration_with_objective",
-    "plan_static_schedule", "precompute_prefill_plans",
+    "plan_static_schedule", "precompute_decode_plans",
+    "precompute_prefill_plans",
     "prefill_plan_key", "register_objective", "routing_signature_matches",
     "to_bytes", "topology_fingerprint",
 ]

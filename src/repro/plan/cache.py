@@ -267,3 +267,87 @@ def precompute_prefill_plans(cfg: ModelConfig, luffy: LuffyConfig, dist,
         comm_mode=comm_mode, axes=axes, topo=topo, M=M)
     cache.put(key, tmpl)
     return key
+
+
+# ---------------------------------------------------------------------------
+# decode templates (DESIGN.md §13)
+# ---------------------------------------------------------------------------
+
+def _decode_locals(dist, batch: int):
+    """Per-device (n_seq, M, topo) split of one decode step — exactly
+    what ``serve.engine.decode_step`` sees (seq_len is always 1)."""
+    M = dist.model_size if dist.enabled else 1
+    div = dist.batch_size_divisor if dist.enabled else 1
+    n_seq_l = max(1, batch // max(1, div))
+    topo = dist.topology if dist.enabled else None
+    return n_seq_l, M, topo
+
+
+def decode_plan_key(cfg: ModelConfig, luffy: LuffyConfig, dist,
+                    batch: int, capacity: Optional[int] = None) -> str:
+    """The key ``serve.engine.decode_step`` and
+    ``precompute_decode_plans`` agree on; ``capacity`` defaults to the
+    shared ``serve.engine.decode_capacity`` derivation. The decode
+    exchange is shape-static per batch slot, so this key is constant
+    across a serving run — one template serves every steady-state step."""
+    if capacity is None:
+        from repro.serve.engine import decode_capacity
+        capacity = decode_capacity(cfg, dist, batch)
+    n_seq_l, M, topo = _decode_locals(dist, batch)
+    return plan_key(
+        n_seq=n_seq_l, seq_len=1, d_model=cfg.d_model,
+        capacity=capacity, top_k=cfg.moe.top_k,
+        num_experts=cfg.moe.num_experts, mode="decode",
+        objective=luffy.plan_objective, exec_mode=luffy.exec_mode,
+        pipeline_chunks=luffy.pipeline_chunks,
+        comm_mode=luffy.comm_mode if M > 1 else "local",
+        topo=topo if M > 1 else None, M=M,
+        compute_dtype=cfg.compute_dtype, gpu_speed=luffy.gpu_speed,
+        d_ff=cfg.moe.d_ff, hier_dedup=luffy.hier_dedup,
+        chunk_overhead_ms=luffy.chunk_overhead_ms)
+
+
+def build_decode_template(cfg: ModelConfig, luffy: LuffyConfig, *,
+                          n_seq: int, capacity: int,
+                          comm_mode: str = "local",
+                          axes: Tuple[str, ...] = (),
+                          topo: Optional[Topology] = None,
+                          M: int = 1) -> ExchangePlan:
+    """The decode twin of :func:`build_plan_template`: one static
+    template for the shape-invariant single-token exchange (seq_len 1,
+    one live token per batch slot). Decode never migrates, never
+    condenses and never pipelines (``plan_static_schedule`` keeps
+    ``pipelined`` False under both ``sync`` and ``decode_overlap``), so
+    the template is the vanilla schedule stamped ``mode="decode"`` —
+    ``instantiate_decode_plan`` asserts on that stamp so a prefill
+    template can never be bound to a decode shape."""
+    tmpl = build_plan_template(cfg, luffy, n_seq=n_seq, seq_len=1,
+                               capacity=capacity, comm_mode=comm_mode,
+                               axes=axes, topo=topo, M=M)
+    assert not tmpl.pipelined     # decode has no capacity to chunk
+    return tmpl._replace(mode="decode")
+
+
+def precompute_decode_plans(cfg: ModelConfig, luffy: LuffyConfig, dist,
+                            batch: int, cache: PlanCache,
+                            capacity: Optional[int] = None) -> str:
+    """Warm ``cache`` with the decode template for one batch shape;
+    returns the key. ``launch/serve.py --precompute-plans`` calls this
+    next to the prefill warmup so steady-state decode makes zero
+    ``build_exchange_plan`` calls."""
+    if capacity is None:
+        from repro.serve.engine import decode_capacity
+        capacity = decode_capacity(cfg, dist, batch)
+    n_seq_l, M, topo = _decode_locals(dist, batch)
+    if M > 1:
+        ma = dist.model_axis
+        axes = (ma,) if isinstance(ma, str) else tuple(ma)
+        comm_mode = luffy.comm_mode
+    else:
+        axes, comm_mode, topo = (), "local", None
+    key = decode_plan_key(cfg, luffy, dist, batch, capacity)
+    tmpl = build_decode_template(
+        cfg, luffy, n_seq=n_seq_l, capacity=capacity,
+        comm_mode=comm_mode, axes=axes, topo=topo, M=M)
+    cache.put(key, tmpl)
+    return key

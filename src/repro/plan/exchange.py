@@ -261,7 +261,11 @@ def plan_static_schedule(cfg: ModelConfig, luffy: LuffyConfig, topo, M: int,
     """
     m = cfg.moe
     pipelined = luffy.exec_mode == "pipeline" and M > 1
-    assert luffy.exec_mode in ("sync", "pipeline"), luffy.exec_mode
+    # "decode_overlap" only reschedules the decode combine psum
+    # (DESIGN.md §13); on the build/execute path it prices and chunks
+    # exactly like sync.
+    assert luffy.exec_mode in ("sync", "pipeline", "decode_overlap"), \
+        luffy.exec_mode
     priced = topo is not None and M > 1
     ffn_ms = 0.0
     if priced:
@@ -846,8 +850,10 @@ def instantiate_plan(template: ExchangePlan, gate: GateOutput, xn: Array,
     arithmetic ``build_exchange_plan`` performs in vanilla mode — so the
     executed forward is bit-identical to the uncached path while no
     planning (chunk search, pricing, objectives) runs per request.
-    Templates are vanilla-mode only: serving prompts are never re-homed
-    and never condensed.
+    Templates are vanilla- or decode-mode only: serving prompts are
+    never re-homed and never condensed (and ``build_exchange_plan``
+    forces condensation off for ``mode="decode"``, so a decode template
+    binds routing through the identical arithmetic).
     """
     m = cfg.moe
     T, d = xn.shape
@@ -858,7 +864,7 @@ def instantiate_plan(template: ExchangePlan, gate: GateOutput, xn: Array,
     E_local = E // M
     my = comm.index()
     C = capacity
-    assert template.mode == "vanilla" and not template.migrate \
+    assert template.mode in ("vanilla", "decode") and not template.migrate \
         and not template.condense, (template.mode, template.migrate,
                                     template.condense)
     assert template.capacity == C and template.chunks.capacity == C, \
@@ -888,7 +894,7 @@ def instantiate_plan(template: ExchangePlan, gate: GateOutput, xn: Array,
 
     z = jnp.float32(0.0)
     return ExchangePlan(
-        mode="vanilla", migrate=False, condense=False,
+        mode=template.mode, migrate=False, condense=False,
         pipelined=template.pipelined, capacity=C, chunks=template.chunks,
         comm=comm, objective=template.objective,
         group_size=template.group_size,
@@ -902,6 +908,23 @@ def instantiate_plan(template: ExchangePlan, gate: GateOutput, xn: Array,
         traffic_before=z, traffic_after=z, inter_bytes_flat=ib_flat,
         inter_bytes_dedup=ib_dedup, signature=None, plans_built=z,
         plans_reused=jnp.float32(1.0), reuse_mismatch=z)
+
+
+def instantiate_decode_plan(template: ExchangePlan, gate: GateOutput,
+                            xn: Array, cfg: ModelConfig,
+                            comm: CommContext, *, capacity: int,
+                            sideband: Dict[str, Array],
+                            use_kernel: bool = False) -> ExchangePlan:
+    """Bind fresh routing onto a cached *decode* template (DESIGN.md
+    §13) — the zero-planning steady-state decode path. The decode
+    exchange is shape-static per batch slot (T = batch, S = 1), so one
+    template covers every decode step of a serving run; this wrapper
+    just asserts the template really is the decode one (a prefill
+    template bound to a decode shape would be a silent cache-key bug)."""
+    assert template.mode == "decode", template.mode
+    return instantiate_plan(template, gate, xn, cfg, comm,
+                            capacity=capacity, sideband=sideband,
+                            use_kernel=use_kernel)
 
 
 def _exchange_sideband(sb: Dict[str, Array], dest_global: Array,

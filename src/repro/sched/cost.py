@@ -75,3 +75,37 @@ def optimal_chunks(topo: Topology, *, dispatch_ms: float, ffn_ms: float,
         if best_t is None or t < best_t - 1e-12:
             best_n, best_t = n, t
     return best_n, best_t
+
+
+# ---------------------------------------------------------------------------
+# decode-step pricing (DESIGN.md §13)
+# ---------------------------------------------------------------------------
+
+def decode_combine_ms(tokens: int, d_model: int, topo: Topology, *,
+                      bytes_per_el: int = 2) -> float:
+    """Modeled decode MoE combine: one [tokens, d_model] all-reduce over
+    the model axis per MoE sublayer (``moe_decode_allreduce`` — decode
+    has no all-to-all to chunk). Ring all-reduce over the topology's
+    slowest link class: ``2(M−1)`` steps each moving ``payload/M`` bytes
+    plus per-step latency."""
+    M = topo.num_devices
+    if M <= 1 or tokens <= 0:
+        return 0.0
+    payload = float(tokens) * d_model * bytes_per_el
+    hier = topo.num_nodes > 1
+    bw = topo.inter_bw if hier else topo.intra_bw
+    lat = topo.inter_lat if hier else topo.intra_lat
+    steps = 2 * (M - 1)
+    return (steps / M * payload / bw + steps * lat) * 1e3
+
+
+def decode_step_ms(*, combine_ms: float, shared_ffn_ms: float,
+                   overlap: bool) -> float:
+    """One decode MoE sublayer's exposed time: the combine psum and the
+    shared-expert FFN are data-independent, so ``decode_overlap``
+    (``LuffyConfig.exec_mode``) exposes only the longer of the two while
+    sync pays their sum. Degenerate cases fall out: no shared experts or
+    a flat single-device mesh give overlap == sync."""
+    if overlap:
+        return max(combine_ms, shared_ffn_ms)
+    return combine_ms + shared_ffn_ms

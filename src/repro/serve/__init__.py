@@ -1,0 +1,39 @@
+"""Decode-path serving subsystem (DESIGN.md §13).
+
+Where training's unit of work is a *step*, ``repro.serve``'s is a
+*request*:
+
+* :mod:`repro.serve.engine` — prefill + single-token decode with the
+  per-layer cache layout. The cache carries a per-slot ``offset`` frame
+  origin so a recycled slot restarts at relative position 0 with no
+  recompile and no attention-cache reset (the slot-recycling invariant
+  makes stale ring entries mask identically to a fresh cache's −1
+  entries — bitwise). Decode MoE sublayers take a precomputed plan
+  template from the :class:`~repro.plan.cache.PlanCache` so steady-state
+  decode makes zero ``build_exchange_plan`` calls, and the
+  ``decode_overlap`` exec mode issues the decode combine psum
+  concurrently with the shared-expert FFN
+  (``core/moe_layer.py::moe_decode_allreduce``).
+* :mod:`repro.serve.scheduler` — the continuous-batching request
+  scheduler: FIFO admission into free cache slots between decode steps,
+  evict-on-finish slot recycling, per-request SLO accounting
+  (queue/TTFT/per-token latency) published through the ``repro.obs``
+  metrics registry by ``launch/serve.py --continuous``.
+
+The historical top-level ``repro.serve_lib`` module remains as a
+re-export shim (mirroring ``core/condensation.py`` → ``repro.condense``).
+"""
+from repro.serve.engine import (admit_slot, attn_decode, cache_pspecs,
+                                cache_struct, cross_attn_decode,
+                                decode_capacity, decode_step, prefill,
+                                prefill_capacity)
+from repro.serve.scheduler import (ContinuousScheduler, Request,
+                                   DECODE, DONE, IDLE_TOKEN, PREFILL,
+                                   QUEUED)
+
+__all__ = [
+    "ContinuousScheduler", "DECODE", "DONE", "IDLE_TOKEN", "PREFILL",
+    "QUEUED", "Request", "admit_slot", "attn_decode", "cache_pspecs",
+    "cache_struct", "cross_attn_decode", "decode_capacity", "decode_step",
+    "prefill", "prefill_capacity",
+]

@@ -1,0 +1,491 @@
+"""Serving engine: prefill + single-token decode with per-layer caches.
+
+Promoted from the historical top-level ``repro.serve_lib`` module when
+serving became a first-class subsystem (DESIGN.md §13); ``serve_lib``
+remains as a re-export shim, mirroring ``core/condensation.py`` →
+``repro.condense``.
+
+Cache layout (per pattern position ``j``, stacked over scan groups):
+
+* attention:  ``{"k","v": [n_groups, B, W_j, kv, hd],
+  "cpos": [n_groups, B, W_j]}`` where ``W_j = min(window_j, S_max)`` —
+  window layers keep a ring buffer (slot = rpos % W), global layers a
+  full buffer. ``cpos`` holds per-slot RELATIVE positions (−1 = empty).
+* mamba:      ``{"h": [n_groups, B, d_inner, N], "conv": [n_groups, B, K−1, d_inner]}``
+* rwkv6:      ``{"S": [n_groups, B, H, hd, hd], "x_prev": [n_groups, B, 1, d]}``
+* cross-attn: ``{"ck","cv": [n_groups, B, S_enc, kv, hd]}`` (static after prefill)
+* ``offset [B] int32``: per-slot start of the occupant's coordinate
+  frame. A slot's relative position is ``rpos = pos − offset[b]`` — the
+  continuous-batching scheduler (``serve/scheduler.py``) admits a new
+  request into a recycled slot by setting ``offset[b] = pos`` (see
+  :func:`admit_slot`), which restarts that slot at rpos 0 without
+  touching any other slot or recompiling (``offset`` is a traced input).
+
+Slot-recycling invariant (why admission needs NO attention-cache reset):
+every ``cpos`` entry at ring index ``i`` is either −1 or a value
+``v ≥ i`` with ``v ≡ i (mod W)`` (writes store ``rpos`` at index
+``rpos % W``). For a fresh occupant at ``rpos_new``, every stale index
+``i > rpos_new`` therefore holds ``v ≥ i > rpos_new`` or −1 — masked by
+``kp <= rpos`` exactly where a fresh batch's −1 entries would be, and
+the NEG_INF logits underflow to exactly-0.0 softmax weights, so
+``0.0 × stale_v = 0.0`` bitwise. SSM/RWKV recurrent state DOES carry
+across tokens unmasked, so :func:`admit_slot` zeroes those rows.
+
+Decode attention is written as plain masked softmax over the (possibly
+context-parallel-sharded) cache — GSPMD inserts the partial-softmax
+collectives when the cache's sequence dim is sharded.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.config import LuffyConfig, ModelConfig
+from repro.core import moe_layer as moe
+from repro.dist import DistContext
+from repro.models import blocks as bk
+from repro.models import ssm as ssm_mod
+from repro.models.transformer import (_moe_apply_dist, embed_tokens,
+                                      logits_fn, pattern_period,
+                                      _run_encoder)
+
+Array = jnp.ndarray
+NEG_INF = -1e30
+
+
+def _win(cfg: ModelConfig, j: int, s_max: int) -> int:
+    w = cfg.attn.window_for_layer(j) if cfg.attn is not None else None
+    return s_max if w is None else min(w, s_max)
+
+
+# ---------------------------------------------------------------------------
+# cache construction
+# ---------------------------------------------------------------------------
+
+def cache_struct(cfg: ModelConfig, batch: int, s_max: int, *,
+                 enc_len: int = 0, as_struct: bool = True):
+    """Pytree of ShapeDtypeStruct (as_struct) or zero arrays."""
+    period = pattern_period(cfg)
+    n_groups = cfg.num_layers // period
+    cdt = bk._dtype(cfg.compute_dtype)
+
+    def mk(shape, dtype):
+        if as_struct:
+            return jax.ShapeDtypeStruct(shape, dtype)
+        if dtype == jnp.int32:
+            return jnp.full(shape, -1, dtype)
+        return jnp.zeros(shape, dtype)
+
+    groups = []
+    for j in range(period):
+        g: Dict[str, Any] = {}
+        if cfg.attn is not None:
+            a = cfg.attn
+            W = _win(cfg, j, s_max)
+            g["k"] = mk((n_groups, batch, W, a.num_kv_heads, a.head_dim), cdt)
+            g["v"] = mk((n_groups, batch, W, a.num_kv_heads, a.head_dim), cdt)
+            g["cpos"] = mk((n_groups, batch, W), jnp.int32)
+        if cfg.ssm is not None:
+            s = cfg.ssm
+            if s.kind == "mamba":
+                di = s.expand * cfg.d_model
+                g["ssm_h"] = mk((n_groups, batch, di, s.state_dim),
+                                jnp.float32)
+                g["ssm_conv"] = mk((n_groups, batch, s.conv_dim - 1, di),
+                                   jnp.float32)
+            else:
+                hd = s.head_dim
+                nh = cfg.d_model // hd
+                g["ssm_S"] = mk((n_groups, batch, nh, hd, hd), jnp.float32)
+                g["ssm_xprev"] = mk((n_groups, batch, 1, cfg.d_model),
+                                    jnp.float32)
+                # channel-mix has its own token-shift state (the cmix
+                # input is normed by a DIFFERENT norm than time-mix)
+                g["cmix_xprev"] = mk((n_groups, batch, 1, cfg.d_model),
+                                     jnp.float32)
+        if cfg.kind == "encdec":
+            a = cfg.attn
+            g["ck"] = mk((n_groups, batch, enc_len, a.num_kv_heads,
+                          a.head_dim), cdt)
+            g["cv"] = mk((n_groups, batch, enc_len, a.num_kv_heads,
+                          a.head_dim), cdt)
+        groups.append(g)
+    # per-slot coordinate-frame origin: 0 everywhere at boot (NOT the
+    # int32 −1 fill — a zero offset makes the relative frame coincide
+    # with the absolute one, i.e. the pre-continuous-batching layout)
+    off = (jax.ShapeDtypeStruct((batch,), jnp.int32) if as_struct
+           else jnp.zeros((batch,), jnp.int32))
+    cache = {"groups": groups, "offset": off,
+             "pos": mk((), jnp.int32) if as_struct else jnp.int32(0)}
+    return cache
+
+
+def cache_pspecs(cfg: ModelConfig, dist: DistContext, s_max: int):
+    """PartitionSpecs matching cache_struct. KV sequence dim sharded over
+    dist.seq_axis (context-parallel decode)."""
+    period = pattern_period(cfg)
+    ba = dist.batch_axes if dist.batch_axes else None
+    sax = dist.seq_axis
+    groups = []
+    for j in range(period):
+        g: Dict[str, Any] = {}
+        if cfg.attn is not None:
+            W = _win(cfg, j, s_max)
+            kv_seq = sax if (sax is not None and _div(W, dist, sax)) else None
+            g["k"] = P(None, ba, kv_seq, None, None)
+            g["v"] = P(None, ba, kv_seq, None, None)
+            g["cpos"] = P(None, ba, kv_seq)
+        if cfg.ssm is not None:
+            if cfg.ssm.kind == "mamba":
+                g["ssm_h"] = P(None, ba, None, None)
+                g["ssm_conv"] = P(None, ba, None, None)
+            else:
+                g["ssm_S"] = P(None, ba, None, None, None)
+                g["ssm_xprev"] = P(None, ba, None, None)
+                g["cmix_xprev"] = P(None, ba, None, None)
+        if cfg.kind == "encdec":
+            # encoder KV can be long (32k frames) — shard its seq dim too
+            g["ck"] = P(None, ba, sax, None, None)
+            g["cv"] = P(None, ba, sax, None, None)
+        groups.append(g)
+    return {"groups": groups, "offset": P(ba), "pos": P()}
+
+
+def _div(n: int, dist: DistContext, axes) -> bool:
+    return n % dist.axis_size(axes) == 0
+
+
+# ---------------------------------------------------------------------------
+# slot admission (continuous batching)
+# ---------------------------------------------------------------------------
+
+def admit_slot(cache, slot: int, position) -> dict:
+    """Recycle cache slot ``slot`` for a new request whose first token
+    will be fed at absolute decode position ``position`` (normally the
+    current ``cache["pos"]``).
+
+    Only two things change: ``offset[slot]`` (restarting the slot's
+    relative coordinate frame at 0) and the recurrent SSM/RWKV state
+    rows (which carry across tokens unmasked). The attention k/v/cpos
+    ring entries are deliberately NOT cleared — the slot-recycling
+    invariant in the module docstring guarantees every stale entry is
+    masked exactly where a fresh cache's −1 entries would be, so the
+    recycled slot is bitwise-identical to a fresh one
+    (``tests/test_serve_consistency.py``)."""
+    new = dict(cache)
+    new["offset"] = cache["offset"].at[slot].set(jnp.int32(position))
+    groups = []
+    for g in cache["groups"]:
+        g = dict(g)
+        for k in ("ssm_h", "ssm_conv", "ssm_S", "ssm_xprev", "cmix_xprev"):
+            if k in g:
+                g[k] = g[k].at[:, slot].set(0.0)
+        groups.append(g)
+    new["groups"] = groups
+    return new
+
+
+# ---------------------------------------------------------------------------
+# decode attention (plain masked softmax; GSPMD shards the cache)
+# ---------------------------------------------------------------------------
+
+def attn_decode(p, cfg: ModelConfig, x, pos, offset, ck, cv, cpos, *,
+                layer: int, window: Optional[int]):
+    """x: [B,1,d]; ck/cv: [B,W,kv,hd]; cpos: [B,W]; pos: scalar int32;
+    offset: [B] int32 (per-slot frame origin). Inserts the new token's
+    KV at its slot's relative ring index then attends. Returns
+    (out, ck, cv, cpos)."""
+    a = cfg.attn
+    cdt = bk._dtype(cfg.compute_dtype)
+    xq = x.astype(cdt)
+    q = xq @ p["wq"].astype(cdt)
+    k_new = xq @ p["wk"].astype(cdt)
+    v_new = xq @ p["wv"].astype(cdt)
+    B = x.shape[0]
+    q = q.reshape(B, 1, a.num_heads, a.head_dim)
+    k_new = k_new.reshape(B, 1, a.num_kv_heads, a.head_dim)
+    v_new = v_new.reshape(B, 1, a.num_kv_heads, a.head_dim)
+    rpos = pos - offset                     # [B] per-slot relative position
+    posb = rpos[:, None]                    # [B,1]
+    if a.use_rope:
+        q = bk.apply_rope(q, posb, a.rope_theta)
+        k_new = bk.apply_rope(k_new, posb, a.rope_theta)
+    W = ck.shape[1]
+    rslot = rpos % W        # ring buffer; full caches have W = S_max >= rpos
+    b_idx = jnp.arange(B)
+    ck = ck.at[b_idx, rslot].set(k_new[:, 0])
+    cv = cv.at[b_idx, rslot].set(v_new[:, 0])
+    cpos = cpos.at[b_idx, rslot].set(rpos)
+
+    n_rep = a.num_heads // a.num_kv_heads
+    kk = bk._repeat_kv(ck, n_rep)
+    vv = bk._repeat_kv(cv, n_rep)
+    scale = a.softmax_scale or 1.0 / math.sqrt(a.head_dim)
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q, kk,
+                        preferred_element_type=jnp.float32) * scale
+    kp = cpos[:, None, None, :]             # [B,1,1,W] relative positions
+    rq = rpos[:, None, None, None]
+    valid = (kp >= 0) & (kp <= rq)
+    if window is not None:
+        if a.chunked_local:
+            valid = valid & ((rq // window) == (kp // window))
+        else:
+            valid = valid & ((rq - kp) < window)
+    if a.logit_cap is not None:
+        logits = a.logit_cap * jnp.tanh(logits / a.logit_cap)
+    logits = jnp.where(valid, logits, NEG_INF)
+    w = jax.nn.softmax(logits, axis=-1).astype(vv.dtype)
+    o = jnp.einsum("bhqk,bkhd->bqhd", w, vv)
+    o = o.reshape(B, 1, a.q_dim)
+    return (o @ p["wo"].astype(cdt)).astype(x.dtype), ck, cv, cpos
+
+
+def cross_attn_decode(p, cfg, x, ck, cv):
+    a = cfg.attn
+    cdt = bk._dtype(cfg.compute_dtype)
+    B = x.shape[0]
+    q = (x.astype(cdt) @ p["wq"].astype(cdt)).reshape(
+        B, 1, a.num_heads, a.head_dim)
+    n_rep = a.num_heads // a.num_kv_heads
+    kk = bk._repeat_kv(ck, n_rep)
+    vv = bk._repeat_kv(cv, n_rep)
+    scale = a.softmax_scale or 1.0 / math.sqrt(a.head_dim)
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q, kk,
+                        preferred_element_type=jnp.float32) * scale
+    w = jax.nn.softmax(logits, axis=-1).astype(vv.dtype)
+    o = jnp.einsum("bhqk,bkhd->bqhd", w, vv).reshape(B, 1, a.q_dim)
+    return (o @ p["wo"].astype(cdt)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# decode step
+# ---------------------------------------------------------------------------
+
+def decode_capacity(cfg: ModelConfig, dist: DistContext, batch: int) -> int:
+    """The MoE dispatch capacity one decode step uses for ``batch``
+    sequences — the single derivation shared by :func:`decode_step`, the
+    decode plan-template key (``plan/cache.py::decode_plan_key``) and
+    the launcher's ``--precompute-plans`` (drift here would silently
+    miss the cache)."""
+    return moe.capacity_for(
+        cfg.moe, max(1, batch // max(1, dist.batch_size_divisor)),
+        cfg.moe.num_experts, slack=2.0)
+
+
+def decode_step(params, cfg: ModelConfig, luffy: LuffyConfig,
+                dist: DistContext, cache, tokens, *, plan_cache=None):
+    """One decode step for the whole batch. tokens: [B,1] int32.
+    Returns (logits [B,V], new cache).
+
+    plan_cache (DESIGN.md §13): a :class:`repro.plan.cache.PlanCache`.
+    The decode exchange is shape-static per batch slot, so when the
+    (batch × capacity × topology) key hits — e.g. after the launcher's
+    ``--precompute-plans`` — every MoE sublayer runs through
+    ``instantiate_decode_plan`` on the cached template instead of
+    ``build_exchange_plan``: zero planning calls in steady-state decode
+    (counter-tested), bit-identical logits to the unplanned path. Only
+    the single-device / model_size==1 route builds plans at decode; the
+    multi-device route is the plan-free all-reduce
+    (``moe_decode_allreduce``), so the template is not consulted there.
+    """
+    period = pattern_period(cfg)
+    pos = cache["pos"]
+    offset = cache["offset"]
+    x = embed_tokens(params, cfg, tokens, dist=dist)
+    B = x.shape[0]
+    x = dist.constrain(x, P(dist.batch_axes or None, None, None))
+    dummy_sb = {"labels": jnp.zeros((B, 1), jnp.int32),
+                "seq_len": jnp.full((B,), 1, jnp.int32)}
+    cap = decode_capacity(cfg, dist, B) if cfg.uses_moe else 0
+    tmpl = None
+    if (plan_cache is not None and cfg.uses_moe
+            and (not dist.enabled or dist.model_size == 1)):
+        from repro.plan.cache import decode_plan_key
+        tmpl = plan_cache.get(decode_plan_key(cfg, luffy, dist, B,
+                                              capacity=cap))
+
+    def group_body(x, xs):
+        p_group, cgroup = xs
+        new_groups = []
+        for j in range(period):
+            p = p_group[j]
+            g = dict(cgroup[j])
+            window = (cfg.attn.window_for_layer(j)
+                      if cfg.attn is not None else None)
+            if cfg.attn is not None and cfg.ssm is not None \
+                    and cfg.parallel_ssm:
+                xn = bk.norm_apply(p["attn_norm"], x, cfg.norm)
+                att, g["k"], g["v"], g["cpos"] = attn_decode(
+                    p["attn"], cfg, xn, pos, offset, g["k"], g["v"],
+                    g["cpos"], layer=j, window=window)
+                sso, st = ssm_mod.mamba_step(
+                    p["ssm"], cfg, xn,
+                    {"h": g["ssm_h"], "conv": g["ssm_conv"]})
+                g["ssm_h"], g["ssm_conv"] = st["h"], st["conv"]
+                x = x + 0.5 * (att + sso)
+            elif cfg.attn is not None:
+                xn = bk.norm_apply(p["attn_norm"], x, cfg.norm)
+                att, g["k"], g["v"], g["cpos"] = attn_decode(
+                    p["attn"], cfg, xn, pos, offset, g["k"], g["v"],
+                    g["cpos"], layer=j, window=window)
+                x = x + att
+            else:
+                xn = bk.norm_apply(p["ssm_norm"], x, cfg.norm)
+                if cfg.ssm.kind == "mamba":
+                    y, st = ssm_mod.mamba_step(
+                        p["ssm"], cfg, xn,
+                        {"h": g["ssm_h"], "conv": g["ssm_conv"]})
+                    g["ssm_h"], g["ssm_conv"] = st["h"], st["conv"]
+                else:
+                    y, st = ssm_mod.rwkv6_step(
+                        p["ssm"], cfg, xn,
+                        {"S": g["ssm_S"], "x_prev": g["ssm_xprev"]})
+                    g["ssm_S"], g["ssm_xprev"] = st["S"], st["x_prev"]
+                x = x + y
+            if cfg.kind == "encdec":
+                xn = bk.norm_apply(p["cross_norm"], x, cfg.norm)
+                x = x + cross_attn_decode(p["cross_attn"], cfg, xn,
+                                          g["ck"], g["cv"])
+            kind = cfg.ffn_kind(j)
+            if kind == "moe":
+                y, _, _, _, _, _ = _moe_apply_dist(
+                    p["moe"], x, dummy_sb, None, jnp.float32(1.0),
+                    cfg, luffy, dist, "decode", cap, plan_template=tmpl)
+                x = y
+            else:
+                xn = bk.norm_apply(p["ffn_norm"], x, cfg.norm)
+                if cfg.ssm is not None and cfg.ssm.kind == "rwkv6":
+                    x = x + ssm_mod.rwkv_cmix_apply(
+                        p["ffn"], cfg, xn, x_prev=g["cmix_xprev"])
+                    g["cmix_xprev"] = xn.astype(jnp.float32)
+                else:
+                    x = x + bk.ffn_apply(p["ffn"], cfg, xn)
+            new_groups.append(g)
+        return x, tuple(new_groups)
+
+    stacked = tuple(params["layers"])
+    cstacked = tuple(cache["groups"])
+    x, new_cgroups = jax.lax.scan(group_body, x, (stacked, cstacked))
+    logits = logits_fn(params, cfg, x)[:, 0]
+    new_cache = {"groups": list(new_cgroups), "offset": offset,
+                 "pos": pos + 1}
+    return logits.astype(jnp.float32), new_cache
+
+
+# ---------------------------------------------------------------------------
+# prefill
+# ---------------------------------------------------------------------------
+
+def prefill_capacity(cfg: ModelConfig, dist: DistContext, batch: int,
+                     seq_len: int) -> int:
+    """The MoE dispatch capacity prefill uses for one (batch, seq_len)
+    shape — the single derivation shared by :func:`prefill`, the plan
+    cache key, and ``launch/serve.py --precompute-plans`` (drift here
+    would silently miss the cache)."""
+    div = dist.batch_size_divisor
+    if dist.seq_axis is not None:
+        div *= dist.axis_size(dist.seq_axis)
+    return moe.capacity_for(cfg.moe, max(1, batch * seq_len // div),
+                            cfg.moe.num_experts)
+
+
+def prefill(params, cfg: ModelConfig, luffy: LuffyConfig, dist: DistContext,
+            tokens, s_max: int, *, prefix=None, enc_input=None,
+            plan_cache=None):
+    """Full forward over the prompt; builds the decode cache.
+    Returns (last-token logits [B,V], cache).
+
+    MoE sublayers run through the shared ``repro.plan`` build/execute
+    core (DESIGN.md §7), so ``luffy.exec_mode="pipeline"`` chunks the
+    prefill dispatch capacity exactly like the train forward (migration/
+    condensation are forced off — serving prompts are not re-homed).
+
+    plan_cache (DESIGN.md §9): a :class:`repro.plan.cache.PlanCache`.
+    When the (batch shape × seq len × objective × topology) key hits —
+    e.g. after ``--precompute-plans`` — every MoE sublayer runs through
+    ``instantiate_plan`` on the cached static template instead of
+    ``build_exchange_plan``: zero planning on the request path, with
+    the executed forward bit-identical to the uncached one (the
+    template's schedule comes from the same ``plan_static_schedule``)."""
+    import dataclasses as _dc
+    period = pattern_period(cfg)
+    x = embed_tokens(params, cfg, tokens, prefix, dist=dist)
+    x = dist.constrain(x, dist.act_spec())
+    B, S = x.shape[0], x.shape[1]
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None],
+                                 (B, S))
+    sb = {"labels": jnp.zeros((B, S), jnp.int32),
+          "seq_len": jnp.full((B,), S, jnp.int32)}
+    nl = _dc.replace(luffy, enable_condensation=False,
+                     enable_migration=False)
+    enc_out = None
+    if cfg.kind == "encdec":
+        enc_x = (enc_input.astype(x.dtype)
+                 @ params["prefix_proj"]["w"].astype(x.dtype))
+        enc_out = _run_encoder(params["encoder"], cfg, nl, dist, enc_x)
+    enc_pos = None if enc_out is None else jnp.broadcast_to(
+        jnp.arange(enc_out.shape[1], dtype=jnp.int32)[None],
+        enc_out.shape[:2])
+
+    def group_body(x, p_group):
+        kvs = []
+        for j in range(period):
+            p = p_group[j]
+            if cfg.attn is not None and cfg.ssm is not None \
+                    and cfg.parallel_ssm:
+                xn = bk.norm_apply(p["attn_norm"], x, cfg.norm)
+                att, kv = bk.attn_apply(p["attn"], cfg, xn, positions,
+                                        layer=j, causal=True)
+                sso = ssm_mod.mamba_apply(p["ssm"], cfg, xn)
+                x = x + 0.5 * (att + sso)
+            elif cfg.attn is not None:
+                xn = bk.norm_apply(p["attn_norm"], x, cfg.norm)
+                att, kv = bk.attn_apply(p["attn"], cfg, xn, positions,
+                                        layer=j, causal=True)
+                x = x + att
+            else:
+                xn = bk.norm_apply(p["ssm_norm"], x, cfg.norm)
+                if cfg.ssm.kind == "mamba":
+                    x = x + ssm_mod.mamba_apply(p["ssm"], cfg, xn)
+                else:
+                    x = x + ssm_mod.rwkv6_apply(p["ssm"], cfg, xn)
+                kv = None
+            if cfg.kind == "encdec":
+                xn = bk.norm_apply(p["cross_norm"], x, cfg.norm)
+                ca, ckv = bk.attn_apply(p["cross_attn"], cfg, xn, positions,
+                                        layer=j, kv=(enc_out, enc_pos),
+                                        causal=False)
+                x = x + ca
+            else:
+                ckv = None
+            kind = cfg.ffn_kind(j)
+            if kind == "moe":
+                cap = prefill_capacity(cfg, dist, B, S)
+                tmpl = None
+                if plan_cache is not None:
+                    from repro.plan.cache import prefill_plan_key
+                    tmpl = plan_cache.get(
+                        prefill_plan_key(cfg, nl, dist, B, S, cap))
+                y, _, _, _, _, _ = _moe_apply_dist(
+                    p["moe"], x, sb, None, jnp.float32(1.0), cfg, nl,
+                    dist, "vanilla", cap, plan_template=tmpl)
+                x = y
+            else:
+                xn = bk.norm_apply(p["ffn_norm"], x, cfg.norm)
+                if cfg.ssm is not None and cfg.ssm.kind == "rwkv6":
+                    x = x + ssm_mod.rwkv_cmix_apply(p["ffn"], cfg, xn)
+                else:
+                    x = x + bk.ffn_apply(p["ffn"], cfg, xn)
+            kvs.append((kv, ckv))
+        return x, tuple(kvs)
+
+    x, kvs = jax.lax.scan(group_body, x, tuple(params["layers"]))
+    # NOTE: prefill returns KV for cache building; SSM final states are not
+    # captured here (serve driver for SSM archs decodes from scratch or via
+    # chunked prefill). For the dry-run shapes, decode_step is what lowers.
+    logits = logits_fn(params, cfg, x[:, -1:])[:, 0]
+    return logits.astype(jnp.float32), kvs

@@ -27,7 +27,7 @@ from repro.obs.calibrate import Calibration, calibration_key
 from repro.obs.metrics import COMM_LEDGER_SCHEMA_VERSION
 
 TOP_KEYS = {"schema_version", "calibration", "topology", "dedup_factor",
-            "buckets", "plan_reuse", "condensation", "autotune"}
+            "buckets", "plan_reuse", "condensation", "decode", "autotune"}
 TOPOLOGY_KEYS = {"nodes", "devices_per_node", "bw_ratio"}
 BUCKET_KEYS = {"flat", "hier", "overlap"}
 TIER_KEYS = {"intra_bytes", "inter_bytes", "time_s"}
@@ -45,6 +45,8 @@ DEDUP_WIRE_KEYS = {"enabled", "modeled_inter_bytes", "flat_inter_bytes",
                    "shipped_inter_bytes"}
 CONDENSE_PLAN_KEYS = {"mode", "built_per_step", "reused_per_step",
                       "similarity_ms_saved_per_step"}
+DECODE_KEYS = {"tokens", "combine_ms", "shared_ffn_ms", "sync_ms",
+               "overlap_ms", "modeled_speedup"}
 AUTOTUNE_KEYS = {"applied", "key", "knobs", "modeled_step_ms",
                  "default_step_ms", "modeled_savings_ms", "candidates"}
 KNOB_KEYS = {"comm_mode", "hier_dedup", "exec_mode", "pipeline_chunks",
@@ -66,7 +68,7 @@ def _ledger(**kw):
 
 def test_ledger_schema_version_and_key_sets():
     led = _ledger()
-    assert led["schema_version"] == COMM_LEDGER_SCHEMA_VERSION == 3
+    assert led["schema_version"] == COMM_LEDGER_SCHEMA_VERSION == 4
     assert set(led) == TOP_KEYS
     assert set(led["topology"]) == TOPOLOGY_KEYS
     assert set(led["buckets"]) == {"0.0", "0.25", "0.5"}
@@ -79,6 +81,11 @@ def test_ledger_schema_version_and_key_sets():
     assert set(led["condensation"]["dedup_wire"]) == DEDUP_WIRE_KEYS
     assert set(led["condensation"]["condense_plan"]) == \
         CONDENSE_PLAN_KEYS
+    assert set(led["decode"]) == DECODE_KEYS
+    # decode step cost: overlap hides the shorter leg behind the longer
+    dec = led["decode"]
+    assert dec["overlap_ms"] <= dec["sync_ms"]
+    assert dec["modeled_speedup"] >= 1.0
     assert set(led["autotune"]) == AUTOTUNE_KEYS
     assert set(led["autotune"]["knobs"]) == KNOB_KEYS
     assert led["autotune"]["applied"] is False   # modeled, not resolved
@@ -130,7 +137,8 @@ def test_ledger_flattens_into_metrics_record():
     from repro.obs.metrics import flatten
     led = _ledger()
     flat = flatten("comm_ledger", led)
-    assert flat["comm_ledger/schema_version"] == 3
+    assert flat["comm_ledger/schema_version"] == 4
+    assert "comm_ledger/decode/modeled_speedup" in flat
     assert "comm_ledger/buckets/0.0/hier/inter_bytes" in flat
     assert "comm_ledger/plan_reuse/planning_ms_per_plan" in flat
     assert all(not isinstance(v, dict) for v in flat.values())

@@ -1,0 +1,315 @@
+"""repro.serve subsystem (DESIGN.md §13): decode plan templates
+(zero-planning steady-state decode, bit-identical to the unplanned
+path), the continuous-batching scheduler's state machine and SLO
+accounting, decode-step cost pricing + the autotune decode_overlap
+candidate, the serve_lib compatibility shim, and the 8-device
+sync-vs-decode_overlap bit-identity."""
+import dataclasses
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import serve_lib
+from repro.comm.topology import Topology
+from repro.config import LuffyConfig, reduced
+from repro.configs import get_config
+from repro.dist import single_device
+from repro.models.model import build_model
+from repro.obs import autotune as obs_at
+from repro.plan import PlanCache
+from repro.plan import exchange as pexch
+from repro.plan.cache import decode_plan_key, precompute_decode_plans
+from repro.sched.cost import decode_combine_ms, decode_step_ms
+from repro.serve import engine
+from repro.serve.scheduler import (DECODE, DONE, IDLE_TOKEN, PREFILL,
+                                   QUEUED, ContinuousScheduler)
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+
+
+# ---------------------------------------------------------------------------
+# compatibility shim
+# ---------------------------------------------------------------------------
+
+def test_serve_lib_shim_reexports_engine():
+    """repro.serve_lib re-exports the promoted engine (the
+    core/condensation.py -> repro.condense discipline): same objects,
+    not copies, so monkeypatching either module sees one function."""
+    for name in serve_lib.__all__:
+        assert getattr(serve_lib, name) is getattr(engine, name), name
+
+
+# ---------------------------------------------------------------------------
+# decode plan templates (zero-planning steady state)
+# ---------------------------------------------------------------------------
+
+def test_decode_plan_key_defaults_to_decode_capacity():
+    """The key's default capacity is the engine's decode_capacity — the
+    single shared derivation; drift would silently miss the cache."""
+    cfg = reduced(get_config("moe-gpt2"), num_layers=2, d_model=64)
+    nl = LuffyConfig(enable_condensation=False, enable_migration=False)
+    dist = single_device()
+    cap = engine.decode_capacity(cfg, dist, 4)
+    assert decode_plan_key(cfg, nl, dist, 4) == \
+        decode_plan_key(cfg, nl, dist, 4, capacity=cap)
+    # the batch is part of the key: different shapes never collide
+    assert decode_plan_key(cfg, nl, dist, 4) != \
+        decode_plan_key(cfg, nl, dist, 8)
+
+
+def test_decode_warm_cache_zero_planning_calls(tmp_path):
+    """Acceptance (ISSUE 8): with a warm decode template, steady-state
+    decode performs ZERO build_exchange_plan calls (every MoE sublayer
+    instantiates the cached template) and its logits are bit-identical
+    to the unplanned decode path."""
+    cfg = dataclasses.replace(
+        reduced(get_config("moe-gpt2"), num_layers=2, d_model=64),
+        compute_dtype="float32")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    dist = single_device()
+    nl = LuffyConfig(enable_condensation=False, enable_migration=False)
+    B, steps = 2, 4
+    r = np.random.default_rng(0)
+    toks = jnp.asarray(r.integers(1, cfg.vocab_size, (B, steps)),
+                       jnp.int32)
+    cache0 = serve_lib.cache_struct(cfg, B, 8, as_struct=False)
+
+    pcache = PlanCache(tmp_path)
+    key = precompute_decode_plans(cfg, nl, dist, B, pcache)
+    assert pcache.get(key) is not None
+
+    base = pexch.BUILD_CALLS
+    cold = jax.jit(lambda p, c, t: serve_lib.decode_step(
+        p, cfg, nl, dist, c, t)).lower(params, cache0, toks[:, :1])
+    # one build per MoE pattern position (the layer scan traces once)
+    assert pexch.BUILD_CALLS - base == 1
+
+    base = pexch.BUILD_CALLS
+    warm = jax.jit(lambda p, c, t: serve_lib.decode_step(
+        p, cfg, nl, dist, c, t, plan_cache=pcache)).lower(
+            params, cache0, toks[:, :1])
+    assert pexch.BUILD_CALLS - base == 0   # zero planning at decode
+    assert pcache.hits >= 1
+
+    fc, fw = cold.compile(), warm.compile()
+    cc = cw = cache0
+    for t in range(steps):
+        lgc, cc = fc(params, cc, toks[:, t:t + 1])
+        lgw, cw = fw(params, cw, toks[:, t:t + 1])
+        np.testing.assert_array_equal(np.asarray(lgc), np.asarray(lgw))
+    assert np.isfinite(np.asarray(lgc)).all()
+
+
+# ---------------------------------------------------------------------------
+# continuous-batching scheduler (virtual clock)
+# ---------------------------------------------------------------------------
+
+def _prompt(*ids):
+    return np.asarray(ids, np.int32)
+
+
+def test_scheduler_fifo_admission_and_slot_churn():
+    s = ContinuousScheduler(2)
+    a = s.submit(_prompt(5), 1, now=0.0)
+    b = s.submit(_prompt(6), 1, now=0.0)
+    c = s.submit(_prompt(7), 1, now=0.0)
+    assert [r.state for r in (a, b, c)] == [QUEUED] * 3
+    adm = s.admit(now=1.0)
+    # FIFO into the free slots; c waits
+    assert [(sl, r.rid) for sl, r in adm] == [(0, a.rid), (1, b.rid)]
+    assert c.state == QUEUED and s.active_slots == 2
+    assert s.slot_churn == 0           # first occupancy is not churn
+    # a finishes (1-token prompt: its first logits produce the single
+    # generated token), slot 0 frees, c recycles it -> churn
+    s.next_feed()
+    s.observe(np.zeros((2, 8), np.float32), now=2.0)
+    assert a.state == DONE and s.slots[0] is None
+    adm = s.admit(now=3.0)
+    assert adm == [(0, c)]
+    assert s.slot_churn == 1
+    assert not s.all_done()
+
+
+def test_scheduler_feed_states_and_slo_accounting():
+    s = ContinuousScheduler(2)
+    req = s.submit(_prompt(3, 4, 5), 2, now=10.0)
+    s.admit(now=10.5)
+    assert req.state == PREFILL
+    lg = np.zeros((2, 8), np.float32)
+    lg[:, 6] = 1.0                     # argmax -> token 6
+    # prompt fed token-by-token; mid-prompt logits are discarded
+    for want in (3, 4, 5):
+        feed = s.next_feed()
+        assert feed.shape == (2, 1) and feed.dtype == np.int32
+        assert feed[0, 0] == want
+        assert feed[1, 0] == IDLE_TOKEN   # empty slot feeds the idle id
+        s.observe(lg, now=11.0 if want == 5 else 10.6)
+    # the last prompt logits produced the first generated token
+    assert req.state == DECODE and req.generated == [6]
+    assert req.first_token_time == 11.0
+    # decode feeds the request's own last token back
+    assert s.next_feed()[0, 0] == 6
+    s.observe(lg, now=12.0)
+    assert req.state == DONE and req.finish_time == 12.0
+    assert s.slots[0] is None          # evicted on finish
+    assert s.all_done()
+    # SLOs: queue 10.0->10.5, ttft 10.0->11.0, tpot (12.0-11.0)/1
+    assert req.queue_ms == pytest.approx(500.0)
+    assert req.ttft_ms == pytest.approx(1000.0)
+    assert req.tpot_ms == pytest.approx(1000.0)
+
+
+def test_scheduler_step_metrics_deltas():
+    s = ContinuousScheduler(1)
+    s.submit(_prompt(2), 1, now=0.0)
+    s.submit(_prompt(3), 1, now=0.0)
+    s.admit(now=0.0)
+    s.next_feed()
+    s.observe(np.zeros((1, 8), np.float32), now=1.0)
+    m1 = s.step_metrics()
+    assert m1["admitted"] == 1.0 and m1["finished"] == 1.0
+    assert m1["generated_tokens"] == 1.0
+    assert m1["queued_requests"] == 1.0 and m1["active_slots"] == 0.0
+    assert "ttft_ms" in m1             # a request finished this step
+    s.admit(now=2.0)
+    m2 = s.step_metrics()              # deltas, not cumulative values
+    assert m2["admitted"] == 1.0 and m2["finished"] == 0.0
+    assert m2["slot_churn"] == 1.0     # recycled the only slot
+    assert "ttft_ms" not in m2         # nothing finished this step
+
+
+# ---------------------------------------------------------------------------
+# decode-step pricing (sched.cost + autotune)
+# ---------------------------------------------------------------------------
+
+def test_decode_cost_pricing():
+    topo = Topology(2, 4)
+    assert decode_combine_ms(8, 256, Topology.flat(1)) == 0.0
+    assert decode_combine_ms(0, 256, topo) == 0.0
+    ms = decode_combine_ms(8, 256, topo)
+    assert ms > 0.0
+    # hier fabric prices the slow inter-node links; a flat fabric of the
+    # same size rides the fast intra links
+    assert ms > decode_combine_ms(8, 256, Topology.flat(8))
+    assert decode_combine_ms(16, 256, topo) > ms    # payload-monotone
+    # overlap hides the shorter leg behind the longer
+    assert decode_step_ms(combine_ms=3.0, shared_ffn_ms=2.0,
+                          overlap=False) == 5.0
+    assert decode_step_ms(combine_ms=3.0, shared_ffn_ms=2.0,
+                          overlap=True) == 3.0
+
+
+def test_autotune_grid_and_decode_pricing():
+    topo = Topology(2, 4)
+    grid = obs_at.candidate_grid(topo)
+    assert grid[0] == obs_at.DEFAULT_KNOBS
+    dec = [k for k in grid if k["exec_mode"] == "decode_overlap"]
+    assert dec                          # the candidate is in the grid
+    # dedup wire stays sync-scope: never paired with decode_overlap
+    assert all(k["hier_dedup"] == "off" for k in dec)
+    kw = dict(topo=topo, tokens=512, top_k=2, d_model=256, d_ff=512,
+              num_layers=4, n_moe=4, n_slots=8, num_experts=8,
+              decode_tokens=8, d_ff_shared=512)
+    sync = obs_at.modeled_step_components(obs_at.DEFAULT_KNOBS, **kw)
+    ovl = obs_at.modeled_step_components(dec[0], **kw)
+    assert sync["decode_ms"] > 0.0
+    assert ovl["decode_ms"] < sync["decode_ms"]   # overlap models faster
+    # on the build/execute path decode_overlap prices exactly like sync
+    assert ovl["exchange_ms"] == sync["exchange_ms"]
+    # train workloads (decode_tokens=0) never see the term
+    kw.update(decode_tokens=0, d_ff_shared=0)
+    assert obs_at.modeled_step_components(dec[0], **kw)["decode_ms"] \
+        == 0.0
+
+
+def test_autotune_picks_decode_overlap_for_decode_heavy_workload():
+    """When the decode term dominates (big shared FFN to hide the
+    combine behind), the search must choose exec_mode=decode_overlap;
+    the winning total is the ledger's modeled decode saving."""
+    topo = Topology(2, 4)
+    tuned = obs_at.autotune_config(
+        topo=topo, tokens=64, top_k=2, d_model=512, d_ff=1024,
+        num_layers=4, n_slots=8, num_experts=8,
+        decode_tokens=64, d_ff_shared=4096)
+    assert tuned.knobs["exec_mode"] == "decode_overlap"
+    assert tuned.modeled_step_ms <= tuned.default_step_ms
+    assert tuned.workload["decode_tokens"] == 64
+
+
+# ---------------------------------------------------------------------------
+# 8-device golden grid (subprocess, like test_plan_cache/test_multidevice)
+# ---------------------------------------------------------------------------
+
+def _run(script_body: str) -> str:
+    script = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import dataclasses
+        import jax, jax.numpy as jnp
+        import numpy as np
+        from repro import serve_lib
+        from repro.comm import Topology, make_mesh
+        from repro.configs import get_config
+        from repro.config import reduced, LuffyConfig
+        from repro.models.model import build_model
+        from repro.dist import DistContext, make_dist
+        from repro.plan import exchange as pexch
+
+        cfg = reduced(get_config("moe-gpt2"), num_layers=2, d_model=64)
+        cfg = dataclasses.replace(
+            cfg, compute_dtype="float32",
+            moe=dataclasses.replace(cfg.moe, num_shared_experts=1))
+        model = build_model(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        mesh = make_mesh((2, 2, 2), ("data", "node", "local"))
+        dist = make_dist(mesh, "decode", 8, moe_arch=True)
+        B = 8
+        toks = jnp.asarray(np.random.default_rng(0).integers(
+            1, cfg.vocab_size, (B, 4)), jnp.int32)
+    """) + textwrap.dedent(script_body)
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    out = subprocess.run([sys.executable, "-c", script], cwd=ROOT,
+                         capture_output=True, text=True, env=env,
+                         timeout=1200)
+    assert out.returncode == 0, out.stderr[-3000:]
+    return out.stdout
+
+
+def test_decode_overlap_bitwise_and_plan_free_8dev():
+    """Acceptance (ISSUE 8), on the 8-device golden grid: the
+    decode_overlap schedule (combine psum issued concurrently with the
+    shared-expert FFN through optimization_barrier) is BITWISE identical
+    to sync — same value graph, same addition order — and the
+    multi-device decode path performs zero build_exchange_plan calls
+    (it is the plan-free all-reduce MoE)."""
+    out = _run("""
+        def chain(exec_mode):
+            luffy = LuffyConfig(enable_condensation=False,
+                                enable_migration=False,
+                                exec_mode=exec_mode)
+            cache = serve_lib.cache_struct(cfg, B, 8, as_struct=False)
+            dec = jax.jit(lambda p, c, t: serve_lib.decode_step(
+                p, cfg, luffy, dist, c, t))
+            base = pexch.BUILD_CALLS
+            lgs = []
+            for t in range(toks.shape[1]):
+                lg, cache = dec(params, cache, toks[:, t:t + 1])
+                lgs.append(np.asarray(lg))
+            assert pexch.BUILD_CALLS - base == 0   # decode is plan-free
+            return np.asarray(lgs)
+
+        sync = chain("sync")
+        ovl = chain("decode_overlap")
+        assert np.isfinite(sync).all()
+        np.testing.assert_array_equal(sync, ovl)
+        print("OK")
+    """)
+    assert "OK" in out
