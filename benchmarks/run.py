@@ -26,6 +26,7 @@ MODULES = [
     "fig_condense_backend",  # beyond-paper: similarity-backend sweep
     "fig_calibration",      # beyond-paper: measured-vs-predicted fit
     "fig_autotune",         # beyond-paper: calibration-driven autotuning
+    "fig_wire_dtype",       # beyond-paper: compressed-exchange wire sweep
     "fig_serve_throughput",  # beyond-paper: continuous batching + overlap
     "roofline",             # deliverable (g)
 ]

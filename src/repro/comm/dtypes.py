@@ -1,0 +1,194 @@
+"""Wire dtypes: the shared dtype-size table and the low-precision wire
+codec (DESIGN.md §14).
+
+Two consumers share this module:
+
+* HLO byte accounting (:mod:`repro.launch.hlo_analysis`,
+  :mod:`repro.launch.dryrun`) — ``DTYPE_BYTES`` maps HLO dtype names to
+  their itemsize; previously each kept a private copy and they drifted
+  (the f8 entries existed in one but not the other's history).
+* The compressed exchange — ``LuffyConfig.wire_dtype`` selects the
+  precision activation rows ship at when they cross a node boundary.
+  Plan-time pricing (:func:`repro.plan.estimate.estimate_exchange`),
+  executed accounting (``MoEAux.inter_bytes_shipped``) and the actual
+  quantize/ship/dequantize all derive from the *same* three functions
+  here (:func:`wire_itemsize` / :func:`wire_row_bytes` /
+  :func:`wire_precision`), so the ledger contract
+  ``bytes == flat / (dedup × precision)`` holds exactly by
+  construction.
+
+Wire formats (compute always stays at the model's compute dtype;
+quantize happens immediately before the node-crossing collective,
+dequantize immediately after):
+
+``"f32"``
+    Identity wire: rows ship at the compute dtype, byte-for-byte the
+    historical behaviour.  Every pre-existing bitwise test pins this.
+``"bf16"``
+    Pure cast.  A cast commutes with permutation collectives, so the
+    executed path is bit-identical to quantize-then-exchange.
+``"f8e4m3"``
+    float8_e4m3fn payload with one f32 scale per ``SCALE_BLOCK``
+    contiguous elements shipped in a sideband array through the same
+    collective.  ``scale = blockmax / F8_MAX`` (1.0 for all-zero
+    blocks) keeps every quantized element inside the e4m3 range.
+    Gated on :func:`have_f8` — never adds a dependency.
+
+Integer route maps and per-sequence metadata never quantize: the dedup
+wire's slot map carries indices whose exact reconstruction the
+round-trip tests pin, and metadata bytes are negligible next to the
+``d_model``-wide activation payload (selective precision, in
+MegaScale-MoE's terms).
+"""
+from __future__ import annotations
+
+import math
+
+# HLO dtype-name → itemsize, used by the HLO collective parsers.  One
+# table so fp8 payloads appearing in traced collectives are counted by
+# every consumer (satellite of ISSUE 9: hlo_analysis and dryrun kept
+# separate copies).
+DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+WIRE_DTYPES = ("f32", "bf16", "f8e4m3")
+
+# fp8 block-scale parameters.  32 elements per scale amortizes the f32
+# sideband to one byte per 8 payload bytes; 448 is the largest finite
+# e4m3fn value, so x/scale lands inside the representable range with
+# the block max mapping exactly onto it.
+SCALE_BLOCK = 32
+F8_MAX = 448.0
+
+
+def have_f8() -> bool:
+    """True when the installed jax/ml_dtypes expose float8_e4m3fn."""
+    try:
+        import jax.numpy as jnp
+        return hasattr(jnp, "float8_e4m3fn")
+    except Exception:        # pragma: no cover - jax always importable here
+        return False
+
+
+def validate_wire_dtype(wire_dtype: str) -> str:
+    """Reject unknown wire dtypes (and f8 on stacks without fp8 support)
+    at plan-build time, before anything is traced."""
+    if wire_dtype not in WIRE_DTYPES:
+        raise ValueError(
+            f"wire_dtype must be one of {WIRE_DTYPES}, got {wire_dtype!r}")
+    if wire_dtype == "f8e4m3" and not have_f8():
+        raise ValueError(
+            "wire_dtype='f8e4m3' requires jax.numpy.float8_e4m3fn, which "
+            "this jax/ml_dtypes stack does not expose")
+    return wire_dtype
+
+
+def wire_itemsize(wire_dtype: str, compute_itemsize: int) -> int:
+    """Bytes per payload element on the wire.  ``f32`` is the identity
+    wire (ship at the compute dtype); a wider wire than compute is never
+    used (bf16 wire on a bf16 model ships 2, not 4)."""
+    if wire_dtype == "f32":
+        return compute_itemsize
+    if wire_dtype == "bf16":
+        return min(2, compute_itemsize)
+    if wire_dtype == "f8e4m3":
+        return 1
+    raise ValueError(f"unknown wire_dtype {wire_dtype!r}")
+
+
+def scale_bytes(d_model: int, wire_dtype: str) -> int:
+    """Bytes of f32 block-scale sideband per shipped row (f8 only)."""
+    if wire_dtype != "f8e4m3":
+        return 0
+    return 4 * math.ceil(d_model / SCALE_BLOCK)
+
+
+def wire_row_bytes(d_model: int, wire_dtype: str,
+                   compute_itemsize: int) -> float:
+    """Bytes one activation row occupies on the node-crossing wire: the
+    ``d_model`` payload at the wire itemsize, the f8 scale sideband, and
+    the 2 side columns (gate weight + slot map share, DESIGN.md §10)
+    which stay at the compute dtype."""
+    return (d_model * wire_itemsize(wire_dtype, compute_itemsize)
+            + scale_bytes(d_model, wire_dtype)
+            + 2 * compute_itemsize)
+
+
+def wire_precision(d_model: int, wire_dtype: str,
+                   compute_itemsize: int) -> float:
+    """Compression factor of the wire: full-precision row bytes over
+    wire row bytes (>= 1.0; exactly 1.0 on the identity wire).  The
+    single definition the modeled estimate, the executed ledger, and
+    the benchmarks all divide by."""
+    full = (d_model + 2) * compute_itemsize
+    return full / wire_row_bytes(d_model, wire_dtype, compute_itemsize)
+
+
+# ---------------------------------------------------------------------------
+# Codec.  jnp is imported lazily so DTYPE_BYTES stays importable from
+# byte-accounting code without touching jax.
+
+def _f8_dtype():
+    import jax.numpy as jnp
+    return jnp.float8_e4m3fn
+
+
+def pad_to_block(d_model: int) -> int:
+    """Payload width after padding to a whole number of scale blocks."""
+    return SCALE_BLOCK * math.ceil(d_model / SCALE_BLOCK)
+
+
+def quantize_rows(x, wire_dtype: str):
+    """Quantize ``[..., d]`` activation rows for the wire.
+
+    Returns ``(q, scales)``:
+
+    * ``f32``    → ``(x, None)`` — identity, same array object.
+    * ``bf16``   → ``(x.astype(bf16), None)``.
+    * ``f8e4m3`` → ``q: [..., d_pad] f8e4m3fn`` (zero-padded to a whole
+      number of ``SCALE_BLOCK`` blocks) and ``scales: [..., d_pad/32]``
+      f32, ``scale = max|block| / F8_MAX`` with all-zero blocks pinned
+      to 1.0 so dequantize is exact on them.
+
+    The formula (f32 accumulate → abs-max per block → guarded divide)
+    is mirrored bit-for-bit by the fused pack kernel in
+    :mod:`repro.kernels.pack`; keep the two in sync.
+    """
+    import jax.numpy as jnp
+    if wire_dtype == "f32":
+        return x, None
+    if wire_dtype == "bf16":
+        return x.astype(jnp.bfloat16), None
+    if wire_dtype != "f8e4m3":
+        raise ValueError(f"unknown wire_dtype {wire_dtype!r}")
+    d = x.shape[-1]
+    d_pad = pad_to_block(d)
+    xf = x.astype(jnp.float32)
+    if d_pad != d:
+        pad = [(0, 0)] * (x.ndim - 1) + [(0, d_pad - d)]
+        xf = jnp.pad(xf, pad)
+    blocks = xf.reshape(*xf.shape[:-1], d_pad // SCALE_BLOCK, SCALE_BLOCK)
+    amax = jnp.max(jnp.abs(blocks), axis=-1)
+    # multiply by the reciprocal, NOT divide: XLA rewrites x/const to
+    # x*(1/const) under jit but not eagerly, and the fused pack kernel
+    # must reproduce these scales bit-for-bit in either mode
+    scales = jnp.where(amax > 0, amax * (1.0 / F8_MAX), 1.0) \
+        .astype(jnp.float32)
+    q = (blocks / scales[..., None]).reshape(*xf.shape[:-1], d_pad)
+    return q.astype(_f8_dtype()), scales
+
+
+def dequantize_rows(q, scales, out_dtype, d_model: int):
+    """Inverse of :func:`quantize_rows`: reconstruct ``[..., d_model]``
+    rows at ``out_dtype``.  ``scales is None`` means a cast wire."""
+    import jax.numpy as jnp
+    if scales is None:
+        return q.astype(out_dtype)
+    d_pad = q.shape[-1]
+    blocks = q.astype(jnp.float32).reshape(
+        *q.shape[:-1], d_pad // SCALE_BLOCK, SCALE_BLOCK)
+    x = (blocks * scales[..., None]).reshape(*q.shape[:-1], d_pad)
+    return x[..., :d_model].astype(out_dtype)

@@ -31,6 +31,18 @@ Scope: the vanilla (non-migrated) sync exchange — migrate-mode combine
 re-addresses rows to new homes, where the (token, node) dedup map does
 not apply; pipelined execution chunks the dense capacity. Both fall back
 to the dense wire (``ExchangePlan.wire`` records the executed format).
+
+**Wire precision (DESIGN.md §14).** Both wires compose with
+``LuffyConfig.wire_dtype``: activation rows are quantized
+(:mod:`repro.comm.dtypes`) immediately before the node-crossing
+collective and dequantized immediately after, so everything downstream
+of the hop — fan-out, reconstruction, expert compute — runs at the
+compute dtype on identical values to a quantize-then-exchange
+reference (casts and per-row block scaling commute with permutation
+collectives). The re-expansion map (``mbuf``) and the combine's int32
+metadata never quantize: exact slot pointers are what make dedup
+reconstruction bit-exact. ``wire_dtype="f32"`` is the identity wire —
+byte-for-byte the historical graphs.
 """
 from __future__ import annotations
 
@@ -39,8 +51,34 @@ from typing import Dict, Tuple
 import jax.numpy as jnp
 
 from repro.comm import CommContext, compat
+from repro.comm import dtypes as wdt
 
 Array = jnp.ndarray
+
+
+def ship_rows(comm_fn, buf: Array, d: int, wire_dtype: str) -> Array:
+    """Move a ``[..., w >= d]`` buffer through a permutation collective
+    with the activation columns (``[..., :d]``) at the wire dtype.
+
+    The collective only permutes rows across devices, so
+    quantize → ship → dequantize is bit-identical to
+    quantize → dequantize → ship (the §14 reference-path law the tests
+    pin). Trailing columns (gate weight / primary flag, 2 of ``w - d``)
+    and the f8 scale sideband ship as separate arrays through the same
+    collective at full precision. ``"f32"`` returns the single-buffer
+    historical path untouched.
+    """
+    if wire_dtype == "f32":
+        return comm_fn(buf)
+    q, sc = wdt.quantize_rows(buf[..., :d], wire_dtype)
+    q = comm_fn(q)
+    if sc is not None:
+        sc = comm_fn(sc)
+    x = wdt.dequantize_rows(q, sc, buf.dtype, d)
+    if buf.shape[-1] == d:
+        return x
+    tail = comm_fn(buf[..., d:])
+    return jnp.concatenate([x, tail], axis=-1)
 
 
 def dedup_capacity(tokens: int, e_local: int, local: int,
@@ -57,7 +95,8 @@ def dedup_capacity(tokens: int, e_local: int, local: int,
 
 
 def dedup_dispatch(xf, expert_idx, gate_w, valid, pos, *,
-                   comm: CommContext, e_local: int, capacity: int
+                   comm: CommContext, e_local: int, capacity: int,
+                   wire_dtype: str = "f32", use_kernel: bool = False
                    ) -> Tuple[Array, Array, Array, Dict]:
     """Ship the deduplicated dispatch payload; reconstruct dense rows.
 
@@ -65,8 +104,17 @@ def dedup_dispatch(xf, expert_idx, gate_w, valid, pos, *,
     pos: [T, k] routing (valid already excludes condensed/dropped rows).
     Returns ``(x_rows [E_local, M, C, d], gw [E_local, M, C],
     rvalid [E_local, M, C] bool, state)`` — ``x_rows`` bit-identical to
-    the dense wire's payload slabs; ``state`` carries the maps
+    the dense wire's payload slabs (at the wire dtype's reconstruction
+    when ``wire_dtype != "f32"``); ``state`` carries the maps
     :func:`dedup_combine` needs plus the shipped-bytes ledger count.
+
+    ``use_kernel`` routes the hot pre-dispatch path — gate-mask →
+    dedup-pack → quantize — through the fused Pallas kernel
+    (:func:`repro.kernels.ops.pack_quantize`) instead of the
+    scatter-then-quantize pure-jnp composition; the two are bit-equal
+    (each unique slot has exactly one contributing token, so gather
+    and scatter-add-onto-zeros produce the same values and the codec
+    formula is shared).
     """
     N = compat.axis_size(comm.node_axis)
     L = compat.axis_size(comm.local_axis)
@@ -88,10 +136,30 @@ def dedup_dispatch(xf, expert_idx, gate_w, valid, pos, *,
     C_u = dedup_capacity(T, e_local, L, C)
     un_safe = jnp.where(headed, urank, 0)
 
-    # unique payload buffer: one row per (token, dest node)
+    # unique payload buffer: one row per (token, dest node), quantized
+    # for the wire. Exactly one token heads each occupied slot, so the
+    # fused gather-form kernel and the scatter-add-onto-zeros build the
+    # same values; empty slots are zero rows (the gate mask) either way.
     n_grid = jnp.broadcast_to(jnp.arange(N)[None, :], (T, N))
-    ubuf = jnp.zeros((N, C_u, d), cdt).at[n_grid, un_safe].add(
-        xf[:, None, :] * headed[..., None].astype(cdt), mode="drop")
+    if use_kernel:
+        from repro.kernels import ops as kops
+        tok_src = jnp.where(
+            headed,
+            jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32)[:, None],
+                             (T, N)), -1)
+        # inverse map: slot -> contributing token (-1 = empty). At most
+        # one token per slot, so scatter-max is deterministic.
+        tok = jnp.full((N, C_u), -1, jnp.int32).at[n_grid, un_safe].max(
+            tok_src, mode="drop")
+        q, sc = kops.pack_quantize(xf, tok.reshape(-1),
+                                   wire_dtype=wire_dtype)
+        q = q.reshape(N, C_u, q.shape[-1])
+        if sc is not None:
+            sc = sc.reshape(N, C_u, sc.shape[-1])
+    else:
+        ubuf = jnp.zeros((N, C_u, d), cdt).at[n_grid, un_safe].add(
+            xf[:, None, :] * headed[..., None].astype(cdt), mode="drop")
+        q, sc = wdt.quantize_rows(ubuf, wire_dtype)
 
     # re-expansion map in the dense dispatch layout: (uslot+1, gate_w)
     u_copy = jnp.take_along_axis(urank, node_of, axis=1)    # [T, k]
@@ -105,10 +173,15 @@ def dedup_dispatch(xf, expert_idx, gate_w, valid, pos, *,
     mbuf = jnp.zeros((E, C, 2), jnp.float32).at[e_safe, p_safe].add(
         mvals * v_f[:, None].astype(jnp.float32), mode="drop")
 
-    # wire: map via the ordinary dense exchange (2 scalars/row), unique
-    # payload inter-node once per (token, node), then cheap-link fan-out
+    # wire: map via the ordinary dense exchange (2 scalars/row, exact —
+    # it carries slot pointers), unique payload inter-node once per
+    # (token, node) at the wire dtype (+ f8 scale sideband), dequantized
+    # right after the node hop so the cheap-link fan-out and everything
+    # downstream sees compute-dtype rows
     mbuf = comm.all_to_all(mbuf)
-    ub1 = comm.node_all_to_all(ubuf)                        # [N_src, C_u, d]
+    q1 = comm.node_all_to_all(q)                            # [N_src, C_u, .]
+    sc1 = None if sc is None else comm.node_all_to_all(sc)
+    ub1 = wdt.dequantize_rows(q1, sc1, cdt, d)              # [N_src, C_u, d]
     ug = comm.local_all_gather(ub1)                         # [L*N, C_u, d]
 
     rmeta = mbuf.reshape(M, e_local, C, 2).transpose(1, 0, 2, 3)
@@ -128,7 +201,8 @@ def dedup_dispatch(xf, expert_idx, gate_w, valid, pos, *,
     return x_rows, gw, rvalid, state
 
 
-def dedup_combine(out_rows, state, *, comm: CommContext) -> Array:
+def dedup_combine(out_rows, state, *, comm: CommContext,
+                  wire_dtype: str = "f32") -> Array:
     """Return gate-weighted expert outputs to their source tokens with
     per-node pre-reduction.
 
@@ -156,7 +230,13 @@ def dedup_combine(out_rows, state, *, comm: CommContext) -> Array:
     comb = comb.reshape(N, L, C_u, d).transpose(1, 0, 2, 3)
     part = comm.local_psum_scatter(comb)                    # [1, N, C_u, d]
     part = part.reshape(N, C_u, d)
-    pback = comm.node_all_to_all(part)                      # [N, C_u, d]
+    # per-node partials cross back at the wire dtype; the intra-node
+    # reduce-scatter above already ran at the compute dtype
+    q, sc = wdt.quantize_rows(part, wire_dtype)
+    q = comm.node_all_to_all(q)
+    if sc is not None:
+        sc = comm.node_all_to_all(sc)
+    pback = wdt.dequantize_rows(q, sc, cdt, d)              # [N, C_u, d]
     n_grid = jnp.broadcast_to(jnp.arange(N)[None, :], (T, N))
     g = pback[n_grid, un_safe] * headed[..., None].astype(cdt)
     return jnp.sum(g, axis=1)                               # node order

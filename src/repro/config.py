@@ -326,6 +326,20 @@ class LuffyConfig:
     # may execute a plan the pure greedy would not re-derive); other
     # objectives replan every sublayer regardless of this setting.
     plan_reuse: str = "off"
+    # Compressed exchange (DESIGN.md §14): precision activation rows
+    # ship at when they cross the node boundary. "f32" is the identity
+    # wire (rows ship at compute_dtype — the historical behavior,
+    # byte-for-byte); "bf16" casts the d_model payload on the wire;
+    # "f8e4m3" ships float8_e4m3fn with per-32-element f32 scales in a
+    # sideband through the same collective (requires fp8 support in the
+    # installed jax — validated at plan build). Decided at plan time
+    # (frozen into ExchangePlan.wire_dtype, part of the plan cache
+    # key), priced by plan/estimate.py, executed by plan/exchange.py +
+    # condense/wire.py immediately around every node-crossing
+    # collective that ships activation rows; integer route maps and
+    # per-sequence metadata never quantize, and compute stays at
+    # compute_dtype throughout.
+    wire_dtype: str = "f32"
 
 
 def resolve_pipeline_chunks(pipeline_chunks: Optional[int],

@@ -37,6 +37,12 @@ def gather_rows(y, rep_idx, **kw):
     return _condense.gather_rows(y, rep_idx, **kw)
 
 
+def pack_quantize(x, tok, **kw):
+    from repro.kernels import pack as _pack
+    kw.setdefault("interpret", _interpret())
+    return _pack.pack_quantize(x, tok, **kw)
+
+
 def flash_attention(q, k, v, **kw):
     from repro.kernels import flash_attn as _fa
     kw.setdefault("interpret", _interpret())

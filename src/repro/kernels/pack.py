@@ -1,0 +1,116 @@
+"""Fused gate-mask → dedup-pack → quantize kernel (DESIGN.md §14).
+
+The dedup wire's hot pre-dispatch path used to be three separate HBM
+round-trips: scatter the unique payload rows into the ``[N, C_u, d]``
+wire buffer (the gate mask folded into the slot map), then a cast pass,
+then (for f8) a block-scale pass. Given the inverse slot→token map
+(``tok``, −1 = empty slot — cheap to build, it is an int scatter with no
+``d``-wide payload), the whole thing is one gather-shaped pass: each
+program packs a block of wire slots by gathering the full-residency
+token table, masks empty slots to zero rows and writes the wire-dtype
+payload — plus the per-``SCALE_BLOCK`` f32 scale sideband for f8e4m3 —
+directly.
+
+Bit-compatibility contract: the gather form equals the historical
+scatter-add-onto-zeros build because every occupied slot has exactly one
+contributing token, and the f8 codec formula (f32 accumulate → per-block
+abs-max → guarded divide) is shared verbatim with
+:func:`repro.comm.dtypes.quantize_rows` — the pure-jnp fallback and
+:func:`repro.kernels.ref.pack_quantize_ref` are bit-for-bit targets,
+not allclose targets.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.comm import dtypes as wdt
+
+DEFAULT_BT = 256
+
+
+def _pack_cast_kernel(idx_ref, src_ref, q_ref):
+    """idx: [bt] int32 slot→token (−1 empty); src: [T, d] (full
+    residency); q: [bt, d] at the wire dtype."""
+    idx = idx_ref[...]
+    rows = src_ref[jnp.maximum(idx, 0)]
+    rows = jnp.where((idx >= 0)[:, None], rows, jnp.zeros_like(rows))
+    q_ref[...] = rows.astype(q_ref.dtype)
+
+
+def _pack_quant_kernel(idx_ref, src_ref, q_ref, sc_ref, *, block: int):
+    """f8 variant: same gather+mask, then per-``block`` scales.
+    src: [T, d_pad] (pre-padded); q: [bt, d_pad] f8; sc: [bt, d_pad/block]
+    f32. Formula mirrors repro.comm.dtypes.quantize_rows exactly."""
+    idx = idx_ref[...]
+    rows = src_ref[jnp.maximum(idx, 0)].astype(jnp.float32)
+    rows = jnp.where((idx >= 0)[:, None], rows, jnp.zeros_like(rows))
+    bt, dp = rows.shape
+    blocks = rows.reshape(bt, dp // block, block)
+    amax = jnp.max(jnp.abs(blocks), axis=-1)
+    # reciprocal multiply, like dtypes.quantize_rows (bitwise contract)
+    scale = jnp.where(amax > 0, amax * (1.0 / wdt.F8_MAX), 1.0) \
+        .astype(jnp.float32)
+    q_ref[...] = (blocks / scale[..., None]).reshape(bt, dp) \
+        .astype(q_ref.dtype)
+    sc_ref[...] = scale
+
+
+def _block_rows(R: int, bt: int) -> int:
+    bt_ = min(bt, R)
+    if R % bt_:
+        bt_ = math.gcd(R, bt_)
+    return bt_
+
+
+@functools.partial(jax.jit, static_argnames=("wire_dtype", "bt",
+                                             "interpret"))
+def pack_quantize(x, tok, *, wire_dtype: str = "f32",
+                  bt: int = DEFAULT_BT, interpret: bool = True):
+    """x: [T, d] source rows; tok: [R] int32 slot→token map (−1 empty).
+    Returns ``(q, scales)``: ``q`` [R, d] at the wire dtype (``[R,
+    d_pad]`` for f8, padded to whole scale blocks), ``scales`` [R,
+    d_pad/32] f32 for f8 else None — exactly
+    :func:`repro.comm.dtypes.quantize_rows` of the packed rows."""
+    T, d = x.shape
+    R = tok.shape[0]
+    bt_ = _block_rows(R, bt)
+    if wire_dtype == "f8e4m3":
+        d_pad = wdt.pad_to_block(d)
+        if d_pad != d:
+            x = jnp.pad(x, ((0, 0), (0, d_pad - d)))
+        nb = d_pad // wdt.SCALE_BLOCK
+        return pl.pallas_call(
+            functools.partial(_pack_quant_kernel, block=wdt.SCALE_BLOCK),
+            grid=(R // bt_,),
+            in_specs=[
+                pl.BlockSpec((bt_,), lambda i: (i,)),
+                pl.BlockSpec((T, d_pad), lambda i: (0, 0)),
+            ],
+            out_specs=[
+                pl.BlockSpec((bt_, d_pad), lambda i: (i, 0)),
+                pl.BlockSpec((bt_, nb), lambda i: (i, 0)),
+            ],
+            out_shape=[
+                jax.ShapeDtypeStruct((R, d_pad), wdt._f8_dtype()),
+                jax.ShapeDtypeStruct((R, nb), jnp.float32),
+            ],
+            interpret=interpret,
+        )(tok, x)
+    out_dt = x.dtype if wire_dtype == "f32" else jnp.bfloat16
+    q = pl.pallas_call(
+        _pack_cast_kernel,
+        grid=(R // bt_,),
+        in_specs=[
+            pl.BlockSpec((bt_,), lambda i: (i,)),
+            pl.BlockSpec((T, d), lambda i: (0, 0)),   # whole source table
+        ],
+        out_specs=pl.BlockSpec((bt_, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((R, d), out_dt),
+        interpret=interpret,
+    )(tok, x)
+    return q, None

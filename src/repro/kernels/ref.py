@@ -31,6 +31,18 @@ def gather_rows_ref(y, rep_idx):
     return jnp.take(y, rep_idx, axis=0)
 
 
+def pack_quantize_ref(x, tok, wire_dtype: str = "f32"):
+    """Oracle for the fused gate-mask → dedup-pack → quantize kernel:
+    gather rows by the slot→token map (−1 = empty → zero row), then the
+    shared wire codec. x: [T, d]; tok: [R] int32. Returns (q, scales)
+    exactly like :func:`repro.kernels.pack.pack_quantize` — a
+    bit-for-bit target, not an allclose one."""
+    from repro.comm import dtypes as wdt
+    rows = jnp.take(x, jnp.maximum(tok, 0), axis=0)
+    rows = jnp.where((tok >= 0)[:, None], rows, jnp.zeros_like(rows))
+    return wdt.quantize_rows(rows, wire_dtype)
+
+
 def flash_attention_ref(q, k, v, *, causal=True, window=None, scale=None):
     """Oracle for the flash kernel: plain masked softmax attention.
     q,k,v: [B,S,H,hd] (kv pre-expanded)."""

@@ -21,10 +21,8 @@ from pathlib import Path
 
 ARTIFACTS = Path(__file__).resolve().parents[3] / "artifacts" / "dryrun"
 
-_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1,
-                "f8e5m2": 1, "s64": 8, "u64": 8, "s32": 4, "u32": 4,
-                "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1, "c64": 8,
-                "c128": 16}
+# shared with hlo_analysis (ISSUE 9) — the two copies used to drift
+from repro.comm.dtypes import DTYPE_BYTES as _DTYPE_BYTES
 
 _COLLECTIVES = ("all-to-all", "all-gather", "all-reduce", "reduce-scatter",
                 "collective-permute")
@@ -93,6 +91,7 @@ def comm_traffic_ledger(cfg, shape, mesh, *, nodes: int = 0,
                         similarity_backend: str = "exact",
                         lsh_bits: int = 8, condense_reuse: str = "off",
                         hier_dedup: str = "off",
+                        wire_dtype: str = "f32",
                         condense_group: int = 128,
                         calibration=None,
                         autotune_applied: bool = False):
@@ -169,7 +168,8 @@ def comm_traffic_ledger(cfg, shape, mesh, *, nodes: int = 0,
             chunks = None
         est = estimate_exchange(tokens, k, cfg.d_model, topo=topo,
                                 r_cond=r, num_layers=cfg.num_layers,
-                                ffn_ms=ffn_ms, chunks=chunks, **est_kw)
+                                ffn_ms=ffn_ms, chunks=chunks,
+                                wire_dtype=wire_dtype, **est_kw)
         out["buckets"][str(r)] = {
             "flat": {"intra_bytes": est.flat_intra_dispatch_bytes,
                      "inter_bytes": est.flat_inter_dispatch_bytes,
@@ -182,6 +182,21 @@ def comm_traffic_ledger(cfg, shape, mesh, *, nodes: int = 0,
                         "chunks": est.chunks,
                         "speedup": est.speedup},
         }
+
+    # ---- wire precision ledger (DESIGN.md §14) ---------------------------
+    # The bucket byte/time fields above are already priced at this wire
+    # dtype (estimate_exchange scales bytes_per_el by 1/wire_precision);
+    # this section records the dtype and the exact per-row arithmetic so
+    # a reader can undo or cross-check the scaling. bytes_per_el 4
+    # matches estimate_exchange's default compute itemsize.
+    from repro.comm import dtypes as wire_dtypes
+    out["wire"] = {
+        "dtype": wire_dtype,
+        "precision": wire_dtypes.wire_precision(cfg.d_model, wire_dtype, 4),
+        "row_bytes": wire_dtypes.wire_row_bytes(cfg.d_model, wire_dtype, 4),
+        "row_bytes_f32": (cfg.d_model + 2) * 4,
+        "scale_block": wire_dtypes.SCALE_BLOCK,
+    }
 
     # ---- plan-reuse ledger (DESIGN.md §9) --------------------------------
     # Modeled under stable routing (the regime reuse exists for): with
@@ -332,7 +347,8 @@ def run_pair(arch: str, shape_name: str, multi_pod: bool,
              pipeline_chunks: int = None, plan_objective: str = None,
              plan_reuse: str = "off", similarity_backend: str = None,
              lsh_bits: int = None, condense_reuse: str = "off",
-             hier_dedup: str = None, calibration_path: str = "",
+             hier_dedup: str = None, wire_dtype: str = None,
+             calibration_path: str = "",
              autotune_dir: str = "", autotune_force: bool = False):
     import jax
     import jax.numpy as jnp
@@ -365,7 +381,8 @@ def run_pair(arch: str, shape_name: str, multi_pod: bool,
     cli = {"exec_mode": exec_mode, "pipeline_chunks": pipeline_chunks,
            "plan_objective": plan_objective,
            "similarity_backend": similarity_backend,
-           "lsh_bits": lsh_bits, "hier_dedup": hier_dedup}
+           "lsh_bits": lsh_bits, "hier_dedup": hier_dedup,
+           "wire_dtype": wire_dtype}
     explicit = {k for k, v in cli.items() if v is not None}
     comm_mode = "hier" if nodes > 1 else "flat"
     tuned = None
@@ -407,6 +424,7 @@ def run_pair(arch: str, shape_name: str, multi_pod: bool,
     similarity_backend = knobs["similarity_backend"]
     lsh_bits = knobs["lsh_bits"]
     hier_dedup = knobs["hier_dedup"]
+    wire_dtype = knobs["wire_dtype"]
 
     from repro.models.model import build_model
     mesh_tag = "x".join(str(d) for d in mesh.devices.shape)
@@ -444,7 +462,8 @@ def run_pair(arch: str, shape_name: str, multi_pod: bool,
         exec_mode=exec_mode, pipeline_chunks=pipeline_chunks,
         plan_objective=plan_objective, plan_reuse=plan_reuse,
         similarity_backend=similarity_backend, lsh_bits=lsh_bits,
-        condense_reuse=condense_reuse, hier_dedup=hier_dedup)
+        condense_reuse=condense_reuse, hier_dedup=hier_dedup,
+        wire_dtype=wire_dtype)
 
     if shape.mode == "train":
         # 100B+ models: full f32 Adam moments cannot fit 16GB/chip even at
@@ -579,6 +598,7 @@ def run_pair(arch: str, shape_name: str, multi_pod: bool,
                          else 0), plan_reuse=plan_reuse,
             similarity_backend=similarity_backend, lsh_bits=lsh_bits,
             condense_reuse=condense_reuse, hier_dedup=hier_dedup,
+            wire_dtype=wire_dtype,
             condense_group=luffy.condense_group,
             calibration=calibration,
             autotune_applied=tuned is not None)
@@ -708,6 +728,12 @@ def main():
                     help="deduplicated hier wire format "
                          "(repro.condense.wire; needs --nodes > 1; "
                          "default off)")
+    ap.add_argument("--wire-dtype", default=None,
+                    choices=["f32", "bf16", "f8e4m3"],
+                    help="precision activation rows ship at on node-"
+                         "crossing exchange hops (DESIGN.md §14); the "
+                         "comm_ledger's wire section and bucket bytes "
+                         "are priced at it (default f32)")
     ap.add_argument("--autotune", default="",
                     help="TunedConfig artifact dir (repro.obs.autotune): "
                          "fill every knob the CLI left unset from the "
@@ -752,6 +778,8 @@ def main():
         mesh_tag += f"__creuse-{args.condense_reuse}"
     if args.hier_dedup == "on":
         mesh_tag += "__dedup"
+    if args.wire_dtype not in (None, "f32"):
+        mesh_tag += f"__wd-{args.wire_dtype}"
     if args.autotune:
         mesh_tag += "__autotuned"
     out = Path(args.out) if args.out else \
@@ -769,6 +797,7 @@ def main():
                        lsh_bits=args.lsh_bits,
                        condense_reuse=args.condense_reuse,
                        hier_dedup=args.hier_dedup,
+                       wire_dtype=args.wire_dtype,
                        calibration_path=args.calibration,
                        autotune_dir=args.autotune,
                        autotune_force=args.autotune_force)

@@ -18,10 +18,9 @@ from __future__ import annotations
 import re
 from typing import Dict, List, Optional, Tuple
 
-_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8,
-                "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
-                "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
-                "f8e4m3fn": 1, "f8e5m2": 1}
+# One dtype-size table for every HLO byte accounter (ISSUE 9): dryrun
+# and this module used to keep drifting private copies.
+from repro.comm.dtypes import DTYPE_BYTES as _DTYPE_BYTES
 
 _COLLECTIVES = ("all-to-all", "all-gather", "all-reduce",
                 "reduce-scatter", "collective-permute")

@@ -191,6 +191,13 @@ def main():
                     help="signed random projections per LSH bucket code "
                          "(default 8; parity flag, see "
                          "--similarity-backend)")
+    ap.add_argument("--wire-dtype", default=None,
+                    choices=["f32", "bf16", "f8e4m3"],
+                    help="precision activation rows ship at on node-"
+                         "crossing exchange hops (DESIGN.md §14): "
+                         "identity wire, bf16 cast, or f8e4m3 with "
+                         "per-32-element f32 scales; part of the plan "
+                         "cache key (default f32)")
     ap.add_argument("--condense-reuse", default="off",
                     choices=["off", "signature", "always"],
                     help="cross-layer condense-plan reuse (DESIGN.md "
@@ -249,7 +256,8 @@ def main():
     from repro.config import resolve_pipeline_chunks
     from repro.obs import autotune as obs_at
     serve_knobs = ("exec_mode", "pipeline_chunks", "plan_objective",
-                   "hier_dedup", "similarity_backend", "lsh_bits")
+                   "hier_dedup", "similarity_backend", "lsh_bits",
+                   "wire_dtype")
     explicit = {k for k in serve_knobs
                 if getattr(args, k) is not None}
     tuned = None
@@ -293,7 +301,8 @@ def main():
                         similarity_backend=knobs["similarity_backend"],
                         lsh_bits=knobs["lsh_bits"],
                         condense_reuse=args.condense_reuse,
-                        hier_dedup=knobs["hier_dedup"])
+                        hier_dedup=knobs["hier_dedup"],
+                        wire_dtype=knobs["wire_dtype"])
     print(f"exec_mode={luffy.exec_mode} chunks={pipeline_chunks} "
           f"plan_objective={luffy.plan_objective} "
           f"similarity_backend={luffy.similarity_backend} "

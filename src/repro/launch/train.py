@@ -96,6 +96,14 @@ def main():
                     help="ship the per-node-deduplicated hier payload "
                          "(repro.condense.wire; needs --comm-mode hier, "
                          "vanilla sync exchange; default off)")
+    ap.add_argument("--wire-dtype", default=None,
+                    choices=["f32", "bf16", "f8e4m3"],
+                    help="precision activation rows ship at when they "
+                         "cross a node boundary (DESIGN.md §14): "
+                         "identity wire, bf16 cast, or f8e4m3 with "
+                         "per-32-element f32 scales. Frozen into the "
+                         "exchange plan; compute stays at the compute "
+                         "dtype (default f32)")
     ap.add_argument("--no-condensation", action="store_true")
     ap.add_argument("--no-migration", action="store_true")
     ap.add_argument("--optimizer", default="adamw")
@@ -266,7 +274,8 @@ def main():
         lsh_bits=knobs["lsh_bits"],
         condense_reuse=args.condense_reuse,
         condense_reuse_max_age=args.condense_max_age,
-        hier_dedup=knobs["hier_dedup"])
+        hier_dedup=knobs["hier_dedup"],
+        wire_dtype=knobs["wire_dtype"])
     if calib is not None:
         luffy = calib.apply(luffy)
     ocfg = OptimConfig(name=args.optimizer, lr=args.lr,

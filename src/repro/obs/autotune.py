@@ -53,25 +53,29 @@ import json
 from pathlib import Path
 from typing import Any, Dict, List, Mapping, Optional, Sequence, Tuple
 
+from repro.comm import dtypes as wire_dtypes
 from repro.comm.topology import Topology
 from repro.obs.calibrate import Calibration, calibration_key
 from repro.sched import cost as sched_cost
 
 TUNED_MAGIC = "repro-tuned-config"
-TUNED_SCHEMA_VERSION = 1
+# v2 (ISSUE 9): the knob set gained "wire_dtype" (the compressed
+# exchange, DESIGN.md §14). v1 artifacts miss (schema drift) and the
+# search reruns — the standard Calibration miss discipline.
+TUNED_SCHEMA_VERSION = 2
 
 # The LuffyConfig fields the tuner may set (and the launchers guard
 # with explicit-flag precedence).
 TUNABLE_KNOBS = ("comm_mode", "hier_dedup", "exec_mode",
                  "pipeline_chunks", "plan_objective",
-                 "similarity_backend", "lsh_bits")
+                 "similarity_backend", "lsh_bits", "wire_dtype")
 
 # The repo defaults, in one place: always the FIRST grid candidate, so
 # ties resolve to them and `default_step_ms` is always priced.
 DEFAULT_KNOBS: Dict[str, Any] = {
     "comm_mode": "flat", "hier_dedup": "off", "exec_mode": "sync",
     "pipeline_chunks": 4, "plan_objective": "traffic",
-    "similarity_backend": "exact", "lsh_bits": 8,
+    "similarity_backend": "exact", "lsh_bits": 8, "wire_dtype": "f32",
 }
 
 # TPU v5e-class bf16 peak (launch.mesh.PEAK_FLOPS_BF16); the default
@@ -205,16 +209,23 @@ def candidate_grid(topo: Topology, *,
     # (decode_tokens > 0 with shared experts)
     execs += [("decode_overlap", "traffic", 4)]
     sims = [("exact", 8)] + [("lsh", int(b)) for b in lsh_bits_options]
+    # wire precision (DESIGN.md §14): f32 first so ties resolve to the
+    # identity wire; f8 only offered on stacks that expose the dtype
+    wds = ["f32", "bf16"]
+    if wire_dtypes.have_f8():
+        wds.append("f8e4m3")
     out: List[Dict[str, Any]] = []
     for cm, hd in wire:
         for em, obj, nc in execs:
             if hd == "on" and em != "sync":
                 continue                            # dedup wire is sync-scope
-            for sb, bits in sims:
-                out.append({"comm_mode": cm, "hier_dedup": hd,
-                            "exec_mode": em, "plan_objective": obj,
-                            "pipeline_chunks": nc,
-                            "similarity_backend": sb, "lsh_bits": bits})
+            for wd in wds:
+                for sb, bits in sims:
+                    out.append({"comm_mode": cm, "hier_dedup": hd,
+                                "exec_mode": em, "plan_objective": obj,
+                                "pipeline_chunks": nc,
+                                "similarity_backend": sb, "lsh_bits": bits,
+                                "wire_dtype": wd})
     assert out[0] == DEFAULT_KNOBS
     return out
 
@@ -268,7 +279,9 @@ def modeled_step_components(knobs: Mapping[str, Any], *,
     est = estimate_exchange(tokens, top_k, d_model, topo=topo,
                             r_cond=r_cond, num_layers=num_layers,
                             ffn_ms=ffn_ms, chunks=1,
-                            chunk_overhead_ms=overhead, **est_kw)
+                            chunk_overhead_ms=overhead,
+                            wire_dtype=knobs.get("wire_dtype", "f32"),
+                            **est_kw)
     dedup_wire = (knobs["comm_mode"] == "hier"
                   and knobs["hier_dedup"] == "on")
     d_ms = est.dispatch_ms if dedup_wire else est.flat_dispatch_ms

@@ -35,7 +35,9 @@ METRICS_SCHEMA_VERSION = 1
 # ``schema_version`` field itself; v3 adds the ``autotune`` section
 # (chosen config + modeled savings vs defaults); v4 adds the ``decode``
 # section (combine/shared-FFN pricing + the decode_overlap speedup).
-COMM_LEDGER_SCHEMA_VERSION = 4
+# v5 adds the ``wire`` section (wire_dtype precision arithmetic,
+# DESIGN.md §14) and prices the bucket bytes at the run's wire dtype.
+COMM_LEDGER_SCHEMA_VERSION = 5
 
 
 class MetricSpec(NamedTuple):

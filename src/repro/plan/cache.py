@@ -55,7 +55,8 @@ def plan_key(*, n_seq: int, seq_len: int, d_model: int, capacity: int,
              gpu_speed: float = 1.0e13, d_ff: int = 0,
              hier_dedup: str = "off",
              params_version: str = "0",
-             chunk_overhead_ms: float = -1.0) -> str:
+             chunk_overhead_ms: float = -1.0,
+             wire_dtype: str = "f32") -> str:
     """The cache key: batch shape × seq len × objective × topology
     fingerprint, plus every knob that selects the static schedule
     (``gpu_speed``/``d_ff`` price the FFN stage the chunk search
@@ -74,11 +75,16 @@ def plan_key(*, n_seq: int, seq_len: int, d_model: int, capacity: int,
     # estimate, so it is part of the key; the unset default (<= 0) adds
     # nothing, keeping historical keys (and spilled caches) valid.
     o_part = f"_o{chunk_overhead_ms:.3g}" if chunk_overhead_ms > 0 else ""
+    # The wire precision is frozen into the plan (estimate + executed
+    # quantization, DESIGN.md §14) — a dtype change must be a cache
+    # MISS. The f32 default adds nothing so historical keys stay valid.
+    wd_part = f"_wd{wire_dtype}" if wire_dtype != "f32" else ""
     return (f"b{n_seq}_s{seq_len}_d{d_model}_f{d_ff}_c{capacity}"
             f"_k{top_k}_e{num_experts}_{mode}_{objective}"
             f"_{exec_mode}{pipeline_chunks}_p{gpu_speed:.4g}"
             f"_{comm_mode}_{topology_fingerprint(topo, M)}"
-            f"_{compute_dtype}_w{hier_dedup}_pv{params_version}{o_part}")
+            f"_{compute_dtype}_w{hier_dedup}_pv{params_version}"
+            f"{o_part}{wd_part}")
 
 
 class PlanCache:
@@ -179,9 +185,12 @@ def build_plan_template(cfg: ModelConfig, luffy: LuffyConfig, *,
     T = n_seq * seq_len
     from repro.condense.plan import CondensePlan
     from repro.models.blocks import _dtype
+    from repro.comm import dtypes as wire_dtypes
     bytes_per_el = jnp.dtype(_dtype(cfg.compute_dtype)).itemsize
+    wire_dtype = wire_dtypes.validate_wire_dtype(luffy.wire_dtype)
     pipelined, chunks, est = plan_static_schedule(
-        cfg, luffy, topo, M, T, d, capacity, bytes_per_el=bytes_per_el)
+        cfg, luffy, topo, M, T, d, capacity, bytes_per_el=bytes_per_el,
+        wire_dtype=wire_dtype)
     # wire decision — same rule as build_exchange_plan (DESIGN.md §10)
     wire = ("dedup" if (luffy.hier_dedup == "on" and comm_mode == "hier"
                         and not pipelined and M > 1) else "dense")
@@ -193,7 +202,7 @@ def build_plan_template(cfg: ModelConfig, luffy: LuffyConfig, *,
         comm=CommContext(comm_mode, tuple(axes), topo),
         objective=luffy.plan_objective, group_size=luffy.condense_group,
         combine_slack=luffy.combine_slack, use_kernel=luffy.use_kernels,
-        wire=wire, estimate=est,
+        wire=wire, wire_dtype=wire_dtype, estimate=est,
         # placeholder routing — instantiate_plan never reads these
         expert_idx=zi.reshape(0, 1), gate_weights=zi.astype(np.float32)
         .reshape(0, 1), positions=zi.reshape(0, 1),
@@ -241,7 +250,8 @@ def prefill_plan_key(cfg: ModelConfig, luffy: LuffyConfig, dist,
         topo=topo if M > 1 else None, M=M,
         compute_dtype=cfg.compute_dtype, gpu_speed=luffy.gpu_speed,
         d_ff=cfg.moe.d_ff, hier_dedup=luffy.hier_dedup,
-        chunk_overhead_ms=luffy.chunk_overhead_ms)
+        chunk_overhead_ms=luffy.chunk_overhead_ms,
+        wire_dtype=luffy.wire_dtype)
 
 
 def precompute_prefill_plans(cfg: ModelConfig, luffy: LuffyConfig, dist,
@@ -304,7 +314,8 @@ def decode_plan_key(cfg: ModelConfig, luffy: LuffyConfig, dist,
         topo=topo if M > 1 else None, M=M,
         compute_dtype=cfg.compute_dtype, gpu_speed=luffy.gpu_speed,
         d_ff=cfg.moe.d_ff, hier_dedup=luffy.hier_dedup,
-        chunk_overhead_ms=luffy.chunk_overhead_ms)
+        chunk_overhead_ms=luffy.chunk_overhead_ms,
+        wire_dtype=luffy.wire_dtype)
 
 
 def build_decode_template(cfg: ModelConfig, luffy: LuffyConfig, *,

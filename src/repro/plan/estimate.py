@@ -15,6 +15,7 @@ from __future__ import annotations
 
 from typing import NamedTuple, Optional
 
+from repro.comm import dtypes as wire
 from repro.comm import ledger as comm_ledger
 from repro.comm.topology import Topology
 from repro.sched import cost as sched_cost
@@ -56,7 +57,8 @@ def estimate_exchange(tokens: int, top_k: int, d_model: int, *,
                       intra_bw: Optional[float] = None,
                       inter_bw: Optional[float] = None,
                       chunk_overhead_ms: float =
-                      sched_cost.DEFAULT_CHUNK_OVERHEAD_MS) -> PlanEstimate:
+                      sched_cost.DEFAULT_CHUNK_OVERHEAD_MS,
+                      wire_dtype: str = "f32") -> PlanEstimate:
     """Price one exchange of ``tokens`` × ``top_k`` dispatch rows.
 
     ``r_cond`` removes condensed tokens before dispatch; ``locality``
@@ -67,13 +69,21 @@ def estimate_exchange(tokens: int, top_k: int, d_model: int, *,
     otherwise the given (executor-clipped) chunk count is priced.
     ``intra_bw``/``inter_bw`` override the topology's link bandwidths —
     commsim passes its *calibrated* effective bandwidth here.
+    ``wire_dtype`` prices the compressed wire (DESIGN.md §14) by
+    scaling the effective bytes-per-element by the exact per-row
+    compression factor :func:`repro.comm.dtypes.wire_precision`, so
+    every byte field here — and everything downstream that reads them
+    (dryrun ledger, commsim, objectives, autotune) — shrinks by
+    exactly ``1/precision`` without any second pricing source.
     """
+    wire_bpe = bytes_per_el / wire.wire_precision(d_model, wire_dtype,
+                                                  bytes_per_el)
     fi, fe = comm_ledger.dispatch_bytes(
         tokens, top_k, d_model, topo=topo, r_cond=r_cond,
-        bytes_per_el=bytes_per_el, num_layers=num_layers, dedup=False)
+        bytes_per_el=wire_bpe, num_layers=num_layers, dedup=False)
     hi, he = comm_ledger.dispatch_bytes(
         tokens, top_k, d_model, topo=topo, r_cond=r_cond,
-        bytes_per_el=bytes_per_el, num_layers=num_layers, dedup=True)
+        bytes_per_el=wire_bpe, num_layers=num_layers, dedup=True)
     ci, ce = hi * (1.0 - locality), he * (1.0 - locality)
     bw_i = intra_bw if intra_bw is not None else topo.intra_bw
     bw_e = inter_bw if inter_bw is not None else topo.inter_bw

@@ -38,6 +38,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.comm import CommContext
+from repro.comm import dtypes as wdt
 from repro.comm import ledger as comm_ledger
 from repro.condense import plan as cplan
 from repro.condense import wire as cwire
@@ -189,6 +190,8 @@ class ExchangePlan(NamedTuple):
     combine_slack: float          # migrate-mode combine buffer slack
     use_kernel: bool
     wire: str                     # "dense" | "dedup" (repro.condense.wire)
+    wire_dtype: str               # "f32" | "bf16" | "f8e4m3" — precision
+                                  # rows ship at across nodes (DESIGN §14)
     estimate: Optional[PlanEstimate]
     # -- routing (traced) ---------------------------------------------------
     expert_idx: Array             # [T, k] global expert ids
@@ -245,7 +248,8 @@ class ExchangeAux(NamedTuple):
 # ---------------------------------------------------------------------------
 
 def plan_static_schedule(cfg: ModelConfig, luffy: LuffyConfig, topo, M: int,
-                         T: int, d: int, capacity: int, bytes_per_el: int
+                         T: int, d: int, capacity: int, bytes_per_el: int,
+                         wire_dtype: str = "f32"
                          ) -> Tuple[bool, ChunkPlan, Optional[PlanEstimate]]:
     """All shape-keyed (token-independent) schedule decisions of one
     exchange: pipelined?, the :class:`ChunkPlan`, and the analytic
@@ -284,7 +288,8 @@ def plan_static_schedule(cfg: ModelConfig, luffy: LuffyConfig, topo, M: int,
             req = estimate_exchange(T, m.top_k, d, topo=topo,
                                     bytes_per_el=bytes_per_el,
                                     ffn_ms=ffn_ms, chunks=None,
-                                    chunk_overhead_ms=o_ms).chunks
+                                    chunk_overhead_ms=o_ms,
+                                    wire_dtype=wire_dtype).chunks
         else:
             req = DEFAULT_PIPELINE_CHUNKS   # nothing to price against
     chunks = plan_chunks(capacity, req)
@@ -293,7 +298,8 @@ def plan_static_schedule(cfg: ModelConfig, luffy: LuffyConfig, topo, M: int,
         est = estimate_exchange(T, m.top_k, d, topo=topo,
                                 bytes_per_el=bytes_per_el, ffn_ms=ffn_ms,
                                 chunks=chunks.n_chunks,
-                                chunk_overhead_ms=o_ms)
+                                chunk_overhead_ms=o_ms,
+                                wire_dtype=wire_dtype)
     return pipelined, chunks, est
 
 
@@ -378,9 +384,10 @@ def build_exchange_plan(gate: GateOutput, xn: Array, cfg: ModelConfig,
     from repro.models.blocks import _dtype
     cdt = _dtype(cfg.compute_dtype)
     topo = comm.topology
+    wire_dtype = wdt.validate_wire_dtype(luffy.wire_dtype)
     pipelined, chunks, est = plan_static_schedule(
         cfg, luffy, topo, M, T, d, C,
-        bytes_per_el=jnp.dtype(cdt).itemsize)
+        bytes_per_el=jnp.dtype(cdt).itemsize, wire_dtype=wire_dtype)
 
     # ---- inter-node traffic ledger (DESIGN.md §5) ------------------------
     if topo is not None and topo.hierarchical and M > 1:
@@ -506,7 +513,7 @@ def build_exchange_plan(gate: GateOutput, xn: Array, cfg: ModelConfig,
         pipelined=pipelined, capacity=C, chunks=chunks, comm=comm,
         objective=luffy.plan_objective, group_size=group_size,
         combine_slack=combine_slack, use_kernel=use_kernel, wire=wire,
-        estimate=est,
+        wire_dtype=wire_dtype, estimate=est,
         expert_idx=expert_idx, gate_weights=gate_w, positions=pos,
         valid=valid, aux_loss=gate.aux_loss, dispatch_drop=d_drop,
         condense_plan=cp,
@@ -628,13 +635,14 @@ def execute_plan(params, x: Array, sideband: Dict[str, Array],
         return y_out, ExchangeAux(sideband=new_sideband, s_next=s_next,
                                   moe=aux, cond_carry=cond_carry)
 
-    # ---- deduplicated hier wire (DESIGN.md §10) --------------------------
+    # ---- deduplicated hier wire (DESIGN.md §10, §14) ---------------------
     if plan.wire == "dedup":
         assert not migrate and not plan.pipelined, (plan.mode, plan.wire)
         with obs_trace.phase("dispatch") as _sp:
             x_rows, gw_rows, rvalid, wstate = cwire.dedup_dispatch(
                 xf.astype(cdt), expert_idx, gate_w, valid, pos,
-                comm=comm, e_local=E_local, capacity=C)
+                comm=comm, e_local=E_local, capacity=C,
+                wire_dtype=plan.wire_dtype, use_kernel=use_kernel)
             x_rows = _sp.fence(x_rows)
         with obs_trace.phase("expert_ffn") as _sp:
             h = _rms(x_rows, params["norm"]["scale"]).astype(cdt)
@@ -645,13 +653,19 @@ def execute_plan(params, x: Array, sideband: Dict[str, Array],
             y_rows = _sp.fence(y_rows)
         with obs_trace.phase("combine") as _sp:
             delta = cwire.dedup_combine(y_rows * gw_rows[..., None],
-                                        wstate, comm=comm)
+                                        wstate, comm=comm,
+                                        wire_dtype=plan.wire_dtype)
             y_tok = xf + delta.astype(xf.dtype)
             y_tok = _sp.fence(y_tok)
-        row_bytes = float((d + 2) * jnp.dtype(cdt).itemsize)
+        # executed wire accounting: unique rows × the wire row bytes —
+        # the same wire_row_bytes the estimate divides by, so
+        # shipped == inter_bytes_dedup / precision == flat / (dedup ×
+        # precision) exactly (the §14 ledger contract)
+        row_bytes = wdt.wire_row_bytes(d, plan.wire_dtype,
+                                       jnp.dtype(cdt).itemsize)
         return _finish(y_tok, dict(sideband), s_next,
                        jnp.float32(0.0), jnp.float32(1.0 / M),
-                       wstate["shipped_rows"] * row_bytes)
+                       wstate["shipped_rows"] * jnp.float32(row_bytes))
 
     # ---- build dispatch buffers ------------------------------------------
     # payload row: [x_raw(d), gate_w, is_primary]; meta: (dest_slot+1, pos)
@@ -714,8 +728,9 @@ def execute_plan(params, x: Array, sideband: Dict[str, Array],
             # dead collective on the pipelined critical path (the barrier
             # keeps payloads live, so XLA could not DCE it there)
             o, s = cplan.offsets[k], cplan.sizes[k]
-            bk = comm.all_to_all(jax.lax.slice_in_dim(buf, o, o + s,
-                                                      axis=1))
+            bk = cwire.ship_rows(comm.all_to_all,
+                                 jax.lax.slice_in_dim(buf, o, o + s, axis=1),
+                                 d, plan.wire_dtype)
             if not migrate:
                 return bk
             return bk, comm.all_to_all(jax.lax.slice_in_dim(mbuf, o, o + s,
@@ -736,7 +751,8 @@ def execute_plan(params, x: Array, sideband: Dict[str, Array],
                     out_k = res[0]             # [E_local, M, Ck, d]
                     back_k = out_k.transpose(1, 0, 2, 3) \
                                   .reshape(E, out_k.shape[2], d)
-                    return comm.combine(back_k)
+                    return cwire.ship_rows(comm.combine, back_k, d,
+                                           plan.wire_dtype)
 
                 _, backs = run_pipeline(cplan.n_chunks, dispatch=_disp,
                                         compute=_compute, combine=_comb)
@@ -756,7 +772,10 @@ def execute_plan(params, x: Array, sideband: Dict[str, Array],
     else:
         with obs_trace.phase("dispatch") as _sp:
             if M > 1:
-                buf = comm.all_to_all(buf)
+                # activation columns ship at the wire dtype; the int32
+                # meta buffer (slot map) never quantizes (DESIGN.md §14)
+                buf = cwire.ship_rows(comm.all_to_all, buf, d,
+                                      plan.wire_dtype)
                 mbuf = comm.all_to_all(mbuf)
             # [M_src * E_local, C, .] -> [E_local, M_src, C, .]
             rows4 = buf.reshape(M, E_local, C, d + 2).transpose(1, 0, 2, 3)
@@ -773,7 +792,8 @@ def execute_plan(params, x: Array, sideband: Dict[str, Array],
                 back = out_rows.reshape(E_local, M, C, d) \
                                .transpose(1, 0, 2, 3).reshape(E, C, d)
                 if M > 1:
-                    back = comm.combine(back)
+                    back = cwire.ship_rows(comm.combine, back, d,
+                                           plan.wire_dtype)
                 back = _sp.fence(back)
 
     # ---- combine ----------------------------------------------------------
@@ -817,7 +837,7 @@ def execute_plan(params, x: Array, sideband: Dict[str, Array],
             jnp.stack([jnp.where(keep_c, dslot % n_seq + 1, 0),
                        jnp.where(keep_c, rpos, 0)], -1), mode="drop")
         if M > 1:
-            cbuf = comm.combine(cbuf)
+            cbuf = cwire.ship_rows(comm.combine, cbuf, d, plan.wire_dtype)
             cmeta = comm.combine(cmeta)
         rs = cbuf.reshape(M * C_comb, d)
         rslot = cmeta[..., 0].reshape(-1) - 1
@@ -899,7 +919,8 @@ def instantiate_plan(template: ExchangePlan, gate: GateOutput, xn: Array,
         comm=comm, objective=template.objective,
         group_size=template.group_size,
         combine_slack=template.combine_slack, use_kernel=use_kernel,
-        wire=template.wire, estimate=template.estimate,
+        wire=template.wire, wire_dtype=template.wire_dtype,
+        estimate=template.estimate,
         expert_idx=expert_idx, gate_weights=gate_w, positions=pos,
         valid=valid, aux_loss=gate.aux_loss, dispatch_drop=d_drop,
         condense_plan=identity_condense_plan(

@@ -28,6 +28,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.comm import CommContext
+from repro.comm import dtypes as wire_dtypes
 from repro.comm.topology import Topology
 from repro.condense.plan import CondensePlan, CondenseSignature
 from repro.plan.estimate import PlanEstimate
@@ -40,7 +41,12 @@ MAGIC = b"LFPL"
 # "condense_backend" and "params_version" (router/optimizer-step
 # fingerprint — a cached migrate-mode plan is never trusted across a
 # router update). v1 blobs raise PlanFormatError and are rebuilt.
-FORMAT_VERSION = 2
+# v3 (ISSUE 9): the header gained "wire_dtype" (the compressed-exchange
+# precision frozen into the plan, DESIGN.md §14) and "wire_scale_block"
+# (the f8 sideband's elements-per-scale — a reader must not guess the
+# block size the scales were computed at). v2 blobs raise
+# PlanFormatError and are rebuilt.
+FORMAT_VERSION = 3
 
 # ExchangePlan array fields in serialization order. Optional array
 # fields (may be None on a given plan) are marked in the header.
@@ -156,6 +162,8 @@ def to_bytes(plan: ExchangePlan, *, params_version: str = "0") -> bytes:
         "combine_slack": float(plan.combine_slack),
         "use_kernel": bool(plan.use_kernel),
         "wire": plan.wire,
+        "wire_dtype": plan.wire_dtype,
+        "wire_scale_block": wire_dtypes.SCALE_BLOCK,
         "condense_backend": cp.backend,
         "params_version": str(params_version),
         "estimate": _estimate_to_dict(plan.estimate),
@@ -190,6 +198,10 @@ def from_bytes(data: bytes, *,
         raise PlanFormatError(
             f"plan params_version {header.get('params_version')!r} != "
             f"expected {expect_params_version!r}; rebuild the cache")
+    if header["wire_scale_block"] != wire_dtypes.SCALE_BLOCK:
+        raise PlanFormatError(
+            f"plan f8 scale block {header['wire_scale_block']} != "
+            f"supported {wire_dtypes.SCALE_BLOCK}; rebuild the cache")
     payload = data[10 + hlen:]
 
     vals: Dict[str, Any] = {}
@@ -227,4 +239,5 @@ def from_bytes(data: bytes, *,
         objective=header["objective"], group_size=header["group_size"],
         combine_slack=header["combine_slack"],
         use_kernel=header["use_kernel"], wire=header["wire"],
+        wire_dtype=header["wire_dtype"],
         estimate=est, condense_plan=cond, signature=sig, **arr)

@@ -15,6 +15,13 @@ large ``n`` approaches ``max(D, F, Cm)`` (perfect overlap) until the
 ``vanilla-overlap``/``luffy-overlap`` systems and the dry-run
 ``comm_ledger`` report, and what ``benchmarks/fig_overlap_sweep.py``
 sweeps against chunk count and bandwidth ratio.
+
+The ``dispatch_ms`` / ``combine_ms`` inputs arrive already wire-priced:
+:func:`repro.plan.estimate.estimate_exchange` scales its effective
+bytes-per-element by ``1 / wire_precision(d_model, wire_dtype, ...)``
+(DESIGN.md §14) before pricing the links, so nothing here needs to know
+the wire dtype — a compressed wire simply shows up as smaller ``D`` and
+``Cm`` stage totals.
 """
 from __future__ import annotations
 

@@ -111,6 +111,36 @@ def test_mamba_scan(rng, B, S, di, N):
                                atol=2e-5, rtol=2e-5)
 
 
+@pytest.mark.parametrize("T,d,R", [(128, 64, 128), (256, 96, 192),
+                                   (64, 33, 96)])
+def test_pack_quantize_bitwise_vs_ref(rng, T, d, R):
+    """The fused gate-mask→pack→quantize kernel (DESIGN.md §14) is a
+    bit-for-bit target, not allclose: uint8 views of payload AND scale
+    sideband must match the pure-jnp reference exactly, for every wire
+    dtype the stack supports (non-multiple-of-32 d exercises the f8
+    zero-padding)."""
+    from repro.comm import dtypes as wdt
+    x = jnp.asarray(rng.standard_normal((T, d)), jnp.float32)
+    tok = jnp.asarray(rng.integers(-1, T, R), jnp.int32)  # ~1/T empty
+    tok = tok.at[::7].set(-1)                             # force empties
+    wds = ["f32", "bf16"] + (["f8e4m3"] if wdt.have_f8() else [])
+    for wd in wds:
+        got_q, got_sc = ops.pack_quantize(x, tok, wire_dtype=wd,
+                                          interpret=True)
+        want_q, want_sc = ref.pack_quantize_ref(x, tok, wire_dtype=wd)
+        assert got_q.dtype == want_q.dtype
+        assert got_q.shape == want_q.shape
+        np.testing.assert_array_equal(
+            np.asarray(got_q).view(np.uint8),
+            np.asarray(want_q).view(np.uint8), err_msg=f"payload {wd}")
+        assert (got_sc is None) == (want_sc is None)
+        if got_sc is not None:
+            np.testing.assert_array_equal(
+                np.asarray(got_sc).view(np.uint8),
+                np.asarray(want_sc).view(np.uint8),
+                err_msg=f"scales {wd}")
+
+
 def test_mamba_kernel_path_in_model(rng, monkeypatch):
     """hymba forward with REPRO_MAMBA_KERNEL=1 == the lax.scan path."""
     import os

@@ -27,7 +27,8 @@ from repro.obs.calibrate import Calibration, calibration_key
 from repro.obs.metrics import COMM_LEDGER_SCHEMA_VERSION
 
 TOP_KEYS = {"schema_version", "calibration", "topology", "dedup_factor",
-            "buckets", "plan_reuse", "condensation", "decode", "autotune"}
+            "buckets", "wire", "plan_reuse", "condensation", "decode",
+            "autotune"}
 TOPOLOGY_KEYS = {"nodes", "devices_per_node", "bw_ratio"}
 BUCKET_KEYS = {"flat", "hier", "overlap"}
 TIER_KEYS = {"intra_bytes", "inter_bytes", "time_s"}
@@ -50,7 +51,10 @@ DECODE_KEYS = {"tokens", "combine_ms", "shared_ffn_ms", "sync_ms",
 AUTOTUNE_KEYS = {"applied", "key", "knobs", "modeled_step_ms",
                  "default_step_ms", "modeled_savings_ms", "candidates"}
 KNOB_KEYS = {"comm_mode", "hier_dedup", "exec_mode", "pipeline_chunks",
-             "plan_objective", "similarity_backend", "lsh_bits"}
+             "plan_objective", "similarity_backend", "lsh_bits",
+             "wire_dtype"}
+WIRE_KEYS = {"dtype", "precision", "row_bytes", "row_bytes_f32",
+             "scale_block"}
 
 
 def _fake_mesh(shape_by_axis):
@@ -68,7 +72,7 @@ def _ledger(**kw):
 
 def test_ledger_schema_version_and_key_sets():
     led = _ledger()
-    assert led["schema_version"] == COMM_LEDGER_SCHEMA_VERSION == 4
+    assert led["schema_version"] == COMM_LEDGER_SCHEMA_VERSION == 5
     assert set(led) == TOP_KEYS
     assert set(led["topology"]) == TOPOLOGY_KEYS
     assert set(led["buckets"]) == {"0.0", "0.25", "0.5"}
@@ -76,6 +80,11 @@ def test_ledger_schema_version_and_key_sets():
         assert set(b) == BUCKET_KEYS
         assert set(b["flat"]) == set(b["hier"]) == TIER_KEYS
         assert set(b["overlap"]) == OVERLAP_KEYS
+    assert set(led["wire"]) == WIRE_KEYS
+    # default run: identity wire — precision exactly 1, bytes unscaled
+    assert led["wire"]["dtype"] == "f32"
+    assert led["wire"]["precision"] == 1.0
+    assert led["wire"]["row_bytes"] == led["wire"]["row_bytes_f32"]
     assert set(led["plan_reuse"]) == PLAN_REUSE_KEYS
     assert set(led["condensation"]) == CONDENSATION_KEYS
     assert set(led["condensation"]["dedup_wire"]) == DEDUP_WIRE_KEYS
@@ -96,6 +105,22 @@ def test_ledger_schema_version_and_key_sets():
         led["autotune"]["default_step_ms"]
         - led["autotune"]["modeled_step_ms"])
     assert led["calibration"] is None          # uncalibrated pricing
+
+
+def test_ledger_wire_dtype_scales_bucket_bytes():
+    """The compressed wire (DESIGN.md §14) shows up in the ledger as an
+    exact 1/precision scaling of every modeled byte field."""
+    base = _ledger()
+    led = _ledger(wire_dtype="bf16")
+    assert set(led) == TOP_KEYS
+    prec = led["wire"]["precision"]
+    assert prec > 1.0
+    b, c = led["buckets"]["0.0"], base["buckets"]["0.0"]
+    for tier in ("flat", "hier"):
+        assert b[tier]["inter_bytes"] == pytest.approx(
+            c[tier]["inter_bytes"] / prec)
+        assert b[tier]["intra_bytes"] == pytest.approx(
+            c[tier]["intra_bytes"] / prec)
 
 
 def test_ledger_non_hier_and_non_moe_return_none():
@@ -137,7 +162,7 @@ def test_ledger_flattens_into_metrics_record():
     from repro.obs.metrics import flatten
     led = _ledger()
     flat = flatten("comm_ledger", led)
-    assert flat["comm_ledger/schema_version"] == 4
+    assert flat["comm_ledger/schema_version"] == 5
     assert "comm_ledger/decode/modeled_speedup" in flat
     assert "comm_ledger/buckets/0.0/hier/inter_bytes" in flat
     assert "comm_ledger/plan_reuse/planning_ms_per_plan" in flat
