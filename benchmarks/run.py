@@ -28,6 +28,7 @@ MODULES = [
     "fig_autotune",         # beyond-paper: calibration-driven autotuning
     "fig_wire_dtype",       # beyond-paper: compressed-exchange wire sweep
     "fig_serve_throughput",  # beyond-paper: continuous batching + overlap
+    "fig_dedup_universal",  # beyond-paper: universal dedup wire + replicas
     "roofline",             # deliverable (g)
 ]
 

@@ -27,10 +27,21 @@ association ("sum-order-stable"): outputs are deterministic run-to-run,
 but associate differently than the flat wire's per-copy sum — dedup mode
 matches flat within float tolerance, not bitwise (tested).
 
-Scope: the vanilla (non-migrated) sync exchange — migrate-mode combine
-re-addresses rows to new homes, where the (token, node) dedup map does
-not apply; pipelined execution chunks the dense capacity. Both fall back
-to the dense wire (``ExchangePlan.wire`` records the executed format).
+Scope: **universal** (DESIGN.md §15). Dispatch is mode-independent —
+experts never move, so the (token, node) unique packing is identical
+under migration and pipelining. Migrate-mode combine re-addresses rows
+to post-migration homes through a *dest-keyed* map: the re-expansion
+map carries each row's destination position in the migrated frame
+(``dest_gpos``), the expert node pre-reduces per (token, **dest**
+device) and one partial row per (token, node) crosses straight to the
+token's NEW home (:func:`dedup_combine_migrate`) — same
+sum-order-stable schedule, no detour through the source. Pipelined
+execution chunks the *unique-row* capacity
+(``repro.sched.plan_unique_chunks``): each chunk's inter-node hop is
+issued before the previous chunk's intra-node fan-out/dequantize is
+consumed (the §6 depth-2 schedule), and chunks reassemble in the sync
+layout before reconstruction — bit-identical to the sync dedup wire
+(``ExchangePlan.wire`` records the executed format).
 
 **Wire precision (DESIGN.md §14).** Both wires compose with
 ``LuffyConfig.wire_dtype``: activation rows are quantized
@@ -46,14 +57,53 @@ byte-for-byte the historical graphs.
 """
 from __future__ import annotations
 
-from typing import Dict, Tuple
+from typing import Dict, Optional, Tuple
 
+import jax
 import jax.numpy as jnp
 
 from repro.comm import CommContext, compat
 from repro.comm import dtypes as wdt
+from repro.sched import ChunkPlan, run_pipeline
 
 Array = jnp.ndarray
+
+
+def _node_hop(q, sc, cdt, d: int, *, comm: CommContext,
+              chunks: Optional[ChunkPlan] = None,
+              fanout: bool = False) -> Array:
+    """Cross the node axis with a quantized ``[N, R, .]`` payload and
+    dequantize right after the hop (optionally following with the
+    intra-node all-gather fan-out), software-pipelined over unique-row
+    chunks when ``chunks`` is given.
+
+    Chunking slices axis 1 (the unique-row axis): quantization is
+    per-row, the collective is a permutation, and chunks reassemble by
+    concatenation in slot order, so the chunked hop is **bit-identical**
+    to the single-shot hop — the §6 depth-2 schedule just lets chunk
+    k+1's expensive inter-node transfer fly while chunk k dequantizes
+    and fans out on the cheap links.
+    """
+    def _land(qk, sck):
+        x = wdt.dequantize_rows(qk, sck, cdt, d)
+        return comm.local_all_gather(x) if fanout else x
+
+    if chunks is None or chunks.n_chunks <= 1:
+        q1 = comm.node_all_to_all(q)
+        sc1 = None if sc is None else comm.node_all_to_all(sc)
+        return _land(q1, sc1)
+
+    def _disp(k):
+        o, s = chunks.offsets[k], chunks.sizes[k]
+        qk = comm.node_all_to_all(
+            jax.lax.slice_in_dim(q, o, o + s, axis=1))
+        sck = None if sc is None else comm.node_all_to_all(
+            jax.lax.slice_in_dim(sc, o, o + s, axis=1))
+        return qk, sck
+
+    outs, _ = run_pipeline(chunks.n_chunks, dispatch=_disp,
+                           compute=lambda k, p: _land(*p))
+    return jnp.concatenate(outs, axis=1)
 
 
 def ship_rows(comm_fn, buf: Array, d: int, wire_dtype: str) -> Array:
@@ -96,7 +146,10 @@ def dedup_capacity(tokens: int, e_local: int, local: int,
 
 def dedup_dispatch(xf, expert_idx, gate_w, valid, pos, *,
                    comm: CommContext, e_local: int, capacity: int,
-                   wire_dtype: str = "f32", use_kernel: bool = False
+                   wire_dtype: str = "f32", use_kernel: bool = False,
+                   dest_gpos: Optional[Array] = None,
+                   prim: Optional[Array] = None,
+                   chunks: Optional[ChunkPlan] = None,
                    ) -> Tuple[Array, Array, Array, Dict]:
     """Ship the deduplicated dispatch payload; reconstruct dense rows.
 
@@ -107,6 +160,18 @@ def dedup_dispatch(xf, expert_idx, gate_w, valid, pos, *,
     the dense wire's payload slabs (at the wire dtype's reconstruction
     when ``wire_dtype != "f32"``); ``state`` carries the maps
     :func:`dedup_combine` needs plus the shipped-bytes ledger count.
+
+    Migrate mode (``dest_gpos``/``prim`` given): the re-expansion map
+    grows two planes — each copy's destination global position
+    ``dest_gpos [T]`` (``dest_device * T + dest_pos`` in the migrated
+    frame) and its primary flag ``prim [T, k]`` — so the expert side
+    can re-address the combine (:func:`dedup_combine_migrate`) without
+    a second exchange. The payload wire itself is untouched:
+    **dispatch is mode-independent** (experts never move), so
+    ``x_rows`` stays bit-identical to the vanilla dedup dispatch.
+
+    ``chunks`` pipelines the unique-row node hop (bit-identical
+    reassembly, see :func:`_node_hop`).
 
     ``use_kernel`` routes the hot pre-dispatch path — gate-mask →
     dedup-pack → quantize — through the fused Pallas kernel
@@ -162,29 +227,36 @@ def dedup_dispatch(xf, expert_idx, gate_w, valid, pos, *,
         q, sc = wdt.quantize_rows(ubuf, wire_dtype)
 
     # re-expansion map in the dense dispatch layout: (uslot+1, gate_w)
+    # — plus, in migrate mode, (dest_gpos+1, prim). All planes ride the
+    # exact f32 map exchange; dest_gpos < M*T stays far below 2^24, so
+    # the f32 round-trip is lossless.
     u_copy = jnp.take_along_axis(urank, node_of, axis=1)    # [T, k]
     e_f = expert_idx.reshape(-1)
     p_f = pos.reshape(-1)
     v_f = valid.reshape(-1)
     e_safe = jnp.where(v_f, e_f, 0)
     p_safe = jnp.where(v_f, p_f, 0)
-    mvals = jnp.stack([(u_copy + 1).astype(jnp.float32),
-                       gate_w.astype(jnp.float32)], -1).reshape(-1, 2)
-    mbuf = jnp.zeros((E, C, 2), jnp.float32).at[e_safe, p_safe].add(
+    cols = [(u_copy + 1).astype(jnp.float32),
+            gate_w.astype(jnp.float32)]
+    if dest_gpos is not None:
+        cols.append(jnp.broadcast_to(
+            dest_gpos.astype(jnp.float32)[:, None] + 1.0, (T, k)))
+        cols.append(prim.astype(jnp.float32))
+    w = len(cols)
+    mvals = jnp.stack(cols, -1).reshape(-1, w)
+    mbuf = jnp.zeros((E, C, w), jnp.float32).at[e_safe, p_safe].add(
         mvals * v_f[:, None].astype(jnp.float32), mode="drop")
 
-    # wire: map via the ordinary dense exchange (2 scalars/row, exact —
-    # it carries slot pointers), unique payload inter-node once per
+    # wire: map via the ordinary dense exchange (2-4 scalars/row, exact
+    # — it carries slot pointers), unique payload inter-node once per
     # (token, node) at the wire dtype (+ f8 scale sideband), dequantized
     # right after the node hop so the cheap-link fan-out and everything
     # downstream sees compute-dtype rows
     mbuf = comm.all_to_all(mbuf)
-    q1 = comm.node_all_to_all(q)                            # [N_src, C_u, .]
-    sc1 = None if sc is None else comm.node_all_to_all(sc)
-    ub1 = wdt.dequantize_rows(q1, sc1, cdt, d)              # [N_src, C_u, d]
-    ug = comm.local_all_gather(ub1)                         # [L*N, C_u, d]
+    ug = _node_hop(q, sc, cdt, d, comm=comm, chunks=chunks,
+                   fanout=True)                             # [L*N, C_u, d]
 
-    rmeta = mbuf.reshape(M, e_local, C, 2).transpose(1, 0, 2, 3)
+    rmeta = mbuf.reshape(M, e_local, C, w).transpose(1, 0, 2, 3)
     u = jnp.round(rmeta[..., 0]).astype(jnp.int32) - 1      # [E_l, M, C]
     rvalid = u >= 0
     u_safe = jnp.maximum(u, 0)
@@ -197,12 +269,18 @@ def dedup_dispatch(xf, expert_idx, gate_w, valid, pos, *,
     occ = jnp.sum(h_i.astype(jnp.float32), axis=0)          # [N]
     state = {"headed": headed, "un_safe": un_safe, "u_safe": u_safe,
              "rvalid": rvalid, "N": N, "L": L, "M": M, "C_u": C_u,
-             "shipped_rows": jnp.sum(occ) - occ[my_node]}
+             "T": T, "shipped_rows": jnp.sum(occ) - occ[my_node]}
+    if dest_gpos is not None:
+        dg = jnp.round(rmeta[..., 2]).astype(jnp.int32) - 1
+        state["dgpos"] = jnp.where(rvalid, dg, -1)          # [E_l, M, C]
+        state["prim"] = (rmeta[..., 3]
+                         * rvalid.astype(jnp.float32)).astype(cdt)
     return x_rows, gw, rvalid, state
 
 
 def dedup_combine(out_rows, state, *, comm: CommContext,
-                  wire_dtype: str = "f32") -> Array:
+                  wire_dtype: str = "f32",
+                  chunks: Optional[ChunkPlan] = None) -> Array:
     """Return gate-weighted expert outputs to their source tokens with
     per-node pre-reduction.
 
@@ -212,7 +290,8 @@ def dedup_combine(out_rows, state, *, comm: CommContext,
     intra-node reduce-scatter completes the node sum, one partial row
     per (token, node) crosses back, and the source adds node partials
     in ascending node index — a fully deterministic association.
-    Returns delta [T, d].
+    ``chunks`` pipelines the return hop over the unique-row axis
+    (bit-identical, :func:`_node_hop`). Returns delta [T, d].
     """
     N, L, M, C_u = state["N"], state["L"], state["M"], state["C_u"]
     rvalid, u_safe = state["rvalid"], state["u_safe"]
@@ -233,10 +312,49 @@ def dedup_combine(out_rows, state, *, comm: CommContext,
     # per-node partials cross back at the wire dtype; the intra-node
     # reduce-scatter above already ran at the compute dtype
     q, sc = wdt.quantize_rows(part, wire_dtype)
-    q = comm.node_all_to_all(q)
-    if sc is not None:
-        sc = comm.node_all_to_all(sc)
-    pback = wdt.dequantize_rows(q, sc, cdt, d)              # [N, C_u, d]
+    pback = _node_hop(q, sc, cdt, d, comm=comm, chunks=chunks)
     n_grid = jnp.broadcast_to(jnp.arange(N)[None, :], (T, N))
     g = pback[n_grid, un_safe] * headed[..., None].astype(cdt)
     return jnp.sum(g, axis=1)                               # node order
+
+
+def dedup_combine_migrate(out_rows, state, *, comm: CommContext,
+                          wire_dtype: str = "f32",
+                          chunks: Optional[ChunkPlan] = None) -> Array:
+    """Dest-keyed combine for the migrated frame (DESIGN.md §15).
+
+    out_rows: [E_local, M, C, d] finished rows — gate-weighted AND
+    carrying the primary copy's residual (``y·gw + x·prim``), because
+    migrate mode *materializes* the post-block hidden state at the
+    token's NEW home rather than adding a delta at the source. Rows
+    pre-reduce per (token, **destination** device) keyed by the
+    ``dest_gpos`` plane of the re-expansion map: a deterministic
+    scatter-add in fixed (expert, source, slot) row order into a
+    ``[M, T, d]`` buffer, an intra-node reduce-scatter completing the
+    node sum, one partial row per (token, node) crossing straight to
+    the destination device — no detour through the source — and node
+    partials added in ascending node index: the same sum-order-stable
+    association as :func:`dedup_combine`, re-addressed. The migration
+    permutation is a bijection on global slots, so each destination
+    receives exactly T rows — no capacity bound, no drop path.
+    ``chunks`` pipelines the return hop over the token axis
+    (bit-identical). Returns y [T, d] in the migrated frame.
+    """
+    N, L, M, T = state["N"], state["L"], state["M"], state["T"]
+    dgpos = state["dgpos"]
+    d = out_rows.shape[-1]
+    cdt = out_rows.dtype
+
+    live = dgpos >= 0
+    dd = jnp.where(live, dgpos // T, 0)                     # dest device
+    dp = jnp.where(live, dgpos % T, 0)                      # dest position
+    comb = jnp.zeros((M, T, d), cdt).at[dd, dp].add(
+        out_rows * live[..., None].astype(cdt), mode="drop")
+    # finish the node sum on the cheap links, keeping only my column's
+    # destination chunk (dest device = n_dest * L + l_dest)
+    comb = comb.reshape(N, L, T, d).transpose(1, 0, 2, 3)
+    part = comm.local_psum_scatter(comb)                    # [1, N, T, d]
+    part = part.reshape(N, T, d)
+    q, sc = wdt.quantize_rows(part, wire_dtype)
+    pback = _node_hop(q, sc, cdt, d, comm=comm, chunks=chunks)
+    return jnp.sum(pback, axis=0)                           # node order

@@ -281,12 +281,14 @@ class LuffyConfig:
     # combine rows per node with a sum-order-stable schedule — actually
     # moving the bytes the ledger's inter_bytes_dedup models (asserted
     # equal via the inter_bytes_shipped metric). Requires
-    # comm_mode="hier"; applies to the vanilla sync exchange (migrate-
-    # mode combine is re-addressed to new homes and pipelined execution
-    # chunks the dense capacity — both keep the dense wire). Dispatch
-    # reconstruction is exact, but the combine reduction associates
-    # per-node, so outputs match "off" within float tolerance, not
-    # bitwise.
+    # comm_mode="hier"; universal across execution modes (DESIGN.md
+    # §15): migrate-mode combine re-addresses the pre-reduce to each
+    # row's *destination* node via a dest-keyed re-expansion map, and
+    # pipelined execution chunks the unique-row capacity so the hop's
+    # intra-node fan-out hides behind the next chunk's inter-node leg.
+    # Dispatch reconstruction is exact, but the combine reduction
+    # associates per-node, so outputs match "off" within float
+    # tolerance, not bitwise.
     hier_dedup: str = "off"
     # Execution scheduling (DESIGN.md §6): "sync" runs gate → dispatch →
     # expert FFN → combine strictly in order; "pipeline" splits the
@@ -340,6 +342,14 @@ class LuffyConfig:
     # per-sequence metadata never quantize, and compute stays at
     # compute_dtype throughout.
     wire_dtype: str = "f32"
+    # Error-feedback accumulation for the lossy wire (DESIGN.md §15):
+    # each step the per-token quantization residual x - deq(quant(x))
+    # is carried and added back into the NEXT step's dispatch payload
+    # before quantization, so the time-averaged wire error is unbiased
+    # instead of accumulating in one direction. No effect under the
+    # exact "f32" wire; carried state threads through the same
+    # cross-step bus as the condensation similarity carry.
+    wire_error_feedback: bool = False
 
 
 def resolve_pipeline_chunks(pipeline_chunks: Optional[int],

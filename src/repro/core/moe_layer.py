@@ -224,7 +224,7 @@ def moe_core_planned(params, x, sideband: Dict[str, Array],
                      use_kernel: bool = False,
                      comm: Optional[CommContext] = None,
                      reuse_from=None, condense_reuse_from=None,
-                     plan_template=None):
+                     plan_template=None, wire_ef: Optional[Array] = None):
     """``moe_core`` that also returns the :class:`ExchangePlan` it built
     — the plan-lifecycle entry point (DESIGN.md §9). ``reuse_from``
     threads a prior plan/signature into ``build_exchange_plan``'s
@@ -232,8 +232,10 @@ def moe_core_planned(params, x, sideband: Dict[str, Array],
     :class:`repro.condense.CondenseCarry`) does the same for the
     condensation map (DESIGN.md §10); ``plan_template`` (a cached static
     template from :class:`repro.plan.cache.PlanCache`) switches the
-    vanilla path to ``instantiate_plan``, skipping planning entirely.
-    Returns (y, new_sideband, s_next, aux, plan, cond_carry)."""
+    vanilla path to ``instantiate_plan``, skipping planning entirely;
+    ``wire_ef`` threads the lossy-wire error-feedback residual
+    (DESIGN.md §15) into the executor.
+    Returns (y, new_sideband, s_next, aux, plan, cond_carry, wire_ef)."""
     from repro.models.blocks import _dtype
     from repro.plan.exchange import instantiate_decode_plan, instantiate_plan
     comm = CommContext.ensure(comm, axis_name)
@@ -258,9 +260,11 @@ def moe_core_planned(params, x, sideband: Dict[str, Array],
                 condense_reuse_from=condense_reuse_from)
         plan = _sp.fence(plan)
     with obs_trace.phase("exchange") as _sp:
-        y, aux = execute_plan(params, x, sideband, plan, cfg)
+        y, aux = execute_plan(params, x, sideband, plan, cfg,
+                              wire_ef=wire_ef)
         y = _sp.fence(y)
-    return y, aux.sideband, aux.s_next, aux.moe, plan, aux.cond_carry
+    return (y, aux.sideband, aux.s_next, aux.moe, plan, aux.cond_carry,
+            aux.wire_ef)
 
 
 def moe_core(params, x, sideband: Dict[str, Array], cfg: ModelConfig,
@@ -292,7 +296,7 @@ def moe_core(params, x, sideband: Dict[str, Array], cfg: ModelConfig,
     ``reuse_from``/``plan_template``; this historical entry point keeps
     the 4-tuple contract.)
     """
-    y, sb, s_next, aux, _, _ = moe_core_planned(
+    y, sb, s_next, aux, _, _, _ = moe_core_planned(
         params, x, sideband, cfg, luffy, mode=mode, capacity=capacity,
         axis_name=axis_name, threshold=threshold, s_prev=s_prev,
         group_size=group_size, combine_slack=combine_slack,

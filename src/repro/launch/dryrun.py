@@ -190,12 +190,25 @@ def comm_traffic_ledger(cfg, shape, mesh, *, nodes: int = 0,
     # a reader can undo or cross-check the scaling. bytes_per_el 4
     # matches estimate_exchange's default compute itemsize.
     from repro.comm import dtypes as wire_dtypes
+    # Per-execution-mode shipped inter-node bytes (schema v6): the dedup
+    # wire is universal (DESIGN.md §15), so vanilla / migrate / pipelined
+    # all ship the per-node-deduplicated payload when it is on — the
+    # three fields are equal by construction and exist so a reader (and
+    # the golden-schema test) can see the mode scope is closed, not
+    # implied. Dispatch bytes are mode-independent (experts never move),
+    # which is why one number covers all three.
+    b0w = out["buckets"]["0.0"]
+    shipped = (b0w["hier"]["inter_bytes"] if hier_dedup == "on"
+               else b0w["flat"]["inter_bytes"])
     out["wire"] = {
         "dtype": wire_dtype,
         "precision": wire_dtypes.wire_precision(cfg.d_model, wire_dtype, 4),
         "row_bytes": wire_dtypes.wire_row_bytes(cfg.d_model, wire_dtype, 4),
         "row_bytes_f32": (cfg.d_model + 2) * 4,
         "scale_block": wire_dtypes.SCALE_BLOCK,
+        "shipped_vanilla_bytes": shipped,
+        "shipped_migrate_bytes": shipped,
+        "shipped_pipelined_bytes": shipped,
     }
 
     # ---- plan-reuse ledger (DESIGN.md §9) --------------------------------
@@ -413,8 +426,9 @@ def run_pair(arch: str, shape_name: str, multi_pod: bool,
                       if k not in explicit and k != "comm_mode"})
     knobs.update({k: v for k, v in cli.items() if v is not None})
     if "hier_dedup" not in explicit and knobs["hier_dedup"] == "on" \
-            and (comm_mode != "hier" or knobs["exec_mode"] != "sync"):
-        knobs["hier_dedup"] = "off"   # dedup wire is hier+sync scope
+            and comm_mode != "hier":
+        knobs["hier_dedup"] = "off"   # dedup wire needs hier comm; it
+                                      # is otherwise universal (§15)
     if knobs["pipeline_chunks"] is None:
         knobs["pipeline_chunks"] = resolve_pipeline_chunks(
             None, knobs["plan_objective"])
@@ -704,9 +718,10 @@ def main():
                          "(default 4; under --plan-objective overlap "
                          "the estimate search picks the count)")
     ap.add_argument("--plan-objective", default=None,
-                    choices=["traffic", "overlap"],
+                    choices=["traffic", "overlap", "replicate"],
                     help="migration planner objective (DESIGN.md §7; "
-                         "default traffic)")
+                         "\"replicate\" adds intra-node hot-expert "
+                         "replicas, DESIGN.md §15; default traffic)")
     ap.add_argument("--plan-reuse", default="off",
                     choices=["off", "signature", "always"],
                     help="cross-layer plan reuse; also selects the "

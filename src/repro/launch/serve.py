@@ -287,9 +287,9 @@ def main():
                       if k in serve_knobs and k not in explicit})
     for k in explicit:
         knobs[k] = getattr(args, k)
-    if "hier_dedup" not in explicit and knobs["hier_dedup"] == "on" \
-            and knobs["exec_mode"] != "sync":
-        knobs["hier_dedup"] = "off"   # dedup wire is sync scope
+    if "hier_dedup" not in explicit and knobs["hier_dedup"] == "on":
+        knobs["hier_dedup"] = "off"   # serving runs comm_mode="flat";
+                                      # the dedup wire needs hier comm
     if knobs["pipeline_chunks"] is None:
         knobs["pipeline_chunks"] = resolve_pipeline_chunks(
             None, knobs["plan_objective"])

@@ -62,11 +62,12 @@ def main():
                          "estimate search picks the count (0 = force "
                          "the planned count; DESIGN.md §9)")
     ap.add_argument("--plan-objective", default=None,
-                    choices=["traffic", "overlap"],
+                    choices=["traffic", "overlap", "replicate"],
                     help="migration planner objective (DESIGN.md §7): "
-                         "link-cost-weighted bytes, or modeled exposed "
-                         "(un-overlappable) time under the pipeline "
-                         "(default traffic)")
+                         "link-cost-weighted bytes, modeled exposed "
+                         "(un-overlappable) time under the pipeline, or "
+                         "traffic + intra-node hot-expert replication "
+                         "(DESIGN.md §15; default traffic)")
     ap.add_argument("--plan-reuse", default="off",
                     choices=["off", "signature", "always"],
                     help="cross-layer migration-plan reuse (DESIGN.md "
@@ -95,7 +96,8 @@ def main():
     ap.add_argument("--hier-dedup", default=None, choices=["off", "on"],
                     help="ship the per-node-deduplicated hier payload "
                          "(repro.condense.wire; needs --comm-mode hier, "
-                         "vanilla sync exchange; default off)")
+                         "works under every exec mode incl. migrate + "
+                         "pipelined, DESIGN.md §15; default off)")
     ap.add_argument("--wire-dtype", default=None,
                     choices=["f32", "bf16", "f8e4m3"],
                     help="precision activation rows ship at when they "
@@ -104,6 +106,11 @@ def main():
                          "per-32-element f32 scales. Frozen into the "
                          "exchange plan; compute stays at the compute "
                          "dtype (default f32)")
+    ap.add_argument("--wire-error-feedback", action="store_true",
+                    help="carry each token's wire quantization residual "
+                         "into the next step's shipped payload "
+                         "(DESIGN.md §15); no effect under --wire-dtype "
+                         "f32")
     ap.add_argument("--no-condensation", action="store_true")
     ap.add_argument("--no-migration", action="store_true")
     ap.add_argument("--optimizer", default="adamw")
@@ -237,9 +244,9 @@ def main():
     for k in explicit:
         knobs[k] = getattr(args, k)
     if "hier_dedup" not in explicit and knobs["hier_dedup"] == "on" \
-            and (knobs["comm_mode"] != "hier"
-                 or knobs["exec_mode"] != "sync"):
-        knobs["hier_dedup"] = "off"   # dedup wire is hier+sync scope
+            and knobs["comm_mode"] != "hier":
+        knobs["hier_dedup"] = "off"   # dedup wire needs hier comm; it
+                                      # is otherwise universal (§15)
     from repro.config import resolve_pipeline_chunks
     if knobs["pipeline_chunks"] is None:
         # objective-aware chunk count (DESIGN.md §9): under the
@@ -275,7 +282,8 @@ def main():
         condense_reuse=args.condense_reuse,
         condense_reuse_max_age=args.condense_max_age,
         hier_dedup=knobs["hier_dedup"],
-        wire_dtype=knobs["wire_dtype"])
+        wire_dtype=knobs["wire_dtype"],
+        wire_error_feedback=args.wire_error_feedback)
     if calib is not None:
         luffy = calib.apply(luffy)
     ocfg = OptimConfig(name=args.optimizer, lr=args.lr,
@@ -289,7 +297,13 @@ def main():
         params = jax.device_put(
             params, jax.tree.map(lambda s: dist.sharding(s), pspecs))
     opt_state = optim.init_opt_state(params, ocfg)
-    lstate = train_lib.init_luffy_state()
+    # cross-step wire error feedback (DESIGN.md §15): allocate the
+    # residual buffer only when a lossy wire can produce one
+    from repro.models import transformer as tf_mod
+    use_ef = (luffy.wire_error_feedback and luffy.wire_dtype != "f32"
+              and cfg.uses_moe)
+    lstate = train_lib.init_luffy_state(
+        tf_mod.wire_ef_shape(cfg, gb, args.seq_len) if use_ef else None)
     data = SyntheticLM(cfg, shape)
 
     # one executable per condensation rate bucket, compiled on demand

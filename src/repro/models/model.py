@@ -36,9 +36,9 @@ class Model:
 
     # ---- forward fns -------------------------------------------------------
     def train_loss(self, params, batch, threshold, *, luffy: LuffyConfig,
-                   dist: DistContext, capacity: int):
+                   dist: DistContext, capacity: int, wire_ef=None):
         return tf.forward_train(params, self.cfg, luffy, dist, batch,
-                                threshold, capacity)
+                                threshold, capacity, wire_ef=wire_ef)
 
     def decode_step(self, params, cache, tokens, *, luffy: LuffyConfig,
                     dist: DistContext, plan_cache=None):

@@ -255,7 +255,8 @@ def _pmean_all(v, axes):
 
 def _moe_apply_dist(p_moe, x, sideband, s_prev, threshold, cfg, luffy,
                     dist: DistContext, mode: str, capacity: int,
-                    plan_carry=None, cond_carry=None, plan_template=None):
+                    plan_carry=None, cond_carry=None, plan_template=None,
+                    wire_ef=None):
     """Wrap moe_core in shard_map when a mesh is present.
 
     plan_carry (DESIGN.md §9): the cross-sublayer plan-reuse state —
@@ -267,7 +268,10 @@ def _moe_apply_dist(p_moe, x, sideband, s_prev, threshold, cfg, luffy,
     graph parity).
     plan_template: a cached static :class:`ExchangePlan` template (the
     serving path) routed to ``instantiate_plan`` instead of a build.
-    Returns (y, sideband, s_next, aux, plan_carry_out, cond_carry_out)."""
+    wire_ef (DESIGN.md §15): the per-layer lossy-wire error-feedback
+    residual [B, S, d] (sharded like x); None disables threading.
+    Returns (y, sideband, s_next, aux, plan_carry_out, cond_carry_out,
+    wire_ef_out)."""
     from repro.condense.plan import CondenseCarry
     from repro.plan.exchange import PlanSignature
     if mode == "decode" and dist.enabled and dist.model_size > 1:
@@ -315,7 +319,8 @@ def _moe_apply_dist(p_moe, x, sideband, s_prev, threshold, cfg, luffy,
                        jax.tree.map(lambda _: P(),
                                     moe.MoEAux(*([0.0] * moe.N_AUX)))))
         y, aux = fn(p_moe, x)
-        return y, dict(sideband), None, aux, plan_carry, cond_carry
+        return y, dict(sideband), None, aux, plan_carry, cond_carry, \
+            wire_ef
     if not dist.enabled or dist.model_size == 1:
         sb = dict(sideband)
         reuse = None
@@ -327,13 +332,13 @@ def _moe_apply_dist(p_moe, x, sideband, s_prev, threshold, cfg, luffy,
             creuse = CondenseCarry(cond_carry["rep"].reshape(-1),
                                    cond_carry["cexp"].reshape(-1),
                                    cond_carry["age"], cond_carry["valid"])
-        y, sb2, s_next, aux, plan, cc = moe.moe_core_planned(
+        y, sb2, s_next, aux, plan, cc, ef2 = moe.moe_core_planned(
             p_moe, x, sb, cfg, luffy, mode=mode, capacity=capacity,
             axis_name=None, threshold=threshold, s_prev=s_prev,
             group_size=luffy.condense_group,
             combine_slack=luffy.combine_slack, use_kernel=luffy.use_kernels,
             reuse_from=reuse, condense_reuse_from=creuse,
-            plan_template=plan_template)
+            plan_template=plan_template, wire_ef=wire_ef)
         if s_next is not None:
             G = luffy.condense_group
             s_next = s_next.reshape(x.shape[0], x.shape[1] // G, G, G)
@@ -345,7 +350,8 @@ def _moe_apply_dist(p_moe, x, sideband, s_prev, threshold, cfg, luffy,
         cond_out = None
         if cond_carry is not None:
             cond_out = cond_carry if cc is None else cc
-        return y, sb2, s_next, aux, carry_out, cond_out
+        return y, sb2, s_next, aux, carry_out, cond_out, \
+            (wire_ef if ef2 is None else ef2)
 
     mesh = dist.mesh
     all_axes = tuple(mesh.axis_names)
@@ -362,9 +368,10 @@ def _moe_apply_dist(p_moe, x, sideband, s_prev, threshold, cfg, luffy,
                                        dist.topology)
     has_pc = plan_carry is not None
     has_cc = cond_carry is not None
+    has_ef = wire_ef is not None
 
     def inner(p_moe_l, x_l, lbl, slen, sp, thr, pcc, pcl, pcv,
-              ccr, cce, cca, ccv):
+              ccr, cce, cca, ccv, efp):
         if fsdp:
             # explicit bf16 FSDP all-gather of the expert F-dim shards;
             # leaving this to GSPMD hoists an f32 convert before the
@@ -378,14 +385,17 @@ def _moe_apply_dist(p_moe, x, sideband, s_prev, threshold, cfg, luffy,
         reuse = PlanSignature(pcc, pcl, pcv) if has_pc else None
         creuse = (CondenseCarry(ccr.reshape(-1), cce.reshape(-1), cca, ccv)
                   if has_cc else None)
-        y, sb2, s_next, aux, plan, cc = moe.moe_core_planned(
+        y, sb2, s_next, aux, plan, cc, ef2 = moe.moe_core_planned(
             p_moe_l, x_l, sb, cfg, luffy, mode=mode, capacity=capacity,
             comm=comm_ctx, threshold=thr,
             s_prev=(sp if has_sp else None),
             group_size=luffy.condense_group,
             combine_slack=luffy.combine_slack, use_kernel=luffy.use_kernels,
             reuse_from=reuse, condense_reuse_from=creuse,
-            plan_template=plan_template)
+            plan_template=plan_template,
+            wire_ef=(efp if has_ef else None))
+        if has_ef and ef2 is not None:
+            efp = ef2
         aux = jax.tree.map(lambda a: _pmean_all(a, all_axes), aux)
         if s_next is None:
             s_next = jnp.zeros((1,), jnp.float32)    # placeholder
@@ -405,7 +415,7 @@ def _moe_apply_dist(p_moe, x, sideband, s_prev, threshold, cfg, luffy,
             ccr, cce = cc["rep"], cc["cexp"]
             cca, ccv = cc["age"], cc["valid"]
         return (y, sb2["labels"], sb2["seq_len"], s_next, aux,
-                pcc, pcl, pcv, ccr, cce, cca, ccv)
+                pcc, pcl, pcv, ccr, cce, cca, ccv, efp)
 
     ma = dist.model_axis              # "model" or ("node", "local")
     moe_specs = jax.tree.map(lambda _: P(), p_moe)
@@ -427,33 +437,37 @@ def _moe_apply_dist(p_moe, x, sideband, s_prev, threshold, cfg, luffy,
     cc_seq_spec = P(bax) if has_cc else P()
     cc_args = ((cond_carry["rep"], cond_carry["cexp"], cond_carry["age"],
                 cond_carry["valid"]) if has_cc else (zpi, zpi, zp, zp))
+    ef_spec = x_spec if has_ef else P()
+    ef_arg = wire_ef if has_ef else jnp.zeros((1, 1, 1), jnp.float32)
     fn = rcomm.shard_map(
         inner, mesh=mesh,
         in_specs=(moe_specs, x_spec, lbl_spec, len_spec, sp_in, P(),
                   pc_counts_spec, pc_lens_spec, P(),
-                  cc_map_spec, cc_map_spec, cc_seq_spec, cc_seq_spec),
+                  cc_map_spec, cc_map_spec, cc_seq_spec, cc_seq_spec,
+                  ef_spec),
         out_specs=(x_spec, lbl_spec, len_spec, s_out_spec,
                    jax.tree.map(lambda _: P(),
                                 moe.MoEAux(*([0.0] * moe.N_AUX))),
                    pc_counts_spec, pc_lens_spec, P(),
-                   cc_map_spec, cc_map_spec, cc_seq_spec, cc_seq_spec))
+                   cc_map_spec, cc_map_spec, cc_seq_spec, cc_seq_spec,
+                   ef_spec))
     (y, lbl2, slen2, s_next, aux, pcc2, pcl2, pcv2,
-     ccr2, cce2, cca2, ccv2) = fn(
+     ccr2, cce2, cca2, ccv2, ef2) = fn(
         p_moe, x, sideband["labels"], sideband["seq_len"], sp_arg,
-        threshold, *pc_args, *cc_args)
+        threshold, *pc_args, *cc_args, ef_arg)
     if not (luffy.enable_condensation and mode != "decode"):
         s_next = None
     carry_out = ({"counts": pcc2, "lens": pcl2, "valid": pcv2}
                  if has_pc else None)
     cond_out = ({"rep": ccr2, "cexp": cce2, "age": cca2, "valid": ccv2}
                 if has_cc else None)
-    return y, {"labels": lbl2, "seq_len": slen2}, s_next, aux, carry_out, \
-        cond_out
+    return (y, {"labels": lbl2, "seq_len": slen2}, s_next, aux, carry_out,
+            cond_out, (ef2 if has_ef else None))
 
 
 def _layer_full(p, cfg, luffy, dist, x, sideband, s_prev, threshold,
                 j, *, causal, enc_out, enc_pos, moe_mode, capacity,
-                plan_carry=None, cond_carry=None):
+                plan_carry=None, cond_carry=None, wire_ef=None):
     # NOTE: the window pattern repeats with the scan period, so the static
     # pattern position ``j`` fully determines this layer's window — no
     # traced layer index may reach ``window_for_layer``.
@@ -469,10 +483,11 @@ def _layer_full(p, cfg, luffy, dist, x, sideband, s_prev, threshold,
     x = dist.constrain(x, dist.act_spec())
     kind = cfg.ffn_kind(j)
     if kind == "moe":
-        x, sideband, s_prev, aux, plan_carry, cond_carry = _moe_apply_dist(
+        (x, sideband, s_prev, aux, plan_carry, cond_carry,
+         wire_ef) = _moe_apply_dist(
             p["moe"], x, sideband, s_prev, threshold, cfg, luffy, dist,
             moe_mode, capacity, plan_carry=plan_carry,
-            cond_carry=cond_carry)
+            cond_carry=cond_carry, wire_ef=wire_ef)
         x = dist.constrain(x, dist.act_spec())
     else:
         xn = bk.norm_apply(p["ffn_norm"], x, cfg.norm)
@@ -481,7 +496,7 @@ def _layer_full(p, cfg, luffy, dist, x, sideband, s_prev, threshold,
         else:
             x = x + bk.ffn_apply(p["ffn"], cfg, xn)
         aux = moe.MoEAux(*([jnp.float32(0.0)] * moe.N_AUX))
-    return x, sideband, s_prev, aux, plan_carry, cond_carry
+    return x, sideband, s_prev, aux, plan_carry, cond_carry, wire_ef
 
 
 # ---------------------------------------------------------------------------
@@ -567,11 +582,25 @@ def chunked_xent(params, cfg, x, labels, *, chunk: int = 512):
 # the train forward
 # ---------------------------------------------------------------------------
 
+def wire_ef_shape(cfg: ModelConfig, batch: int, seq_len: int):
+    """Shape of the cross-step wire error-feedback buffer (DESIGN.md
+    §15): one per-token residual slot per layer, grouped the way the
+    layer scan consumes it — ``(n_groups, period, B, S, d_model)``."""
+    period = pattern_period(cfg)
+    return (cfg.num_layers // period, period, batch, seq_len, cfg.d_model)
+
+
 def forward_train(params, cfg: ModelConfig, luffy: LuffyConfig,
                   dist: DistContext, batch: Dict[str, Array], threshold,
-                  capacity: int):
+                  capacity: int, wire_ef=None):
     """batch: tokens [B,S_tok], labels [B,S], seq_len [B],
-    (prefix [B,P,pd] for vlm/audio). Returns (loss, metrics)."""
+    (prefix [B,P,pd] for vlm/audio). Returns (loss, metrics).
+
+    ``wire_ef`` (optional, :func:`wire_ef_shape`): previous step's
+    per-layer wire quantization residuals. When given, each MoE layer
+    adds its slot to the shipped payload and the refreshed residuals
+    come back under ``metrics["_wire_ef"]`` for the caller to carry
+    into the next step (LuffyConfig.wire_error_feedback)."""
     period = pattern_period(cfg)
     prefix = batch.get("prefix")
     x = embed_tokens(params, cfg, batch["tokens"], prefix, dist=dist)
@@ -644,22 +673,28 @@ def forward_train(params, cfg: ModelConfig, luffy: LuffyConfig,
                "age": jnp.zeros((1,), jnp.float32),
                "valid": jnp.zeros((1,), jnp.float32)}
 
-    def group_body(carry, p_group):
+    use_ef = wire_ef is not None
+
+    def group_body(carry, p_group, efg=None):
         x, sb, sp, pc, cc, aux_sum = carry
+        ef_outs = []
         for j in range(period):
 
-            def apply_j(x, sb, sp, pc, cc, pj=p_group[j], jj=j):
+            def apply_j(x, sb, sp, pc, cc, ef, pj=p_group[j], jj=j):
                 return _layer_full(
                     pj, cfg, eff_luffy, dist, x, sb, sp, threshold,
                     jj, causal=cfg.causal, enc_out=enc_out,
                     enc_pos=enc_pos, moe_mode=moe_mode, capacity=capacity,
-                    plan_carry=pc, cond_carry=cc)
+                    plan_carry=pc, cond_carry=cc, wire_ef=ef)
 
             if cfg.remat:
                 apply_j = jax.checkpoint(apply_j)
-            x, sb, sp, aux, pc, cc = apply_j(x, sb, sp, pc, cc)
+            efj = efg[j] if efg is not None else None
+            x, sb, sp, aux, pc, cc, efo = apply_j(x, sb, sp, pc, cc, efj)
+            ef_outs.append(efo)
             aux_sum = jax.tree.map(lambda a, b: a + b, aux_sum, aux)
-        return (x, sb, sp, pc, cc, aux_sum), None
+        ef_stack = jnp.stack(ef_outs) if efg is not None else None
+        return (x, sb, sp, pc, cc, aux_sum), ef_stack
 
     aux0 = moe.MoEAux(*([jnp.float32(0.0)] * moe.N_AUX))
     n_groups = cfg.num_layers // period
@@ -668,23 +703,30 @@ def forward_train(params, cfg: ModelConfig, luffy: LuffyConfig,
     if s_prev0 is None:
         s_prev0 = jnp.zeros((1,), jnp.float32)  # dummy carried value
 
+    # error-feedback xs: the real buffer when enabled, else a structural
+    # dummy sliced and discarded (keeps the scan signature uniform)
+    ef_xs = wire_ef if use_ef else jnp.zeros((n_groups,), jnp.float32)
+
     def scan_body(carry, xs):
+        p_group, efg = xs
         (x, sb, sp, pc, cc, aux_sum) = carry
         sp_real = sp if use_cond else None
         pc_real = pc if use_reuse else None
         cc_real = cc if use_creuse else None
-        (x, sb, sp_new, pc_new, cc_new, aux_sum), _ = group_body(
-            (x, sb, sp_real, pc_real, cc_real, aux_sum), xs)
+        (x, sb, sp_new, pc_new, cc_new, aux_sum), ef_y = group_body(
+            (x, sb, sp_real, pc_real, cc_real, aux_sum), p_group,
+            efg if use_ef else None)
         if not use_cond:
             sp_new = sp
         if not use_reuse:
             pc_new = pc
         if not use_creuse:
             cc_new = cc
-        return (x, sb, sp_new, pc_new, cc_new, aux_sum), None
+        return (x, sb, sp_new, pc_new, cc_new, aux_sum), ef_y
 
-    (x, sideband, s_prev, _pc, _cc, aux_sum), _ = jax.lax.scan(
-        scan_body, (x, sideband, s_prev0, pc0, cc0, aux0), stacked)
+    (x, sideband, s_prev, _pc, _cc, aux_sum), ef_ys = jax.lax.scan(
+        scan_body, (x, sideband, s_prev0, pc0, cc0, aux0),
+        (stacked, ef_xs))
 
     sl, sc = chunked_xent(params, cfg, x, sideband["labels"])
     if dist.enabled:
@@ -720,6 +762,10 @@ def forward_train(params, cfg: ModelConfig, luffy: LuffyConfig,
         "condense_built": aux_sum.condense_built,
         "condense_reused": aux_sum.condense_reused,
     }
+    if use_ef:
+        # refreshed residual buffer for the caller to thread into the
+        # next step's forward (underscore: stripped before logging)
+        metrics["_wire_ef"] = ef_ys
     return total, metrics
 
 

@@ -22,9 +22,11 @@ launcher passes the set of flags the user actually typed).
 
 Pricing conventions (shared with the dryrun ``comm_ledger``):
 
-* the dedup wire (``comm_mode="hier"`` + ``hier_dedup="on"``, sync
-  exchange only — the executor's scope) ships the per-node-
-  deduplicated bytes; every other wire mode ships the flat payload;
+* the dedup wire (``comm_mode="hier"`` + ``hier_dedup="on"``,
+  universal across execution modes since DESIGN.md §15) ships the
+  per-node-deduplicated bytes; every other wire mode ships the flat
+  payload; pipelined dedup candidates price the chunked hop's
+  inter/intra phase overlap (``sched_cost.dedup_overlap_ms``);
 * ``exec_mode="sync"`` prices ``sched_cost.sync_ms``; a fixed positive
   chunk count prices ``overlap_ms`` at that count; ``pipeline_chunks
   <= 0`` (the "overlap"-objective planned search) prices
@@ -190,11 +192,14 @@ def candidate_grid(topo: Topology, *,
     """Every knob combination the fabric supports, defaults first.
 
     Structural constraints mirror the executors: ``comm_mode="hier"``
-    needs a hierarchical topology; ``hier_dedup="on"`` needs hier AND
-    the vanilla sync exchange (pipelined execution keeps the dense
-    wire, ``LuffyConfig.hier_dedup``); ``pipeline_chunks <= 0`` (the
-    planned search) is tied to ``plan_objective="overlap"`` exactly as
-    ``resolve_pipeline_chunks`` ties them for the launchers.
+    needs a hierarchical topology; ``hier_dedup="on"`` needs hier and
+    pairs with every TRAIN exec_mode (the dedup wire is universal
+    across sync/migrate/pipelined execution since DESIGN.md §15) but
+    never with ``decode_overlap`` — serving forces the wire off
+    (single-token decode has nothing to dedup and runs flat comm, see
+    ``launch/serve.py``); ``pipeline_chunks <= 0``
+    (the planned search) is tied to ``plan_objective="overlap"``
+    exactly as ``resolve_pipeline_chunks`` ties them for the launchers.
     """
     wire = [("flat", "off")]
     if topo.hierarchical:
@@ -217,8 +222,8 @@ def candidate_grid(topo: Topology, *,
     out: List[Dict[str, Any]] = []
     for cm, hd in wire:
         for em, obj, nc in execs:
-            if hd == "on" and em != "sync":
-                continue                            # dedup wire is sync-scope
+            if hd == "on" and em == "decode_overlap":
+                continue        # serving runs flat comm — no dedup wire
             for wd in wds:
                 for sb, bits in sims:
                     out.append({"comm_mode": cm, "hier_dedup": hd,
@@ -292,6 +297,21 @@ def modeled_step_components(knobs: Mapping[str, Any], *,
         # decode_overlap chunks/prices the build/execute exchange like
         # sync — it only reschedules the decode combine (decode_ms)
         chunks, exchange_ms = 1, sched_cost.sync_ms(topo, **kw)
+    elif dedup_wire:
+        # pipelined dedup wire (DESIGN.md §15): chunking the unique-row
+        # capacity lets the hop's intra-node fan-out / pre-reduce hide
+        # behind the next chunk's inter-node leg — price it with the
+        # same estimator the plan builder freezes (dedup_overlap_ms)
+        nc = int(knobs["pipeline_chunks"])
+        est_p = estimate_exchange(tokens, top_k, d_model, topo=topo,
+                                  r_cond=r_cond, num_layers=num_layers,
+                                  ffn_ms=ffn_ms,
+                                  chunks=nc if nc > 0 else None,
+                                  chunk_overhead_ms=overhead,
+                                  wire_dtype=knobs.get("wire_dtype",
+                                                       "f32"),
+                                  **est_kw)
+        chunks, exchange_ms = est_p.chunks, est_p.dedup_overlap_ms
     elif int(knobs["pipeline_chunks"]) > 0:
         chunks = int(knobs["pipeline_chunks"])
         exchange_ms = sched_cost.overlap_ms(topo, chunks, **kw)

@@ -37,7 +37,11 @@ METRICS_SCHEMA_VERSION = 1
 # section (combine/shared-FFN pricing + the decode_overlap speedup).
 # v5 adds the ``wire`` section (wire_dtype precision arithmetic,
 # DESIGN.md §14) and prices the bucket bytes at the run's wire dtype.
-COMM_LEDGER_SCHEMA_VERSION = 5
+# v6 extends ``wire`` with per-execution-mode shipped inter-node bytes
+# (``shipped_vanilla_bytes`` / ``shipped_migrate_bytes`` /
+# ``shipped_pipelined_bytes`` — equal by construction now the dedup
+# wire is universal, DESIGN.md §15).
+COMM_LEDGER_SCHEMA_VERSION = 6
 
 
 class MetricSpec(NamedTuple):

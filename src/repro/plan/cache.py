@@ -79,12 +79,18 @@ def plan_key(*, n_seq: int, seq_len: int, d_model: int, capacity: int,
     # quantization, DESIGN.md §14) — a dtype change must be a cache
     # MISS. The f32 default adds nothing so historical keys stay valid.
     wd_part = f"_wd{wire_dtype}" if wire_dtype != "f32" else ""
+    # The "replicate" objective freezes a replica placement into
+    # migrate-mode plans (DESIGN.md §15) — those must not share entries
+    # with replica-free plans. Empty otherwise, so historical keys
+    # (every objective shipped before replication) stay valid.
+    rep_part = ("_rep1" if (objective == "replicate" and mode == "migrate")
+                else "")
     return (f"b{n_seq}_s{seq_len}_d{d_model}_f{d_ff}_c{capacity}"
             f"_k{top_k}_e{num_experts}_{mode}_{objective}"
             f"_{exec_mode}{pipeline_chunks}_p{gpu_speed:.4g}"
             f"_{comm_mode}_{topology_fingerprint(topo, M)}"
             f"_{compute_dtype}_w{hier_dedup}_pv{params_version}"
-            f"{o_part}{wd_part}")
+            f"{o_part}{wd_part}{rep_part}")
 
 
 class PlanCache:
@@ -191,9 +197,10 @@ def build_plan_template(cfg: ModelConfig, luffy: LuffyConfig, *,
     pipelined, chunks, est = plan_static_schedule(
         cfg, luffy, topo, M, T, d, capacity, bytes_per_el=bytes_per_el,
         wire_dtype=wire_dtype)
-    # wire decision — same rule as build_exchange_plan (DESIGN.md §10)
+    # wire decision — same rule as build_exchange_plan (DESIGN.md §15:
+    # the dedup wire is universal, pipelined exchanges included)
     wire = ("dedup" if (luffy.hier_dedup == "on" and comm_mode == "hier"
-                        and not pipelined and M > 1) else "dense")
+                        and M > 1) else "dense")
     z = np.float32(0.0)
     zi = np.zeros((0,), np.int32)
     return ExchangePlan(

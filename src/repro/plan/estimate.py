@@ -43,6 +43,12 @@ class PlanEstimate(NamedTuple):
     sync_ms: float
     overlap_ms: float
     chunks: int
+    # pipelined *dedup* wire (DESIGN.md §15): the unique-row chunks let
+    # the hop's inter-node and intra-node phases overlap depth-2 within
+    # the dispatch/combine stages — strictly ≤ overlap_ms on
+    # hierarchical topologies. Defaulted so pre-§15 call sites and
+    # serialized estimates keep their shape.
+    dedup_overlap_ms: float = 0.0
 
     @property
     def speedup(self) -> float:
@@ -103,6 +109,18 @@ def estimate_exchange(tokens: int, top_k: int, d_model: int, *,
     else:
         n = max(1, int(chunks))
         t_pipe = sched_cost.overlap_ms(topo, n, **kw)
+    # pipelined dedup wire: price the hop phases separately so the
+    # intra-node fan-out / pre-reduce can hide behind the next chunk's
+    # inter-node hop (sched_cost.dedup_overlap_ms, DESIGN.md §15)
+    mi, me = comm_ledger.phase_messages(topo)
+    t_dedup = sched_cost.dedup_overlap_ms(
+        topo, n,
+        dispatch_inter_ms=(he / bw_e + me * topo.inter_lat) * 1e3,
+        dispatch_intra_ms=(hi / bw_i + mi * topo.intra_lat) * 1e3,
+        ffn_ms=ffn_ms,
+        combine_inter_ms=(ce / bw_e + me * topo.inter_lat) * 1e3,
+        combine_intra_ms=(ci / bw_i + mi * topo.intra_lat) * 1e3,
+        chunk_overhead_ms=chunk_overhead_ms)
     return PlanEstimate(
         intra_dispatch_bytes=hi, inter_dispatch_bytes=he,
         flat_intra_dispatch_bytes=fi, flat_inter_dispatch_bytes=fe,
@@ -110,7 +128,7 @@ def estimate_exchange(tokens: int, top_k: int, d_model: int, *,
         dispatch_ms=d_ms, combine_ms=c_ms,
         flat_dispatch_ms=phase_ms(fi, fe),
         ffn_ms=ffn_ms, sync_ms=sched_cost.sync_ms(topo, **kw),
-        overlap_ms=t_pipe, chunks=n)
+        overlap_ms=t_pipe, chunks=n, dedup_overlap_ms=t_dedup)
 
 
 # ---------------------------------------------------------------------------
@@ -145,6 +163,26 @@ def estimate_revalidate_ms(n_slots: int, M: int) -> float:
     price of reuse; orders of magnitude under a replan)."""
     return (REVALIDATE_US + REVALIDATE_PER_EL_US * n_slots * (M + 1)) \
         * 1e-3
+
+
+def replica_consistency_ms(n_replicas: int, d_model: int, d_ff: int, *,
+                           topo: Topology,
+                           bytes_per_el: int = 4) -> float:
+    """Per-step price of keeping ``n_replicas`` intra-node expert
+    replicas consistent (HierMoE-style replication, DESIGN.md §15).
+
+    Each replica costs, per step, the forward weight fan-in (the host
+    reads the owner's 3 FFN matrices over the intra-node links) plus
+    the gradient psum between replica and owner (2× the weight bytes
+    for the reduce+broadcast ring) — replicas are *always* intra-node,
+    so only the cheap links are priced. This is the cost side the
+    "replicate" planner objective weighs against the modeled hot-expert
+    serialization relief (``repro.plan.objectives.plan_expert_replicas``).
+    """
+    if topo is None or n_replicas <= 0:
+        return 0.0
+    w_bytes = 3.0 * float(d_model) * float(d_ff) * bytes_per_el
+    return n_replicas * 3.0 * w_bytes / topo.intra_bw * 1e3
 
 
 def estimate_similarity_ms(measured_pairs: float, d_model: int, *,

@@ -37,7 +37,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.comm import CommContext
+from repro.comm import CommContext, compat
 from repro.comm import dtypes as wdt
 from repro.comm import ledger as comm_ledger
 from repro.condense import plan as cplan
@@ -50,7 +50,8 @@ from repro.core.gating import GateOutput, dispatch_positions
 from repro.obs import trace as obs_trace
 from repro.plan import objectives
 from repro.plan.estimate import PlanEstimate, estimate_exchange
-from repro.sched import ChunkPlan, plan_chunks, run_pipeline
+from repro.sched import (ChunkPlan, plan_chunks, plan_unique_chunks,
+                         run_pipeline)
 from repro.sched.cost import resolve_chunk_overhead_ms
 
 Array = jnp.ndarray
@@ -74,8 +75,8 @@ class MoEAux(NamedTuple):
     traffic_before: Array     # plan ledger (link-cost-weighted tokens
     traffic_after: Array      # crossing devices, without/with migration)
     inter_bytes_flat: Array   # dispatch bytes a flat a2a ships across nodes
-    inter_bytes_dedup: Array  # modeled bytes after per-node dedup (hier
-                              # mode; the executed wire is still dense)
+    inter_bytes_dedup: Array  # modeled bytes after per-node dedup (what
+                              # the hier dedup wire ships, in every mode)
     plans_built: Array        # plan-reuse ledger (DESIGN.md §9): 1 when
     plans_reused: Array       # the full migration planner ran / when a
     reuse_mismatch: Array     # carried plan revalidated / when a carried
@@ -216,6 +217,17 @@ class ExchangePlan(NamedTuple):
     plans_built: Optional[Array] = None
     plans_reused: Optional[Array] = None
     reuse_mismatch: Optional[Array] = None
+    # -- expert replication (objective "replicate", DESIGN.md §15) ----------
+    # Frozen placement-cardinality decision: each device owns one extra
+    # dispatch lane that can serve a replica of an intra-node peer's hot
+    # expert. None (the default, and every other objective) = no lanes —
+    # the executor's dense layout is unchanged.
+    replica_src: Optional[Array] = None    # [M] int32 global expert id the
+                                           # device's replica lane serves
+                                           # (-1 = idle lane)
+    replica_valid: Optional[Array] = None  # [T, k] bool — overflow copies
+                                           # redirected to their expert's
+                                           # replica lane
 
     # historical accessors — the condensation map now lives in the
     # nested CondensePlan (kept so call sites and tests read naturally)
@@ -241,6 +253,9 @@ class ExchangeAux(NamedTuple):
     # condense-reuse state for the next sublayer (DESIGN.md §10):
     # {"rep" [n_seq,S], "cexp" [n_seq,S], "age" [n_seq], "valid" [n_seq]}
     # — migrated to the sequences' new homes alongside the sideband
+    wire_ef: Optional[Array] = None
+    # lossy-wire error-feedback residual for the next step (§15):
+    # [n_seq, S, d] f32, keyed by (slot, position), stop-gradded
 
 
 # ---------------------------------------------------------------------------
@@ -389,11 +404,60 @@ def build_exchange_plan(gate: GateOutput, xn: Array, cfg: ModelConfig,
         cfg, luffy, topo, M, T, d, C,
         bytes_per_el=jnp.dtype(cdt).itemsize, wire_dtype=wire_dtype)
 
+    # ---- wire format (DESIGN.md §10, §15) --------------------------------
+    # universal: the dedup wire now applies in EVERY mode — migrate-mode
+    # combine re-addresses through the dest-keyed map and pipelined
+    # execution chunks the unique-row capacity (§15), so only the comm
+    # strategy gates it
+    wire = ("dedup" if (luffy.hier_dedup == "on" and comm.mode == "hier"
+                        and M > 1) else "dense")
+
+    # ---- hot-expert replication (objective "replicate", DESIGN.md §15) ---
+    # HierMoE-style placement cardinality: replicate each node's hottest
+    # expert onto an intra-node peer's spare dispatch lane when the
+    # modeled serialization relief beats the replica-consistency psum.
+    # The dedup wire takes precedence (its unique-row packing already
+    # removes the duplicate bytes the replica would shortcut); the
+    # migration half of the objective still runs below.
+    replica_src = replica_valid = None
+    lane = (luffy.plan_objective == "replicate" and mode == "migrate"
+            and luffy.enable_migration and M > 1 and wire == "dense"
+            and topo is not None and topo.hierarchical
+            and topo.devices_per_node > 1)
+    if lane:
+        ohe = jax.nn.one_hot(expert_idx, E, dtype=jnp.float32) \
+            * keep[..., None].astype(jnp.float32)
+        # demand per expert (pre-drop: replication exists to relieve the
+        # overflow the capacity bound is about to drop), psum-replicated
+        # so every device freezes the SAME placement
+        load_e = jax.lax.psum(ohe.sum((0, 1)), comm.axis_name)    # [E]
+        replica_src = objectives.plan_expert_replicas(
+            load_e, e_local=E_local, topo=topo,
+            ffn_ms=(0.0 if est is None else est.ffn_ms),
+            d_model=d, d_ff=m.d_ff,
+            bytes_per_el=jnp.dtype(cdt).itemsize)
+        host_of = jnp.full((E,), -1, jnp.int32).at[
+            jnp.where(replica_src >= 0, replica_src, 0)].max(
+            jnp.where(replica_src >= 0,
+                      jnp.arange(M, dtype=jnp.int32), -1), mode="drop")
+        # redirect rule: first-overflow copies (C <= pos < 2C) of a
+        # replicated expert take slot pos - C on the host's replica lane
+        # — strictly fewer drops; rows with pos < C are untouched, so
+        # the lane-less layout is bit-identical where it was valid
+        replica_valid = keep & (pos >= C) & (pos < 2 * C) \
+            & (host_of[expert_idx] >= 0)
+        d_drop = 1.0 - (jnp.sum(valid.astype(jnp.float32))
+                        + jnp.sum(replica_valid.astype(jnp.float32))) \
+            / jnp.maximum(kept, 1.0)
+
     # ---- inter-node traffic ledger (DESIGN.md §5) ------------------------
+    # redirected replica rows count too: the host sits on the owner's
+    # node, so expert_idx still keys the destination node correctly
+    v_ledger = valid if replica_valid is None else (valid | replica_valid)
     if topo is not None and topo.hierarchical and M > 1:
         row_bytes = float((d + 2) * jnp.dtype(cdt).itemsize)
         ib_flat, ib_dedup = comm_ledger.dispatch_node_ledger(
-            expert_idx, valid, my, e_local=E_local, topo=topo,
+            expert_idx, v_ledger, my, e_local=E_local, topo=topo,
             row_bytes=row_bytes)
         if comm.mode != "hier":
             ib_dedup = ib_flat      # the flat path ships every copy
@@ -500,14 +564,6 @@ def build_exchange_plan(gate: GateOutput, xn: Array, cfg: ModelConfig,
         # single device): an invalid signature that never revalidates
         sig_out = invalid_signature(M * n_seq, M)
 
-    # ---- wire format (DESIGN.md §10) -------------------------------------
-    # the dedup wire applies to the vanilla sync hier exchange; migrate-
-    # mode combine is re-addressed to new homes and pipelined execution
-    # chunks the dense capacity — both keep the dense wire
-    wire = ("dedup" if (luffy.hier_dedup == "on" and comm.mode == "hier"
-                        and not migrate and not pipelined and M > 1)
-            else "dense")
-
     return ExchangePlan(
         mode=mode, migrate=migrate, condense=do_condense,
         pipelined=pipelined, capacity=C, chunks=chunks, comm=comm,
@@ -520,7 +576,8 @@ def build_exchange_plan(gate: GateOutput, xn: Array, cfg: ModelConfig,
         dest_global=dest_global, traffic_before=t_before,
         traffic_after=t_after, inter_bytes_flat=ib_flat,
         inter_bytes_dedup=ib_dedup, signature=sig_out,
-        plans_built=built, plans_reused=reused, reuse_mismatch=mismatch)
+        plans_built=built, plans_reused=reused, reuse_mismatch=mismatch,
+        replica_src=replica_src, replica_valid=replica_valid)
 
 
 # ---------------------------------------------------------------------------
@@ -528,7 +585,8 @@ def build_exchange_plan(gate: GateOutput, xn: Array, cfg: ModelConfig,
 # ---------------------------------------------------------------------------
 
 def execute_plan(params, x: Array, sideband: Dict[str, Array],
-                 plan: ExchangePlan, cfg: ModelConfig
+                 plan: ExchangePlan, cfg: ModelConfig, *,
+                 wire_ef: Optional[Array] = None
                  ) -> Tuple[Array, ExchangeAux]:
     """Move the bytes the plan prescribes: pack dispatch buffers, run the
     (optionally pipelined) dispatch → expert FFN → combine exchange,
@@ -539,6 +597,16 @@ def execute_plan(params, x: Array, sideband: Dict[str, Array],
     x: [n_seq, S, d] pre-norm hidden. Returns ``(y, ExchangeAux)``; in
     vanilla mode ``y = x + moe_delta``, in migrate mode ``y`` is the full
     post-block hidden materialized at *new* slots.
+
+    ``wire_ef`` (DESIGN.md §15): the carried positional error-feedback
+    residual for a lossy wire, [n_seq, S, d] f32. It is added to the
+    *shipped payload only* — the residual connection, the router and
+    the aux ledger all keep the exact hidden — and the new residual
+    ``payload - dequant(quant(payload))`` is returned on
+    ``ExchangeAux.wire_ef`` for the caller to carry into the NEXT
+    step's payload at the same (slot, position). Quantization is
+    per-row, so the token-major residual computed here equals the
+    residual of every shipped copy of that row.
     """
     from repro.models.blocks import _act, _dtype
     m = cfg.moe
@@ -561,6 +629,23 @@ def execute_plan(params, x: Array, sideband: Dict[str, Array],
     dest_global = plan.dest_global
 
     xf = x.reshape(T, d)
+
+    # ---- lossy-wire error feedback (DESIGN.md §15) -----------------------
+    # x_pay is what the dispatch buffers carry; xf stays exact for the
+    # residual connection. The new residual is stop-gradded state, not a
+    # differentiable path.
+    x_pay = xf
+    ef_next = None
+    if wire_ef is not None:
+        x_pay = xf + wire_ef.reshape(T, d).astype(xf.dtype)
+        if plan.wire_dtype != "f32" and M > 1:
+            pc = x_pay.astype(cdt)
+            q_ef, sc_ef = wdt.quantize_rows(pc, plan.wire_dtype)
+            deq_ef = wdt.dequantize_rows(q_ef, sc_ef, cdt, d)
+            ef_next = jax.lax.stop_gradient(
+                (pc - deq_ef).astype(jnp.float32).reshape(n_seq, S, d))
+        else:       # exact wire (or nothing crosses it): residual dies
+            ef_next = jnp.zeros((n_seq, S, d), jnp.float32)
 
     def _finish(y_tok, new_sideband, s_next, c_drop, local_frac, shipped):
         """Shared executor tail: un-condense (token_to_token, §VI), the
@@ -633,16 +718,37 @@ def execute_plan(params, x: Array, sideband: Dict[str, Array],
                           "cexp": cexp_sb, "age": age_sb,
                           "valid": valid_sb}
         return y_out, ExchangeAux(sideband=new_sideband, s_next=s_next,
-                                  moe=aux, cond_carry=cond_carry)
+                                  moe=aux, cond_carry=cond_carry,
+                                  wire_ef=ef_next)
 
-    # ---- deduplicated hier wire (DESIGN.md §10, §14) ---------------------
+    # ---- deduplicated hier wire (DESIGN.md §10, §14, §15) ----------------
+    # universal: vanilla, migrate (dest-keyed combine) and pipelined
+    # (unique-row chunking) all run the dedup wire now
     if plan.wire == "dedup":
-        assert not migrate and not plan.pipelined, (plan.mode, plan.wire)
+        assert plan.replica_src is None, plan.objective
+        dchunks = None
+        if plan.pipelined:
+            L_loc = compat.axis_size(comm.local_axis)
+            dchunks = plan_unique_chunks(
+                cwire.dedup_capacity(T, E_local, L_loc, C),
+                plan.chunks.n_chunks)
+        dest_gpos = prim_tk = None
+        if migrate:
+            # each copy's destination global position in the migrated
+            # frame: dest device × T + position within it — the plane
+            # dedup_combine_migrate re-addresses the combine through
+            tok_ids = jnp.arange(T, dtype=jnp.int32)
+            dslot_g = dest_global[tok_ids // S]
+            dest_gpos = ((dslot_g // n_seq) * T
+                         + (dslot_g % n_seq) * S + (tok_ids % S))
+            prim_tk = jnp.broadcast_to(
+                (jnp.arange(m.top_k) == 0)[None, :], (T, m.top_k))
         with obs_trace.phase("dispatch") as _sp:
             x_rows, gw_rows, rvalid, wstate = cwire.dedup_dispatch(
-                xf.astype(cdt), expert_idx, gate_w, valid, pos,
+                x_pay.astype(cdt), expert_idx, gate_w, valid, pos,
                 comm=comm, e_local=E_local, capacity=C,
-                wire_dtype=plan.wire_dtype, use_kernel=use_kernel)
+                wire_dtype=plan.wire_dtype, use_kernel=use_kernel,
+                dest_gpos=dest_gpos, prim=prim_tk, chunks=dchunks)
             x_rows = _sp.fence(x_rows)
         with obs_trace.phase("expert_ffn") as _sp:
             h = _rms(x_rows, params["norm"]["scale"]).astype(cdt)
@@ -652,23 +758,59 @@ def execute_plan(params, x: Array, sideband: Dict[str, Array],
                                 ).reshape(E_local, M, C, d)
             y_rows = _sp.fence(y_rows)
         with obs_trace.phase("combine") as _sp:
-            delta = cwire.dedup_combine(y_rows * gw_rows[..., None],
-                                        wstate, comm=comm,
-                                        wire_dtype=plan.wire_dtype)
-            y_tok = xf + delta.astype(xf.dtype)
+            if not migrate:
+                delta = cwire.dedup_combine(y_rows * gw_rows[..., None],
+                                            wstate, comm=comm,
+                                            wire_dtype=plan.wire_dtype,
+                                            chunks=dchunks)
+                y_tok = xf + delta.astype(xf.dtype)
+                c_drop = jnp.float32(0.0)
+                local_frac = jnp.float32(1.0 / M)
+                new_sideband = dict(sideband)
+            else:
+                # gate-weighted + the primary copy's residual: the
+                # dest-keyed combine materializes the post-block hidden
+                # at NEW slots (no drop path — the migration perm is a
+                # bijection, every destination receives exactly T rows)
+                out_rows = (y_rows * gw_rows[..., None]
+                            + x_rows * wstate["prim"][..., None])
+                mchunks = (plan_unique_chunks(T, plan.chunks.n_chunks)
+                           if plan.pipelined else None)
+                y_mig = cwire.dedup_combine_migrate(
+                    out_rows, wstate, comm=comm,
+                    wire_dtype=plan.wire_dtype, chunks=mchunks)
+                y_tok = y_mig.astype(xf.dtype)
+                c_drop = jnp.float32(0.0)
+                dd_rows = jnp.where(wstate["dgpos"] >= 0,
+                                    wstate["dgpos"] // T, -1)
+                local_frac = (jnp.sum((dd_rows == my).astype(jnp.float32))
+                              / jnp.maximum(
+                                  jnp.sum(rvalid.astype(jnp.float32)),
+                                  1.0))
+                new_sideband = _exchange_sideband(
+                    sideband, dest_global, n_seq, M, comm)
             y_tok = _sp.fence(y_tok)
         # executed wire accounting: unique rows × the wire row bytes —
         # the same wire_row_bytes the estimate divides by, so
         # shipped == inter_bytes_dedup / precision == flat / (dedup ×
-        # precision) exactly (the §14 ledger contract)
+        # precision) exactly (the §14 ledger contract; dispatch is
+        # mode-independent, so the law holds in all three modes)
         row_bytes = wdt.wire_row_bytes(d, plan.wire_dtype,
                                        jnp.dtype(cdt).itemsize)
-        return _finish(y_tok, dict(sideband), s_next,
-                       jnp.float32(0.0), jnp.float32(1.0 / M),
+        return _finish(y_tok, new_sideband, s_next,
+                       c_drop, local_frac,
                        wstate["shipped_rows"] * jnp.float32(row_bytes))
 
     # ---- build dispatch buffers ------------------------------------------
     # payload row: [x_raw(d), gate_w, is_primary]; meta: (dest_slot+1, pos)
+    # Replica lanes (objective "replicate", §15): each device's buffer
+    # grows one lane (row index [M, n_lanes] flattened); first-overflow
+    # copies of a replicated expert redirect to the HOST device's lane
+    # at slot pos - C. n_lanes == E_local (no lanes) leaves row == e_f,
+    # the historical layout, bit-for-bit.
+    has_lane = plan.replica_src is not None
+    n_lanes = E_local + (1 if has_lane else 0)
+    R_rows = M * n_lanes
     is_primary = (jnp.arange(m.top_k) == 0)[None, :]          # [1,k]
     tok_slot = jnp.tile((jnp.arange(T, dtype=jnp.int32) // S)[:, None],
                         (1, m.top_k))                         # local seq slot
@@ -679,23 +821,54 @@ def execute_plan(params, x: Array, sideband: Dict[str, Array],
     e_f = expert_idx.reshape(-1)
     p_f = pos.reshape(-1)
     v_f = valid.reshape(-1)
+    row_f = (e_f // E_local) * n_lanes + (e_f % E_local)
+    if has_lane:
+        rep_src = plan.replica_src
+        host_of = jnp.full((E,), -1, jnp.int32).at[
+            jnp.where(rep_src >= 0, rep_src, 0)].max(
+            jnp.where(rep_src >= 0, jnp.arange(M, dtype=jnp.int32), -1),
+            mode="drop")
+        rv_f = plan.replica_valid.reshape(-1)
+        host_row = host_of[jnp.where(rv_f, e_f, 0)] * n_lanes + E_local
+        row_f = jnp.where(rv_f, host_row, row_f)
+        p_f = jnp.where(rv_f, p_f - C, p_f)
+        v_f = v_f | rv_f
     payload = jnp.concatenate([
-        jnp.tile(xf.astype(cdt)[:, None], (1, m.top_k, 1)),
+        jnp.tile(x_pay.astype(cdt)[:, None], (1, m.top_k, 1)),
         gate_w[..., None].astype(cdt),
         jnp.broadcast_to(is_primary, (T, m.top_k))[..., None].astype(cdt),
     ], axis=-1).reshape(-1, d + 2)                            # [T*k, d+2]
     meta = jnp.stack([dest_of_tok + 1, tok_pos], -1).reshape(-1, 2)
 
     with obs_trace.phase("dispatch_pack") as _sp:
-        buf = jnp.zeros((E, C, d + 2), cdt)
-        mbuf = jnp.zeros((E, C, 2), jnp.int32)
+        buf = jnp.zeros((R_rows, C, d + 2), cdt)
+        mbuf = jnp.zeros((R_rows, C, 2), jnp.int32)
         p_safe = jnp.where(v_f, p_f, 0)
-        e_safe = jnp.where(v_f, e_f, 0)
-        buf = buf.at[e_safe, p_safe].add(
+        r_safe = jnp.where(v_f, row_f, 0)
+        buf = buf.at[r_safe, p_safe].add(
             payload * v_f[:, None].astype(cdt), mode="drop")
-        mbuf = mbuf.at[e_safe, p_safe].add(
+        mbuf = mbuf.at[r_safe, p_safe].add(
             meta * v_f[:, None].astype(jnp.int32), mode="drop")
         buf = _sp.fence(buf)
+
+    # replica-lane expert weights: the lane serves replica_src[my],
+    # fetched from its intra-node owner over the cheap links (the
+    # forward fan-in replica_consistency_ms prices); an idle lane gets
+    # zero weights, so its (empty) rows produce exact zeros
+    ew = params["experts"]
+    if has_lane:
+        L_loc = compat.axis_size(comm.local_axis)
+        src = plan.replica_src[my]
+        src_safe = jnp.maximum(src, 0)
+        owner_row = (src_safe // E_local) % L_loc * E_local \
+            + src_safe % E_local
+        live = (src >= 0).astype(cdt)
+
+        def _lane_w(wk):
+            return comm.local_all_gather(wk)[owner_row] * live
+
+        ew = {k: jnp.concatenate([ew[k], _lane_w(ew[k])[None]], axis=0)
+              for k in ("w_up", "w_gate", "w_down")}
 
     # ---- dispatch → expert FFN → (vanilla) combine ------------------------
     # plan.pipelined chunks the static capacity dim and runs the
@@ -706,15 +879,16 @@ def execute_plan(params, x: Array, sideband: Dict[str, Array],
     # in the sync layout before any order-sensitive step (the migrate-mode
     # regroup sorts across ALL rows, so it stays a post-pipeline barrier).
     def _ffn_rows(rows_k):
-        """rows_k: [E_local, M, Ck, d+2] -> (out, prim) same leading dims."""
+        """rows_k: [n_lanes, M, Ck, d+2] -> (out, prim) same leading dims
+        (lane n_lanes-1, when present, runs the replica's weights)."""
         xr = rows_k[..., :d]
         gw = rows_k[..., d:d + 1]
         prim_k = rows_k[..., d + 1:d + 2]
         ck = rows_k.shape[2]
         h = _rms(xr, params["norm"]["scale"]).astype(cdt)
-        y = expert_ffn(params["experts"], h.reshape(E_local, M * ck, d),
+        y = expert_ffn(ew, h.reshape(n_lanes, M * ck, d),
                        act, cdt, use_kernel=use_kernel) \
-            .reshape(E_local, M, ck, d)
+            .reshape(n_lanes, M, ck, d)
         out_k = y * gw
         if migrate:
             out_k = out_k + xr * prim_k    # primary copy carries residual
@@ -739,35 +913,35 @@ def execute_plan(params, x: Array, sideband: Dict[str, Array],
         def _compute(k, payload):
             bk, mk = payload if migrate else (payload, None)
             s = cplan.sizes[k]
-            rows_k = bk.reshape(M, E_local, s, d + 2).transpose(1, 0, 2, 3)
+            rows_k = bk.reshape(M, n_lanes, s, d + 2).transpose(1, 0, 2, 3)
             if not migrate:
                 return _ffn_rows(rows_k)
-            meta_k = mk.reshape(M, E_local, s, 2).transpose(1, 0, 2, 3)
+            meta_k = mk.reshape(M, n_lanes, s, 2).transpose(1, 0, 2, 3)
             return _ffn_rows(rows_k) + (meta_k,)
 
         with obs_trace.phase("pipeline_exchange") as _psp:
             if not migrate:
                 def _comb(k, res):
-                    out_k = res[0]             # [E_local, M, Ck, d]
+                    out_k = res[0]             # [n_lanes, M, Ck, d]
                     back_k = out_k.transpose(1, 0, 2, 3) \
-                                  .reshape(E, out_k.shape[2], d)
+                                  .reshape(R_rows, out_k.shape[2], d)
                     return cwire.ship_rows(comm.combine, back_k, d,
                                            plan.wire_dtype)
 
                 _, backs = run_pipeline(cplan.n_chunks, dispatch=_disp,
                                         compute=_compute, combine=_comb)
-                back = jnp.concatenate(backs, axis=1)        # [E, C, d]
+                back = jnp.concatenate(backs, axis=1)        # [R_rows, C, d]
                 back = _psp.fence(back)
             else:
                 outs, _ = run_pipeline(cplan.n_chunks, dispatch=_disp,
                                        compute=_compute)
                 out_rows = jnp.concatenate([o for o, _, _ in outs],
                                            axis=2) \
-                              .reshape(E_local, M * C, d)
+                              .reshape(n_lanes, M * C, d)
                 prim = jnp.concatenate([p for _, p, _ in outs], axis=2) \
-                          .reshape(E_local, M * C, 1)
+                          .reshape(n_lanes, M * C, 1)
                 rmeta = jnp.concatenate([m for _, _, m in outs], axis=2) \
-                           .reshape(E_local, M * C, 2)
+                           .reshape(n_lanes, M * C, 2)
                 out_rows = _psp.fence(out_rows)
     else:
         with obs_trace.phase("dispatch") as _sp:
@@ -777,20 +951,20 @@ def execute_plan(params, x: Array, sideband: Dict[str, Array],
                 buf = cwire.ship_rows(comm.all_to_all, buf, d,
                                       plan.wire_dtype)
                 mbuf = comm.all_to_all(mbuf)
-            # [M_src * E_local, C, .] -> [E_local, M_src, C, .]
-            rows4 = buf.reshape(M, E_local, C, d + 2).transpose(1, 0, 2, 3)
-            rmeta = mbuf.reshape(M, E_local, C, 2).transpose(1, 0, 2, 3) \
-                        .reshape(E_local, M * C, 2)
+            # [M_src * n_lanes, C, .] -> [n_lanes, M_src, C, .]
+            rows4 = buf.reshape(M, n_lanes, C, d + 2).transpose(1, 0, 2, 3)
+            rmeta = mbuf.reshape(M, n_lanes, C, 2).transpose(1, 0, 2, 3) \
+                        .reshape(n_lanes, M * C, 2)
             rows4 = _sp.fence(rows4)
         with obs_trace.phase("expert_ffn") as _sp:
             out4, prim4 = _ffn_rows(rows4)
             out4 = _sp.fence(out4)
-        out_rows = out4.reshape(E_local, M * C, d)
-        prim = prim4.reshape(E_local, M * C, 1)
+        out_rows = out4.reshape(n_lanes, M * C, d)
+        prim = prim4.reshape(n_lanes, M * C, 1)
         if not migrate:
             with obs_trace.phase("combine") as _sp:
-                back = out_rows.reshape(E_local, M, C, d) \
-                               .transpose(1, 0, 2, 3).reshape(E, C, d)
+                back = out_rows.reshape(n_lanes, M, C, d) \
+                               .transpose(1, 0, 2, 3).reshape(R_rows, C, d)
                 if M > 1:
                     back = cwire.ship_rows(comm.combine, back, d,
                                            plan.wire_dtype)
@@ -798,8 +972,10 @@ def execute_plan(params, x: Array, sideband: Dict[str, Array],
 
     # ---- combine ----------------------------------------------------------
     if not migrate:
-        # vanilla: rows returned to their source in dispatch layout
-        vals = back[e_safe, p_safe] * v_f[:, None].astype(cdt)  # [T*k, d]
+        # vanilla: rows returned to their source in dispatch layout —
+        # replica copies merge in the same fixed per-copy k-order sum
+        # as owner copies (the deterministic replica-merge order)
+        vals = back[r_safe, p_safe] * v_f[:, None].astype(cdt)  # [T*k, d]
         delta = jnp.sum(vals.reshape(T, m.top_k, d), axis=1)
         y_tok = xf + delta.astype(xf.dtype)
         c_drop = jnp.float32(0.0)
@@ -807,7 +983,7 @@ def execute_plan(params, x: Array, sideband: Dict[str, Array],
         new_sideband = dict(sideband)
     else:
         # regroup rows by destination device (priority: residual rows first)
-        R = E_local * M * C
+        R = n_lanes * M * C
         o_f = out_rows.reshape(R, d)
         dslot = rmeta[..., 0].reshape(R) - 1               # -1 = empty row
         rpos = rmeta[..., 1].reshape(R)
@@ -819,7 +995,7 @@ def execute_plan(params, x: Array, sideband: Dict[str, Array],
         o_f, dslot, rpos, ddev, rvalid = (a[order] for a in
                                           (o_f, dslot, rpos, ddev, rvalid))
         C_comb = max(8, int(math.ceil(
-            plan.combine_slack * E_local * C / 8)) * 8)
+            plan.combine_slack * n_lanes * C / 8)) * 8)
         oh = jax.nn.one_hot(ddev, M, dtype=jnp.int32)
         rank = (jnp.cumsum(oh, axis=0) - oh)[jnp.arange(R), jnp.where(
             rvalid, ddev, 0)]

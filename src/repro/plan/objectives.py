@@ -262,3 +262,85 @@ def overlap_objective(counts, seq_lens, n_per_dev: int, *,
     t_cand = plan_exposed_ms(counts, cand.assign, ctx)
     t_base = plan_exposed_ms(counts, base.assign, ctx)
     return _select_plan(t_cand < t_base, cand, base)
+
+
+# ---------------------------------------------------------------------------
+# expert replication (objective "replicate", DESIGN.md §15)
+# ---------------------------------------------------------------------------
+
+# Minimum hot-expert demand, as a multiple of the mean per-expert
+# demand, before a replica is even considered: below 2× the migration
+# planner can hide the skew by re-homing sequences, and a replica would
+# pay its consistency psum for noise.
+REPLICATE_SKEW_MIN = 2.0
+
+
+@register_objective("replicate")
+def replicate_objective(counts, seq_lens, n_per_dev: int, *,
+                        ctx: ObjectiveContext, q: int = 3,
+                        d_model: int = 1024,
+                        speed: float = 1e13) -> mig.MigrationPlan:
+    """HierMoE-style expert replication (DESIGN.md §15).
+
+    The *migration* half is ``"traffic"`` verbatim — sequence
+    re-homing under this objective is bit-identical to the historical
+    planner. What the objective adds is **placement cardinality**:
+    :func:`plan_expert_replicas` (called by ``build_exchange_plan``
+    after migration planning) replicates each node's hottest expert
+    onto an intra-node peer's spare dispatch lane when the modeled
+    hot-expert serialization relief exceeds the replica-consistency
+    psum (``repro.plan.estimate.replica_consistency_ms``). Replicas are
+    strictly gated on modeled gain and the migration plan is traffic's
+    own, so under the modeled exposed-time cost a "replicate" plan is
+    never worse than "traffic". When the dedup wire is active the
+    builder skips replica planning (the unique-row packing already
+    removes the duplicate bytes) and this objective degrades to exactly
+    "traffic".
+    """
+    return traffic_objective(counts, seq_lens, n_per_dev, ctx=ctx, q=q,
+                             d_model=d_model, speed=speed)
+
+
+def plan_expert_replicas(load_e, *, e_local: int, topo: Topology,
+                         ffn_ms: float, d_model: int, d_ff: int,
+                         bytes_per_el: int = 4):
+    """Freeze the replica placement: ``[M] int32`` — the global expert
+    id each device's replica lane serves, -1 for an idle lane.
+
+    Per node: find the hottest locally-owned expert; replicate it onto
+    the owner's next intra-node peer (``(owner + 1) mod L`` within the
+    node — deterministic, vectorized, no host sync) iff BOTH
+
+    * its demand is ≥ ``REPLICATE_SKEW_MIN ×`` the mean per-expert
+      demand (skew migration alone can't hide — re-homing sequences
+      moves *whole rows of demand*, it cannot split one expert's), and
+    * the modeled serialization relief — halving the hot expert's share
+      of the FFN stage, ``ffn_ms · (load / total) / 2`` — exceeds the
+      per-step replica-consistency cost
+      (:func:`repro.plan.estimate.replica_consistency_ms`).
+
+    ``load_e`` is the psum-replicated per-expert demand, so every
+    device freezes the same placement. Traceable.
+    """
+    from repro.plan.estimate import replica_consistency_ms
+    E = load_e.shape[0]
+    M = E // e_local
+    L = topo.devices_per_node
+    N = topo.num_nodes
+    assert M == N * L, (M, N, L)
+    per_node = load_e.reshape(N, L * e_local)
+    hot_rel = jnp.argmax(per_node, axis=1).astype(jnp.int32)    # [N]
+    hot_load = jnp.max(per_node, axis=1)                        # [N]
+    hot_e = jnp.arange(N, dtype=jnp.int32) * (L * e_local) + hot_rel
+    total = jnp.maximum(jnp.sum(load_e), 1.0)
+    mean = total / E
+    relief_ms = ffn_ms * (hot_load / total) / 2.0
+    cost_ms = replica_consistency_ms(1, d_model, d_ff, topo=topo,
+                                     bytes_per_el=bytes_per_el)
+    take = (hot_load >= REPLICATE_SKEW_MIN * mean) \
+        & (relief_ms > cost_ms)                                 # [N]
+    owner = hot_e // e_local
+    node_base = jnp.arange(N, dtype=jnp.int32) * L
+    host = node_base + (owner - node_base + 1) % L              # [N]
+    return jnp.full((M,), -1, jnp.int32).at[host].set(
+        jnp.where(take, hot_e, -1))

@@ -46,7 +46,12 @@ MAGIC = b"LFPL"
 # (the f8 sideband's elements-per-scale — a reader must not guess the
 # block size the scales were computed at). v2 blobs raise
 # PlanFormatError and are rebuilt.
-FORMAT_VERSION = 3
+# v4 (ISSUE 10): the array manifest gained the optional "replica_src"
+# / "replica_valid" fields (hot-expert replica placement frozen into
+# the plan by the "replicate" objective, DESIGN.md §15) and the header
+# "estimate" gained "dedup_overlap_ms". v3 blobs raise PlanFormatError
+# and are rebuilt.
+FORMAT_VERSION = 4
 
 # ExchangePlan array fields in serialization order. Optional array
 # fields (may be None on a given plan) are marked in the header.
@@ -55,6 +60,7 @@ _ARRAY_FIELDS = (
     "dispatch_drop", "dest_global",
     "traffic_before", "traffic_after", "inter_bytes_flat",
     "inter_bytes_dedup", "plans_built", "plans_reused", "reuse_mismatch",
+    "replica_src", "replica_valid",
 )
 _SIG_FIELDS = ("counts", "lens", "valid")
 # nested CondensePlan arrays ("condense.<field>"); optionals marked in

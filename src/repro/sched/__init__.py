@@ -15,12 +15,14 @@ the capacity dimension of the dispatch buffers commutes with the
 ``LuffyConfig.exec_mode="pipeline"`` is bit-identical to ``"sync"``
 (tested per {migration, condensation} × {flat, hier} combination).
 """
-from repro.sched.cost import optimal_chunks, overlap_ms, sync_ms
+from repro.sched.cost import (dedup_overlap_ms, optimal_chunks, overlap_ms,
+                              sync_ms)
 from repro.sched.pipeline import (format_schedule, pipeline_schedule,
                                   run_pipeline)
-from repro.sched.plan import ChunkPlan, plan_chunks
+from repro.sched.plan import ChunkPlan, plan_chunks, plan_unique_chunks
 
 __all__ = [
-    "ChunkPlan", "format_schedule", "optimal_chunks", "overlap_ms",
-    "pipeline_schedule", "plan_chunks", "run_pipeline", "sync_ms",
+    "ChunkPlan", "dedup_overlap_ms", "format_schedule", "optimal_chunks",
+    "overlap_ms", "pipeline_schedule", "plan_chunks", "plan_unique_chunks",
+    "run_pipeline", "sync_ms",
 ]

@@ -59,6 +59,37 @@ def overlap_ms(topo: Topology, chunks: int, *, dispatch_ms: float,
     return d + f + c + (n - 1) * max(d, f, c)
 
 
+def dedup_overlap_ms(topo: Topology, chunks: int, *,
+                     dispatch_inter_ms: float, dispatch_intra_ms: float,
+                     ffn_ms: float, combine_inter_ms: float = 0.0,
+                     combine_intra_ms: float = 0.0,
+                     chunk_overhead_ms: float = DEFAULT_CHUNK_OVERHEAD_MS
+                     ) -> float:
+    """Modeled MoE-sublayer time (ms) for the *pipelined dedup wire*
+    (DESIGN.md §15).
+
+    The dedup wire's dispatch and combine each have two phases — the
+    expensive inter-node unique-row hop and the cheap intra-node
+    fan-out / pre-reduce — and chunking the unique-row capacity lets
+    those phases overlap depth-2 *within* the stage: chunk k's
+    fan-out runs on the cheap links while chunk k+1's node hop flies.
+    The dense wire cannot express this — its single all-to-all has no
+    phase boundary to split. Steady-state per-chunk stage cost is
+    therefore ``max(inter, intra)/n + o`` instead of their sum; the
+    minor phase of each hop is paid once at pipeline fill. ``n = 1``
+    degenerates exactly to :func:`sync_ms` with the phase sums.
+    """
+    n = max(1, int(chunks))
+    o = chunk_overhead_ms + chunk_latency_s(topo) * 1e3
+    d = max(dispatch_inter_ms, dispatch_intra_ms) / n + o
+    has_c = (combine_inter_ms + combine_intra_ms) > 0.0
+    c = (max(combine_inter_ms, combine_intra_ms) / n + o) if has_c else 0.0
+    f = ffn_ms / n
+    fill = (min(dispatch_inter_ms, dispatch_intra_ms)
+            + min(combine_inter_ms, combine_intra_ms)) / n
+    return d + f + c + fill + (n - 1) * max(d, f, c)
+
+
 def sync_ms(topo: Topology, *, dispatch_ms: float, ffn_ms: float,
             combine_ms: float = 0.0,
             chunk_overhead_ms: float = DEFAULT_CHUNK_OVERHEAD_MS) -> float:

@@ -58,3 +58,20 @@ def plan_chunks(capacity: int, n_chunks: int, *, align: int = ALIGN
     base, rem = divmod(units, n)
     sizes = tuple((base + (1 if i < rem else 0)) * align for i in range(n))
     return ChunkPlan(capacity, sizes)
+
+
+def plan_unique_chunks(unique_capacity: int, n_chunks: int) -> ChunkPlan:
+    """:class:`ChunkPlan` over the dedup wire's *unique-row* capacity
+    (DESIGN.md §15).
+
+    The pipelined dedup wire chunks the ``[N, C_u, d]`` unique-row
+    buffer (``C_u`` = ``repro.condense.wire.dedup_capacity``, 8-aligned
+    and ≥ 8 by construction) instead of the dense ``[E, C]`` layout —
+    the same aligned partition applies, just along the axis the bytes
+    actually travel on. Token-axis return hops (migrate-mode combine)
+    may pass an unaligned total; fall back to a single chunk rather
+    than force alignment there.
+    """
+    if unique_capacity < ALIGN or unique_capacity % ALIGN != 0:
+        return ChunkPlan(unique_capacity, (unique_capacity,))
+    return plan_chunks(unique_capacity, n_chunks)

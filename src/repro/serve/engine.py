@@ -352,7 +352,7 @@ def decode_step(params, cfg: ModelConfig, luffy: LuffyConfig,
                                           g["ck"], g["cv"])
             kind = cfg.ffn_kind(j)
             if kind == "moe":
-                y, _, _, _, _, _ = _moe_apply_dist(
+                y, _, _, _, _, _, _ = _moe_apply_dist(
                     p["moe"], x, dummy_sb, None, jnp.float32(1.0),
                     cfg, luffy, dist, "decode", cap, plan_template=tmpl)
                 x = y
@@ -470,7 +470,7 @@ def prefill(params, cfg: ModelConfig, luffy: LuffyConfig, dist: DistContext,
                     from repro.plan.cache import prefill_plan_key
                     tmpl = plan_cache.get(
                         prefill_plan_key(cfg, nl, dist, B, S, cap))
-                y, _, _, _, _, _ = _moe_apply_dist(
+                y, _, _, _, _, _, _ = _moe_apply_dist(
                     p["moe"], x, sb, None, jnp.float32(1.0), cfg, nl,
                     dist, "vanilla", cap, plan_template=tmpl)
                 x = y

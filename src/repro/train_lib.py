@@ -26,10 +26,19 @@ class LuffyState(NamedTuple):
     l_ini: jnp.ndarray     # loss at iteration 1 (Eq. 2)
     l_prev: jnp.ndarray    # loss at t-1
     step: jnp.ndarray
+    # Cross-step wire error-feedback buffer (DESIGN.md §15): previous
+    # step's per-layer payload quantization residuals, shape
+    # tf.wire_ef_shape(cfg, B, S). None unless
+    # LuffyConfig.wire_error_feedback is on under a lossy wire_dtype.
+    wire_ef: Optional[jnp.ndarray] = None
 
 
-def init_luffy_state() -> LuffyState:
-    return LuffyState(jnp.float32(-1.0), jnp.float32(-1.0), jnp.int32(0))
+def init_luffy_state(wire_ef_shape: Optional[Tuple[int, ...]] = None
+                     ) -> LuffyState:
+    ef = (jnp.zeros(wire_ef_shape, jnp.float32)
+          if wire_ef_shape is not None else None)
+    return LuffyState(jnp.float32(-1.0), jnp.float32(-1.0), jnp.int32(0),
+                      ef)
 
 
 def tokens_per_device(cfg: ModelConfig, shape: ShapeConfig,
@@ -58,7 +67,8 @@ def loss_and_metrics(params, batch, lstate: LuffyState, cfg, luffy, dist,
                         jnp.float32(0.999))
     else:
         thr = jnp.float32(luffy.static_threshold)
-    return tf.forward_train(params, cfg, luffy, dist, batch, thr, capacity)
+    return tf.forward_train(params, cfg, luffy, dist, batch, thr, capacity,
+                            wire_ef=lstate.wire_ef)
 
 
 def make_train_step(cfg: ModelConfig, luffy: LuffyConfig,
@@ -86,12 +96,14 @@ def make_train_step(cfg: ModelConfig, luffy: LuffyConfig,
         params, opt_state, ometrics = optim.update(params, grads, opt_state,
                                                    ocfg)
         metrics = dict(metrics)
+        ef_next = metrics.pop("_wire_ef", None)
         metrics.update(ometrics)
         metrics["total_loss"] = loss
         new_l = metrics["loss"]
         lstate2 = LuffyState(
             jnp.where(lstate.l_ini > 0, lstate.l_ini, new_l),
-            new_l, lstate.step + 1)
+            new_l, lstate.step + 1,
+            ef_next if ef_next is not None else lstate.wire_ef)
         return params, opt_state, lstate2, metrics
 
     return step

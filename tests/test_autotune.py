@@ -34,13 +34,16 @@ def test_grid_defaults_first_and_structural_constraints():
     assert len(grid) == len({json.dumps(g, sort_keys=True) for g in grid})
     for g in grid:
         assert set(g) == set(at.TUNABLE_KNOBS)
-        if g["hier_dedup"] == "on":      # dedup wire is sync-scope
-            assert g["comm_mode"] == "hier" and g["exec_mode"] == "sync"
+        if g["hier_dedup"] == "on":      # dedup wire is universal (§15):
+            assert g["comm_mode"] == "hier"   # needs hier comm only
         if g["comm_mode"] == "hier":
             assert HIER.hierarchical
         # planned chunk search <=> overlap objective (launcher coupling)
         assert (g["pipeline_chunks"] <= 0) == \
             (g["plan_objective"] == "overlap")
+    # the universal wire pairs with BOTH exec modes in the grid
+    assert any(g["hier_dedup"] == "on" and g["exec_mode"] == "pipeline"
+               for g in grid)
     flat_grid = at.candidate_grid(Topology.flat(8))
     assert all(g["comm_mode"] == "flat" for g in flat_grid)
     assert len(flat_grid) < len(grid)

@@ -437,6 +437,95 @@ def test_dedup_wire_roundtrip_8dev():
     assert "OK" in out
 
 
+def test_dedup_migrate_roundtrip_8dev():
+    """Migrate-frame bijection roundtrip (ISSUE 10): the dest-keyed
+    re-expansion map survives the wire exactly — the ``dgpos``/``prim``
+    planes reconstruct bit-identically to a dense map exchange — and
+    :func:`dedup_combine_migrate` lands every token's materialized row
+    (``y·gw + x·prim``) at its post-migration home within float
+    tolerance of a host-side dense reference. The migration permutation
+    is a bijection on global slots, so every destination receives
+    exactly T rows."""
+    out = _run("""
+        from repro.condense.wire import (dedup_combine_migrate,
+                                         dedup_dispatch)
+        from repro.core.gating import dispatch_positions
+
+        N, L = 2, 4
+        M = N * L
+        mesh = make_mesh((N, L), ("node", "local"))
+        topo = Topology(N, L)
+        comm = CommContext.build("hier", ("node", "local"), topo)
+        T, k, d, E_local, C = 48, 2, 16, 2, 24
+        E = E_local * M
+        r = np.random.default_rng(1)
+        xf = r.standard_normal((M, T, d)).astype(np.float32)
+        expert_idx = r.integers(0, E, (M, T, k)).astype(np.int32)
+        gate_w = r.random((M, T, k)).astype(np.float32)
+        SHIFT = 3        # cyclic device shift: a slot bijection
+
+        def inner(xf_l, e_l, g_l):
+            xf_l, e_l, g_l = xf_l[0], e_l[0], g_l[0]
+            keep = jnp.ones((T, k), bool)
+            pos = dispatch_positions(e_l, keep, E)
+            valid = keep & (pos < C)
+            my = comm.index()
+            dest_dev = (my + SHIFT) % M        # position-preserving
+            dest_gpos = dest_dev * T + jnp.arange(T, dtype=jnp.int32)
+            prim = jnp.broadcast_to(
+                (jnp.arange(k) == 0)[None, :], (T, k)) \
+                .astype(jnp.float32)
+            x_rows, gw_rows, rvalid, state = dedup_dispatch(
+                xf_l, e_l, g_l, valid, pos, comm=comm,
+                e_local=E_local, capacity=C,
+                dest_gpos=dest_gpos, prim=prim)
+            # fake expert: 3*x, gate-weighted + primary-copy residual
+            out_rows = (3.0 * x_rows * gw_rows[..., None]
+                        + x_rows * state["prim"][..., None])
+            y = dedup_combine_migrate(out_rows, state, comm=comm)
+            # dense map reference: the (dgpos+1, prim) planes through
+            # the ordinary dense exchange
+            pay = jnp.concatenate([
+                jnp.broadcast_to(
+                    dest_gpos.astype(jnp.float32)[:, None, None] + 1.0,
+                    (T, k, 1)),
+                prim[..., None]], -1).reshape(-1, 2)
+            v_f = valid.reshape(-1)
+            e_s = jnp.where(v_f, e_l.reshape(-1), 0)
+            p_s = jnp.where(v_f, pos.reshape(-1), 0)
+            buf = jnp.zeros((E, C, 2), jnp.float32).at[e_s, p_s].add(
+                pay * v_f[:, None], mode="drop")
+            buf = comm.all_to_all(buf)
+            rmeta = buf.reshape(M, E_local, C, 2).transpose(1, 0, 2, 3)
+            dg_want = jnp.round(rmeta[..., 0]).astype(jnp.int32) - 1
+            return tuple(jnp.asarray(a)[None] for a in (
+                y, state["dgpos"], dg_want, state["prim"],
+                rmeta[..., 1], valid))
+
+        fn = shard_map(inner, mesh=mesh,
+                       in_specs=(P(("node", "local")),) * 3,
+                       out_specs=(P(("node", "local")),) * 6)
+        y, dg, dg_want, pr, pr_want, valid = fn(
+            jnp.asarray(xf), jnp.asarray(expert_idx),
+            jnp.asarray(gate_w))
+        # exact map roundtrip: bit-identical to the dense exchange
+        np.testing.assert_array_equal(np.asarray(dg), np.asarray(dg_want))
+        np.testing.assert_array_equal(np.asarray(pr), np.asarray(pr_want))
+        # host-side dense migrate reference, permuted by the bijection
+        v = np.asarray(valid)                     # [M, T, k]
+        y_ref = np.zeros((M, T, d), np.float32)
+        for m in range(M):
+            contrib = (3.0 * xf[m][:, None, :] * gate_w[m][..., None]
+                       * v[m][..., None]).sum(1)
+            y_ref[(m + SHIFT) % M] = contrib + v[m][:, 0:1] * xf[m]
+        np.testing.assert_allclose(np.asarray(y), y_ref,
+                                   rtol=0, atol=1e-5)
+        assert np.abs(y_ref).sum() > 0
+        print("OK")
+    """)
+    assert "OK" in out
+
+
 def test_condense_golden_grid_8dev():
     """Acceptance (ISSUE 5): on the 8-device hier mesh, (a) the "lsh"
     backend trains to a finite loss with measured_pairs strictly below

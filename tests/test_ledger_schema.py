@@ -54,7 +54,8 @@ KNOB_KEYS = {"comm_mode", "hier_dedup", "exec_mode", "pipeline_chunks",
              "plan_objective", "similarity_backend", "lsh_bits",
              "wire_dtype"}
 WIRE_KEYS = {"dtype", "precision", "row_bytes", "row_bytes_f32",
-             "scale_block"}
+             "scale_block", "shipped_vanilla_bytes",
+             "shipped_migrate_bytes", "shipped_pipelined_bytes"}
 
 
 def _fake_mesh(shape_by_axis):
@@ -72,7 +73,7 @@ def _ledger(**kw):
 
 def test_ledger_schema_version_and_key_sets():
     led = _ledger()
-    assert led["schema_version"] == COMM_LEDGER_SCHEMA_VERSION == 5
+    assert led["schema_version"] == COMM_LEDGER_SCHEMA_VERSION == 6
     assert set(led) == TOP_KEYS
     assert set(led["topology"]) == TOPOLOGY_KEYS
     assert set(led["buckets"]) == {"0.0", "0.25", "0.5"}
@@ -85,6 +86,12 @@ def test_ledger_schema_version_and_key_sets():
     assert led["wire"]["dtype"] == "f32"
     assert led["wire"]["precision"] == 1.0
     assert led["wire"]["row_bytes"] == led["wire"]["row_bytes_f32"]
+    # v6: per-execution-mode shipped bytes — equal by construction
+    # (dispatch dedup is mode-independent; the keys exist to record
+    # that the wire's mode scope is closed, DESIGN.md §15)
+    w = led["wire"]
+    assert (w["shipped_vanilla_bytes"] == w["shipped_migrate_bytes"]
+            == w["shipped_pipelined_bytes"])
     assert set(led["plan_reuse"]) == PLAN_REUSE_KEYS
     assert set(led["condensation"]) == CONDENSATION_KEYS
     assert set(led["condensation"]["dedup_wire"]) == DEDUP_WIRE_KEYS
@@ -162,7 +169,7 @@ def test_ledger_flattens_into_metrics_record():
     from repro.obs.metrics import flatten
     led = _ledger()
     flat = flatten("comm_ledger", led)
-    assert flat["comm_ledger/schema_version"] == 5
+    assert flat["comm_ledger/schema_version"] == 6
     assert "comm_ledger/decode/modeled_speedup" in flat
     assert "comm_ledger/buckets/0.0/hier/inter_bytes" in flat
     assert "comm_ledger/plan_reuse/planning_ms_per_plan" in flat

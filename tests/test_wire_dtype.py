@@ -11,7 +11,12 @@ Pins the ISSUE-9 contracts:
 * the executed 8-device contracts: the bf16 wire is bit-identical to a
   reference quantize-then-exchange path, the golden grid stays within
   tolerance of the f32 wire, and the executed ``inter_bytes_shipped``
-  equals ``flat / (dedup × precision)`` exactly.
+  equals ``flat / (dedup × precision)`` exactly — since ISSUE 10 in
+  EVERY execution mode (vanilla, migrate, pipelined: the dedup wire is
+  universal, DESIGN.md §15);
+* wire error feedback (``LuffyConfig.wire_error_feedback``): residual
+  shape/zero/nonzero contracts and the carried-residual step's loss
+  tolerance.
 """
 import os
 import struct
@@ -335,12 +340,14 @@ def test_wire_dtype_dedup_bit_identity_8dev():
 
 
 def test_wire_dtype_golden_grid_8dev():
-    """Acceptance (ISSUE 9): on the 8-device hier mesh, the bf16 wire
-    trains within tolerance of f32 across {vanilla, migrate} × {flat,
-    hier} × {dedup on/off}, gradients stay finite, and with the dedup
-    wire on, the executed inter_bytes_shipped equals the modeled
-    flat / (dedup × precision) exactly. fp8 (when available) is looser:
-    finite loss within the documented wide tolerance."""
+    """Acceptance (ISSUE 9 + 10): on the 8-device hier mesh, the bf16
+    wire trains within tolerance of f32 across {vanilla, migrate} ×
+    {flat, hier} × {dedup on/off} — now ALSO the pipelined exec mode —
+    gradients stay finite, and with the dedup wire on, the executed
+    ``inter_bytes_shipped`` equals the modeled flat / (dedup ×
+    precision) exactly IN EVERY MODE (the wire is universal, DESIGN.md
+    §15: dedup never ships zero when on). fp8 (when available) is
+    looser: finite loss within the documented wide tolerance."""
     out = _run("""
         cfg = reduced(get_config("moe-gpt2"), num_layers=3, d_model=128)
         cfg = dataclasses.replace(cfg, compute_dtype="float32")
@@ -363,38 +370,46 @@ def test_wire_dtype_golden_grid_8dev():
             return float(l), {k: float(v) for k, v in m.items()}
 
         d, ce = cfg.d_model, 4            # float32 compute
-        for migrate in (False, True):
-            for comm_mode, dedup in (("flat", "off"), ("hier", "off"),
-                                     ("hier", "on")):
-                base = LuffyConfig(
-                    enable_condensation=True, enable_migration=migrate,
-                    combine_slack=4.0, condense_group=32,
-                    comm_mode=comm_mode, hier_dedup=dedup)
-                l32, m32 = loss(base)
-                l16, m16 = loss(dataclasses.replace(base,
-                                                    wire_dtype="bf16"))
-                tag = (migrate, comm_mode, dedup)
-                assert np.isfinite(l16), tag
-                assert abs(l16 - l32) < 0.05, (tag, l32, l16)
-                # exact executed-bytes ledger contract: shipped ==
-                # dedup_bytes/precision == flat/(dedup x precision)
-                if m16["inter_bytes_shipped"] > 0:
-                    prec = wdt.wire_precision(d, "bf16", ce)
-                    rows = m16["inter_bytes_dedup"] / ((d + 2) * ce)
-                    want = rows * wdt.wire_row_bytes(d, "bf16", ce)
-                    # exact up to the f32 metric accumulator: the only
-                    # slack is re-deriving rows from an averaged f32
-                    assert np.isclose(m16["inter_bytes_shipped"], want,
-                                      rtol=1e-6, atol=0.0), (
-                        tag, m16["inter_bytes_shipped"], want)
-                    assert abs(m16["inter_bytes_shipped"]
-                               - m16["inter_bytes_dedup"] / prec) < 0.5
-                    assert m16["inter_bytes_shipped"] < \
-                        m16["inter_bytes_flat"]
-                else:
-                    # the dedup wire is vanilla-sync scope: migrate-mode
-                    # exchanges never ship it (hier_dedup inert there)
-                    assert dedup == "off" or migrate, tag
+        combos = [(mig, cm, dd, "sync", 1)
+                  for mig in (False, True)
+                  for cm, dd in (("flat", "off"), ("hier", "off"),
+                                 ("hier", "on"))]
+        # ISSUE 10: the chunked dedup wire under the pipelined exchange
+        combos += [(False, "hier", "on", "pipeline", 2),
+                   (True, "hier", "on", "pipeline", 2)]
+        for migrate, comm_mode, dedup, em, nc in combos:
+            base = LuffyConfig(
+                enable_condensation=True, enable_migration=migrate,
+                combine_slack=4.0, condense_group=32,
+                comm_mode=comm_mode, hier_dedup=dedup,
+                exec_mode=em, pipeline_chunks=nc)
+            l32, m32 = loss(base)
+            l16, m16 = loss(dataclasses.replace(base,
+                                                wire_dtype="bf16"))
+            tag = (migrate, comm_mode, dedup, em)
+            assert np.isfinite(l16), tag
+            assert abs(l16 - l32) < 0.05, (tag, l32, l16)
+            # universal-wire contract: dedup on => bytes actually ship
+            # through the dedup wire, in every (mode, exec) combination
+            if dedup == "on":
+                assert m16["inter_bytes_shipped"] > 0, tag
+            # exact executed-bytes ledger contract: shipped ==
+            # dedup_bytes/precision == flat/(dedup x precision)
+            if m16["inter_bytes_shipped"] > 0:
+                prec = wdt.wire_precision(d, "bf16", ce)
+                rows = m16["inter_bytes_dedup"] / ((d + 2) * ce)
+                want = rows * wdt.wire_row_bytes(d, "bf16", ce)
+                # exact up to the f32 metric accumulator: the only
+                # slack is re-deriving rows from an averaged f32
+                assert np.isclose(m16["inter_bytes_shipped"], want,
+                                  rtol=1e-6, atol=0.0), (
+                    tag, m16["inter_bytes_shipped"], want)
+                assert abs(m16["inter_bytes_shipped"]
+                           - m16["inter_bytes_dedup"] / prec) < 0.5
+                assert m16["inter_bytes_shipped"] < \
+                    m16["inter_bytes_flat"]
+            else:
+                assert dedup == "off", tag
 
         # gradients flow through the quantized wire
         ded16 = LuffyConfig(enable_condensation=True,
@@ -428,6 +443,63 @@ def test_wire_dtype_golden_grid_8dev():
             assert np.isclose(m8["inter_bytes_shipped"], want,
                               rtol=1e-6, atol=0.0), (
                 m8["inter_bytes_shipped"], want)
+        print("OK")
+    """)
+    assert "OK" in out
+
+
+def test_wire_error_feedback_8dev():
+    """Satellite (ISSUE 10): ``LuffyConfig.wire_error_feedback`` — the
+    per-token wire quantization residual ``x − deq(quant(x))`` comes
+    back per (layer, slot, position) under ``metrics["_wire_ef"]``, is
+    identically zero under the exact f32 wire, nonzero under a lossy
+    one, and a step fed the carried residual stays within the golden-
+    grid loss tolerance of the f32 baseline (vanilla AND migrate)."""
+    out = _run("""
+        from repro.models import transformer as tfm
+        cfg = reduced(get_config("moe-gpt2"), num_layers=3, d_model=128)
+        cfg = dataclasses.replace(cfg, compute_dtype="float32")
+        model = build_model(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        B, S = 16, 64
+        shape = ShapeConfig("t", S, B, "train")
+        data = SyntheticLM(cfg, shape)
+        b = {k: jnp.asarray(v) for k, v in data.batch(0).items()}
+        cap = capacity_for(cfg.moe, 64, cfg.moe.num_experts, slack=8.0)
+        mesh = make_mesh((2, 2, 2), ("data", "node", "local"))
+        dist = DistContext(mesh, batch_axes=("data", "node", "local"),
+                           seq_axis=None, fsdp_axes=("data",),
+                           model_axis=("node", "local"),
+                           topology=Topology(2, 2))
+
+        def loss(luffy, ef):
+            l, m = jax.jit(lambda p, bb, e: model.train_loss(
+                p, bb, jnp.float32(0.4), luffy=luffy, dist=dist,
+                capacity=cap, wire_ef=e))(params, b, ef)
+            return float(l), m
+
+        efs = tfm.wire_ef_shape(cfg, B, S)
+        ef0 = jnp.zeros(efs, jnp.float32)
+        for migrate in (False, True):
+            base = LuffyConfig(enable_condensation=True,
+                               enable_migration=migrate,
+                               combine_slack=4.0, condense_group=32,
+                               comm_mode="hier", hier_dedup="on",
+                               wire_error_feedback=True)
+            l32, m32 = loss(base, ef0)
+            # exact f32 wire: the residual is identically zero
+            z = np.asarray(m32["_wire_ef"])
+            assert z.shape == efs and not z.any(), (migrate, z.shape)
+            lq = dataclasses.replace(base, wire_dtype="bf16")
+            l1, m1 = loss(lq, ef0)
+            ef1 = m1["_wire_ef"]
+            e1 = np.asarray(ef1)
+            assert e1.shape == efs, (migrate, e1.shape)
+            assert np.isfinite(e1).all() and np.abs(e1).max() > 0, migrate
+            # step 2 eats the carried residual: still within tolerance
+            l2, m2 = loss(lq, ef1)
+            assert np.isfinite(l2), (migrate, l2)
+            assert abs(l2 - l32) < 0.05, (migrate, l32, l2)
         print("OK")
     """)
     assert "OK" in out
